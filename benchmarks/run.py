@@ -1,0 +1,74 @@
+"""Benchmark harness: one function per paper table (``name,value,derived`` CSV).
+
+    PYTHONPATH=src python -m benchmarks.run [--only table2_main] [--quick]
+
+Roofline rows are read from ``results/roofline_single.jsonl`` if the dry-run
+sweep has been run (``python -m repro.launch.roofline --out ...``); the
+simulator tables always run live.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+import time
+
+
+def roofline_table(path="results/roofline_single.jsonl"):
+    """§Roofline terms per (arch x shape), from the compiled dry-run."""
+    if not os.path.exists(path):
+        print(f"roofline/skipped,no {path} (run repro.launch.roofline first),")
+        return
+    seen = {}
+    with open(path) as f:
+        for line in f:
+            rec = json.loads(line)
+            seen[(rec["arch"], rec["shape"], rec.get("label", "baseline"))] = rec
+    for (arch, shape, label), rec in sorted(seen.items()):
+        if rec["status"] != "ok":
+            print(f"roofline/{arch}/{shape}/{label},{rec['status']},{rec.get('reason','')[:60]}")
+            continue
+        print(
+            f"roofline/{arch}/{shape}/{label},{rec['dominant']},"
+            f"tc={rec['t_compute_s']*1e3:.1f}ms;tm={rec['t_memory_s']*1e3:.1f}ms;"
+            f"tx={rec['t_collective_s']*1e3:.1f}ms;useful={rec['useful_flops_ratio']:.2f};"
+            f"fits={rec['fits_hbm']}"
+        )
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None)
+    ap.add_argument("--quick", action="store_true")
+    args = ap.parse_args()
+    if args.quick:
+        os.environ["BENCH_QUICK"] = "1"
+
+    from benchmarks import tables  # import after BENCH_QUICK is set
+
+    benches = [
+        ("table2_main", tables.table2_main),
+        ("table4_heterogeneity", tables.table4_heterogeneity),
+        ("fig2_principles", tables.fig2_principles),
+        ("fig5_aggregation", tables.fig5_aggregation),
+        ("fig8_convergence", tables.fig8_convergence),
+        ("table14_interval", tables.table14_interval),
+        ("table17_dgc", tables.table17_dgc),
+        ("overhead", tables.overhead),
+        ("roofline_table", roofline_table),
+    ]
+    print("name,value,derived")
+    for name, fn in benches:
+        if args.only and name != args.only:
+            continue
+        t0 = time.perf_counter()
+        try:
+            fn()
+        except Exception as e:  # keep the harness going; a bench failure is data
+            print(f"{name}/FAILED,{type(e).__name__},{str(e)[:120]}")
+        print(f"{name}/_elapsed_s,{time.perf_counter() - t0:.1f},")
+
+
+if __name__ == "__main__":
+    main()

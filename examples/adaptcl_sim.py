@@ -1,0 +1,49 @@
+"""End-to-end driver: the faithful AdaptCL reproduction (paper Alg. 1+2).
+
+Runs the full collaborative-learning simulation — 10 heterogeneous workers,
+synchronous rounds, dynamic pruned-rate learning, CIG-BNscalor pruning,
+By-worker aggregation — against the FedAVG-S baseline, and prints the
+Table II-style comparison.
+
+    PYTHONPATH=src python examples/adaptcl_sim.py [--rounds 30] [--sigma 2]
+"""
+import argparse
+
+import numpy as np
+
+from repro.core.simulation import SimConfig, run_simulation
+from repro.core.timing import HeterogeneityConfig
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--rounds", type=int, default=30)
+    ap.add_argument("--sigma", type=float, default=2.0)
+    ap.add_argument("--noniid", type=float, default=80.0)
+    args = ap.parse_args()
+
+    results = {}
+    for method in ("fedavg_s", "adaptcl"):
+        sim = SimConfig(
+            method=method,
+            rounds=args.rounds,
+            prune_interval=5,
+            noniid_s=args.noniid,
+            het=HeterogeneityConfig(sigma=args.sigma),
+        )
+        r = run_simulation(sim)
+        results[method] = r
+        print(f"[{method:9s}] best_acc={r.best_acc:.3f} time={r.total_time:.0f}s "
+              f"param_red={r.param_reduction:.1%}")
+        if method == "adaptcl":
+            print(f"            retentions={[round(g, 2) for g in r.retentions]}")
+            hs = [f"{h:.2f}" for _, h in r.het_traj[:: max(1, args.rounds // 8)]]
+            print(f"            heterogeneity trajectory: {' -> '.join(hs)}")
+
+    fed, ada = results["fedavg_s"], results["adaptcl"]
+    print(f"\nAdaptCL speedup: {fed.total_time / ada.total_time:.2f}x  "
+          f"(paper at sigma=2: 1.78x)   dAcc={ada.best_acc - fed.best_acc:+.3f}")
+
+
+if __name__ == "__main__":
+    main()

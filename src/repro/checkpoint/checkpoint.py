@@ -1,0 +1,94 @@
+"""Checkpointing: pytree <-> .npz with global-index + config metadata.
+
+AdaptCL checkpoints carry the worker's global index I_w (unit ids per layer)
+so a restored sub-model can be re-embedded into base coordinates; the server
+checkpoint carries the CIG importance order so pruning stays Constant across
+restarts (the paper's principle would silently break if the order were
+recomputed after a restart — this is load-bearing, and tested).
+"""
+from __future__ import annotations
+
+import json
+import os
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import numpy as np
+
+__all__ = ["save_checkpoint", "load_checkpoint"]
+
+_SEP = "::"
+
+
+def _flatten(tree, prefix="") -> Dict[str, np.ndarray]:
+    out = {}
+    if isinstance(tree, dict):
+        for k, v in tree.items():
+            out.update(_flatten(v, f"{prefix}{k}{_SEP}"))
+    elif isinstance(tree, (list, tuple)):
+        for i, v in enumerate(tree):
+            out.update(_flatten(v, f"{prefix}#{i}{_SEP}"))
+    else:
+        out[prefix[: -len(_SEP)]] = np.asarray(tree)
+    return out
+
+
+def _unflatten(flat: Dict[str, np.ndarray]):
+    root: Dict[str, Any] = {}
+    for key, val in flat.items():
+        parts = key.split(_SEP)
+        node = root
+        for p in parts[:-1]:
+            node = node.setdefault(p, {})
+        node[parts[-1]] = val
+
+    def fix(node):
+        if not isinstance(node, dict):
+            return node
+        if node and all(k.startswith("#") for k in node):
+            return [fix(node[f"#{i}"]) for i in range(len(node))]
+        return {k: fix(v) for k, v in node.items()}
+
+    return fix(root)
+
+
+def save_checkpoint(
+    path: str,
+    params,
+    *,
+    step: int = 0,
+    global_index: Optional[Dict[str, np.ndarray]] = None,
+    importance_order: Optional[Dict[str, np.ndarray]] = None,
+    meta: Optional[Dict[str, Any]] = None,
+) -> None:
+    os.makedirs(os.path.dirname(os.path.abspath(path)), exist_ok=True)
+    flat = _flatten(jax.tree.map(np.asarray, params))
+    payload = {f"param{_SEP}{k}": v for k, v in flat.items()}
+    if global_index:
+        payload.update({f"gidx{_SEP}{k}": np.asarray(v) for k, v in global_index.items()})
+    if importance_order:
+        payload.update({f"order{_SEP}{k}": np.asarray(v) for k, v in importance_order.items()})
+    payload["__meta__"] = np.frombuffer(
+        json.dumps({"step": step, **(meta or {})}).encode(), dtype=np.uint8
+    )
+    np.savez(path, **payload)
+
+
+def load_checkpoint(path: str) -> Tuple[Any, Dict[str, Any]]:
+    """Returns (params, extras) where extras has step/global_index/order/meta."""
+    if not path.endswith(".npz"):
+        path = path + ".npz"
+    z = np.load(path, allow_pickle=False)
+    flat_params, gidx, order = {}, {}, {}
+    meta: Dict[str, Any] = {}
+    for key in z.files:
+        if key == "__meta__":
+            meta = json.loads(z[key].tobytes().decode())
+        elif key.startswith(f"param{_SEP}"):
+            flat_params[key[len(f"param{_SEP}") :]] = z[key]
+        elif key.startswith(f"gidx{_SEP}"):
+            gidx[key[len(f"gidx{_SEP}") :]] = z[key]
+        elif key.startswith(f"order{_SEP}"):
+            order[key[len(f"order{_SEP}") :]] = z[key]
+    extras = {"step": meta.pop("step", 0), "global_index": gidx, "importance_order": order, "meta": meta}
+    return _unflatten(flat_params), extras

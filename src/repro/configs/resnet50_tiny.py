@@ -1,0 +1,5 @@
+"""ResNet50 on Tiny-ImageNet-class data — the paper's second model (§IV-A).
+Pruning protocol per Appendix B: stem conv, block-last convs and shortcuts
+are never pruned."""
+from repro.models.cnn import RESNET50_TINY as CFG  # noqa: F401
+from repro.models.cnn import RESNET20_SMALL as SMOKE_CFG

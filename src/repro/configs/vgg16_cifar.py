@@ -1,0 +1,5 @@
+"""VGG16 on CIFAR-class data — the paper's own primary model (§IV-A, [21]'s
+variation). Used by the faithful FL reproduction; prunable units are conv
+filters, importance = true BN scaling factors (CIG-BNscalor)."""
+from repro.models.cnn import VGG16_CIFAR as CFG  # noqa: F401
+from repro.models.cnn import VGG11_SMALL as SMOKE_CFG  # reduced same-family

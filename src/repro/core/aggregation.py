@@ -1,0 +1,130 @@
+"""Model aggregation: By-worker vs By-unit (AdaptCL §III-B, Appendix A Fig. 6).
+
+Workers submit *reconfigured* (physically smaller) parameter arrays together
+with their global index I_w.  The server embeds each submission back into
+base-model coordinates (pruned positions = 0) and aggregates:
+
+  * **By-worker** (AdaptCL's choice): coefficient 1/W per worker — a pruned
+    unit contributes an explicit zero.  Per the lottery-ticket argument [37],
+    freezing small weights to zero speeds their optimization to completion.
+  * **By-unit**: per-coordinate coefficient 1/w' where w' = number of workers
+    that retain the coordinate.  Shown in Fig. 5 to stall accuracy.
+
+Parameters are flat ``{path: array}`` dicts in base coordinates; ``unit_map``
+says which prunable unit layer governs which axis of which param:
+``unit_map[path] = [(layer_name, axis), ...]`` (a 2-D weight can be governed
+on both axes by different unit layers).
+"""
+from __future__ import annotations
+
+from typing import Dict, List, Mapping, Sequence, Tuple
+
+import numpy as np
+
+from .masks import GlobalIndex, embed_units
+
+__all__ = [
+    "UnitMap",
+    "embed_params",
+    "coordinate_mask",
+    "extract_subparams",
+    "aggregate_by_worker",
+    "aggregate_by_unit",
+]
+
+UnitMap = Mapping[str, Sequence[Tuple[str, int]]]
+Params = Dict[str, np.ndarray]
+
+
+def _full_dims(base_shapes: Mapping[str, tuple], path: str, axis: int) -> int:
+    return base_shapes[path][axis]
+
+
+def extract_subparams(
+    global_params: Params, index: GlobalIndex, unit_map: UnitMap
+) -> Params:
+    """theta_g ⊙ I_w (Alg. 1 server line 9): slice the sub-model out of the
+    global model along every governed axis."""
+    out: Params = {}
+    for path, arr in global_params.items():
+        for lname, axis in unit_map.get(path, ()):  # successive axis slices
+            arr = np.take(arr, index[lname], axis=axis)
+        out[path] = arr
+    return out
+
+
+def embed_params(
+    sub_params: Params,
+    index: GlobalIndex,
+    unit_map: UnitMap,
+    base_shapes: Mapping[str, tuple],
+) -> Params:
+    """Zero-fill sub-model params into base coordinates."""
+    out: Params = {}
+    for path, arr in sub_params.items():
+        for lname, axis in unit_map.get(path, ()):
+            arr = embed_units(arr, np.asarray(index[lname]), axis, base_shapes[path][axis])
+        if arr.shape != tuple(base_shapes[path]):
+            raise ValueError(
+                f"{path}: embedded {arr.shape} != base {base_shapes[path]}"
+            )
+        out[path] = arr
+    return out
+
+
+def coordinate_mask(
+    path: str,
+    index: GlobalIndex,
+    unit_map: UnitMap,
+    base_shapes: Mapping[str, tuple],
+) -> np.ndarray:
+    """1.0 where worker retains the coordinate, else 0.0 (broadcastable)."""
+    shape = base_shapes[path]
+    mask = np.ones(shape, dtype=np.float64)
+    for lname, axis in unit_map.get(path, ()):
+        axis_mask = np.zeros(shape[axis], dtype=np.float64)
+        axis_mask[np.asarray(index[lname], dtype=np.int64)] = 1.0
+        bshape = [1] * len(shape)
+        bshape[axis] = shape[axis]
+        mask = mask * axis_mask.reshape(bshape)
+    return mask
+
+
+def aggregate_by_worker(
+    submissions: Sequence[Tuple[Params, GlobalIndex]],
+    unit_map: UnitMap,
+    base_shapes: Mapping[str, tuple],
+    data_weights: Sequence[float] | None = None,
+) -> Params:
+    """theta_g = sum_w c_w * embed(theta_w); c_w = 1/W (or data-weighted)."""
+    W = len(submissions)
+    if data_weights is None:
+        weights = np.full(W, 1.0 / W)
+    else:
+        weights = np.asarray(data_weights, dtype=np.float64)
+        weights = weights / weights.sum()
+    out: Params = {}
+    for w, (sub, idx) in enumerate(submissions):
+        emb = embed_params(sub, idx, unit_map, base_shapes)
+        for path, arr in emb.items():
+            acc = out.get(path)
+            contrib = weights[w] * arr.astype(np.float64)
+            out[path] = contrib if acc is None else acc + contrib
+    return {k: v for k, v in out.items()}
+
+
+def aggregate_by_unit(
+    submissions: Sequence[Tuple[Params, GlobalIndex]],
+    unit_map: UnitMap,
+    base_shapes: Mapping[str, tuple],
+) -> Params:
+    """Per-coordinate 1/w' averaging over the holders of each coordinate."""
+    num: Params = {}
+    den: Params = {}
+    for sub, idx in submissions:
+        emb = embed_params(sub, idx, unit_map, base_shapes)
+        for path, arr in emb.items():
+            m = coordinate_mask(path, idx, unit_map, base_shapes)
+            num[path] = num.get(path, 0.0) + arr.astype(np.float64)
+            den[path] = den.get(path, 0.0) + m
+    return {p: num[p] / np.maximum(den[p], 1.0) for p in num}

@@ -1,0 +1,174 @@
+"""Unit-importance criteria for distributed pruning (AdaptCL §III-D, Fig. 2).
+
+An importance method returns a score per prunable unit (higher = keep).  The
+mask machinery (`core.masks`) cuts the lowest-scored *retained* units to meet
+a per-worker pruned-rate budget.
+
+The paper's finding (distributed-pruning principles): the retained sets must
+be **Identical** across workers and **Constant** over rounds so that
+sub-models nest.  Its proposed method is **CIG-BNscalor** — a single global
+importance ranking frozen at the first pruning, taken from BN scaling factors
+of the aggregated global model.  For the RMSNorm transformer families in the
+assigned pool we use the per-unit norm-scale magnitude (mean |scale| over the
+unit's channels) as the data-independent analogue (documented in DESIGN.md §5);
+where no scale exists we fall back to the unit's weight L2 norm computed on
+the *global* model — still Constant/Identical/Global.
+
+Ablation + baseline criteria reproduce Fig. 2:
+  * index          — HeteroFL-style prefix retention (prune highest index first)
+  * no_adjacent    — one shared random order, constant
+  * no_identical   — per-worker random rotation, constant  (breaks Identical)
+  * no_constant    — shared rotation re-drawn each round    (breaks Constant)
+  * l1 / taylor / fpgm / hrank — data/sub-model-dependent criteria (break both)
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Dict, Mapping, Optional, Sequence
+
+import numpy as np
+
+__all__ = [
+    "ImportanceContext",
+    "ImportanceMethod",
+    "cig_scores_from_scales",
+    "cig_scores_from_weight_norms",
+    "METHODS",
+]
+
+Scores = Dict[str, np.ndarray]
+
+
+@dataclasses.dataclass
+class ImportanceContext:
+    """Everything a criterion may consult.
+
+    unit_counts:  layer -> number of units in the *base* model.
+    scales:       layer -> per-unit scale magnitudes from the aggregated
+                  global model (BN gamma for CNNs, norm-scale proxy for
+                  transformers). Data-independent.
+    weight_norms: layer -> per-unit L2 norm of the unit's weight group in the
+                  *local sub-model* (data/sub-model dependent once models
+                  diverge).
+    grads:        layer -> per-unit |grad . w| Taylor term (local, optional).
+    activations:  layer -> per-unit activation statistic (local, optional;
+                  HRank proxy).
+    worker:       worker id (for Identical-breaking variants).
+    round:        pruning round (for Constant-breaking variants).
+    seed:         base seed shared by the cohort.
+    """
+
+    unit_counts: Mapping[str, int]
+    scales: Optional[Scores] = None
+    weight_norms: Optional[Scores] = None
+    grads: Optional[Scores] = None
+    activations: Optional[Scores] = None
+    worker: int = 0
+    round: int = 0
+    seed: int = 0
+
+
+ImportanceMethod = Callable[[ImportanceContext], Scores]
+
+
+def cig_scores_from_scales(ctx: ImportanceContext) -> Scores:
+    """CIG-BNscalor: frozen global scale-magnitude ranking (paper §III-D)."""
+    if ctx.scales is None:
+        return cig_scores_from_weight_norms(ctx)
+    return {k: np.asarray(v, dtype=np.float64) for k, v in ctx.scales.items()}
+
+
+def cig_scores_from_weight_norms(ctx: ImportanceContext) -> Scores:
+    if ctx.weight_norms is None:
+        raise ValueError("CIG fallback needs weight_norms")
+    return {k: np.asarray(v, dtype=np.float64) for k, v in ctx.weight_norms.items()}
+
+
+def _index(ctx: ImportanceContext) -> Scores:
+    # Retain the prefix: higher index = pruned first (HeteroFL [50]).
+    return {k: -np.arange(n, dtype=np.float64) for k, n in ctx.unit_counts.items()}
+
+
+def _shared_random(ctx: ImportanceContext) -> Scores:
+    # "No adjacent": a single random order shared by all workers, all rounds.
+    rng = np.random.default_rng(ctx.seed)  # NOT worker/round dependent
+    return {
+        k: rng.permutation(n).astype(np.float64)
+        for k, n in sorted(ctx.unit_counts.items())
+    }
+
+
+def _rotated_index(n: int, start: int) -> np.ndarray:
+    # score so that units are pruned in index order beginning at `start`
+    # (units just below `start` are the most important).
+    idx = np.arange(n)
+    return -(((idx - start) % n).astype(np.float64))
+
+
+def _no_identical(ctx: ImportanceContext) -> Scores:
+    # per-worker random start, constant across rounds.
+    rng = np.random.default_rng((ctx.seed, ctx.worker))
+    return {
+        k: _rotated_index(n, int(rng.integers(n)))
+        for k, n in sorted(ctx.unit_counts.items())
+    }
+
+
+def _no_constant(ctx: ImportanceContext) -> Scores:
+    # shared start re-drawn at each pruning round.
+    rng = np.random.default_rng((ctx.seed, ctx.round))
+    return {
+        k: _rotated_index(n, int(rng.integers(n)))
+        for k, n in sorted(ctx.unit_counts.items())
+    }
+
+
+def _l1(ctx: ImportanceContext) -> Scores:
+    if ctx.weight_norms is None:
+        raise ValueError("l1 needs weight_norms")
+    return {k: np.asarray(v, np.float64) for k, v in ctx.weight_norms.items()}
+
+
+def _taylor(ctx: ImportanceContext) -> Scores:
+    if ctx.grads is None:
+        raise ValueError("taylor needs grads")
+    return {k: np.asarray(v, np.float64) for k, v in ctx.grads.items()}
+
+
+def _fpgm(ctx: ImportanceContext) -> Scores:
+    """Geometric-median distance proxy: |norm - median(norm)| per layer.
+
+    (True FPGM uses filter-vector distances; with per-unit summaries the
+    distance-from-median of the norm is the standard cheap surrogate and
+    reproduces the property that matters here: data/sub-model dependence.)
+    """
+    if ctx.weight_norms is None:
+        raise ValueError("fpgm needs weight_norms")
+    out = {}
+    for k, v in ctx.weight_norms.items():
+        v = np.asarray(v, np.float64)
+        out[k] = np.abs(v - np.median(v))
+    return out
+
+
+def _hrank(ctx: ImportanceContext) -> Scores:
+    if ctx.activations is None:
+        raise ValueError("hrank needs activations")
+    return {k: np.asarray(v, np.float64) for k, v in ctx.activations.items()}
+
+
+METHODS: Dict[str, ImportanceMethod] = {
+    "cig_bnscalor": cig_scores_from_scales,
+    "index": _index,
+    "no_adjacent": _shared_random,
+    "no_identical": _no_identical,
+    "no_constant": _no_constant,
+    "l1": _l1,
+    "taylor": _taylor,
+    "fpgm": _fpgm,
+    "hrank": _hrank,
+}
+
+# Criteria that satisfy the paper's Identical+Constant principles. Only these
+# guarantee nested sub-models (masks.assert_nested holds for any two workers).
+CIG_METHODS = frozenset({"cig_bnscalor", "index", "no_adjacent"})

@@ -1,0 +1,194 @@
+"""Global-index (I_w) machinery: sub-model masks, budgeted pruning, nesting.
+
+Terminology follows the paper (Tab. I): worker w's sub-model is identified by
+its *global index* ``I_w`` — for each prunable layer, the sorted ids of the
+retained units w.r.t. the global base model.  Pruning removes units; the model
+is then *reconfigured* (physically smaller arrays), and the global index is
+what lets the server embed sub-model parameters back into base-model
+coordinates for aggregation.
+
+Units are "interior" structural groups whose parameter cost is independent of
+other layers' choices: attention KV-head groups, FFN hidden units, experts,
+recurrent channels, conv filters.  Each layer advertises a per-unit parameter
+cost so pruned rates are enforced in *parameter space* (the paper's budget is
+a fraction of model size).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Mapping, Sequence
+
+import numpy as np
+
+__all__ = [
+    "UnitLayer",
+    "UnitSpace",
+    "full_index",
+    "retention",
+    "payload_bytes",
+    "prune_to_budget",
+    "similarity",
+    "is_nested",
+    "take_units",
+    "embed_units",
+]
+
+GlobalIndex = Dict[str, np.ndarray]
+
+
+@dataclasses.dataclass(frozen=True)
+class UnitLayer:
+    """One prunable unit dimension of the base model."""
+
+    name: str
+    num_units: int
+    unit_param_cost: int  # parameters attributable to ONE unit of this layer
+    min_units: int = 1    # never prune a layer empty
+
+
+@dataclasses.dataclass(frozen=True)
+class UnitSpace:
+    """Inventory of prunable units + the fixed (never-pruned) parameter mass."""
+
+    layers: Sequence[UnitLayer]
+    fixed_params: int  # embeddings, norms, protected layers ...
+
+    def layer(self, name: str) -> UnitLayer:
+        for l in self.layers:
+            if l.name == name:
+                return l
+        raise KeyError(name)
+
+    @property
+    def unit_counts(self) -> Dict[str, int]:
+        return {l.name: l.num_units for l in self.layers}
+
+    @property
+    def total_params(self) -> int:
+        return self.fixed_params + sum(
+            l.num_units * l.unit_param_cost for l in self.layers
+        )
+
+
+def full_index(space: UnitSpace) -> GlobalIndex:
+    return {l.name: np.arange(l.num_units) for l in space.layers}
+
+
+def _retained_params(index: GlobalIndex, space: UnitSpace) -> int:
+    return space.fixed_params + sum(
+        len(index[l.name]) * l.unit_param_cost for l in space.layers
+    )
+
+
+def retention(index: GlobalIndex, space: UnitSpace) -> float:
+    """gamma: retained parameter fraction of the base model."""
+    return _retained_params(index, space) / space.total_params
+
+
+def payload_bytes(index: GlobalIndex, space: UnitSpace, bytes_per_param: int = 4) -> float:
+    """Communication payload of the sub-model (params + the index itself).
+
+    The paper notes AdaptCL only adds the global index + pruned rate to the
+    per-round message; we count it (4 bytes/unit id) to back the "little
+    communication overhead" claim.
+    """
+    index_bytes = sum(len(v) * 4 for v in index.values()) + 8
+    return _retained_params(index, space) * bytes_per_param + index_bytes
+
+
+def prune_to_budget(
+    index: GlobalIndex,
+    scores: Mapping[str, np.ndarray],
+    pruned_rate: float,
+    space: UnitSpace,
+) -> GlobalIndex:
+    """Cut the lowest-scored retained units until ``pruned_rate`` of the
+    *current* model's parameters is removed (global threshold across layers,
+    as in CIG-BNscalor: "prune units below a global importance threshold
+    across all layers, defined from the pruning budget").
+
+    Scores index into base-model unit ids; protected layers simply do not
+    appear in ``space.layers``.
+    """
+    if not (0.0 <= pruned_rate < 1.0):
+        raise ValueError(f"pruned_rate {pruned_rate} outside [0,1)")
+    if pruned_rate == 0.0:
+        return {k: v.copy() for k, v in index.items()}
+    current = _retained_params(index, space)
+    budget = pruned_rate * current
+    # Gather (score, layer, unit, cost) for every retained unit.
+    entries: List[tuple] = []
+    for l in space.layers:
+        sc = np.asarray(scores[l.name], dtype=np.float64)
+        if sc.shape[0] != l.num_units:
+            raise ValueError(
+                f"scores for {l.name} have {sc.shape[0]} entries, want {l.num_units}"
+            )
+        for u in index[l.name]:
+            entries.append((sc[u], l.name, int(u), l.unit_param_cost))
+    # Ascending score = prune first. Tie-break on (layer, unit) for
+    # determinism across workers (Identical principle).
+    entries.sort(key=lambda e: (e[0], e[1], e[2]))
+    removed: Dict[str, set] = {l.name: set() for l in space.layers}
+    removed_params = 0
+    n_retained = {l.name: len(index[l.name]) for l in space.layers}
+    min_units = {l.name: l.min_units for l in space.layers}
+    for score, lname, unit, cost in entries:
+        if removed_params >= budget:
+            break
+        if n_retained[lname] <= min_units[lname]:
+            continue
+        removed[lname].add(unit)
+        n_retained[lname] -= 1
+        removed_params += cost
+    out: GlobalIndex = {}
+    for l in space.layers:
+        keep = np.array(
+            [u for u in index[l.name] if int(u) not in removed[l.name]], dtype=np.int64
+        )
+        out[l.name] = keep
+    return out
+
+
+def similarity(i1: GlobalIndex, i2: GlobalIndex) -> float:
+    """Eq. 3: mean Jaccard similarity of retained units per layer."""
+    keys = sorted(set(i1) | set(i2))
+    vals = []
+    for k in keys:
+        a, b = set(map(int, i1.get(k, []))), set(map(int, i2.get(k, [])))
+        union = a | b
+        if not union:
+            continue
+        vals.append(len(a & b) / len(union))
+    return float(np.mean(vals)) if vals else 1.0
+
+
+def is_nested(small: GlobalIndex, big: GlobalIndex) -> bool:
+    """I_small ⊂ I_big (the Identical+Constant guarantee, §III-D)."""
+    for k, v in small.items():
+        if not set(map(int, v)) <= set(map(int, big.get(k, []))):
+            return False
+    return True
+
+
+# --- array helpers used by reconfigure + aggregation -----------------------
+
+def take_units(arr: np.ndarray, idx: np.ndarray, axis: int) -> np.ndarray:
+    """Slice retained units out of a base-coordinate array."""
+    return np.take(arr, idx, axis=axis)
+
+
+def embed_units(
+    small: np.ndarray, idx: np.ndarray, axis: int, full_dim: int
+) -> np.ndarray:
+    """Zero-fill a sub-model array back into base-model coordinates.
+
+    Pruned positions become exactly 0 — the By-worker aggregation semantics.
+    """
+    shape = list(small.shape)
+    shape[axis] = full_dim
+    out = np.zeros(shape, dtype=small.dtype)
+    indexer: List = [slice(None)] * small.ndim
+    indexer[axis] = idx
+    out[tuple(indexer)] = small
+    return out

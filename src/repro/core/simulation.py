@@ -1,0 +1,427 @@
+"""Multi-worker collaborative-learning simulator (AdaptCL §IV).
+
+Faithful-reproduction engine: W workers with heterogeneous bandwidths (Eq. 6/7
+channel model), a virtual clock, and six frameworks:
+
+  * ``adaptcl``    — Algorithm 1 (+ Algorithm 2 pruned-rate learning)
+  * ``fedavg``     — McMahan et al. BSP
+  * ``fedavg_s``   — + group-lasso sparse training (the paper's main baseline)
+  * ``fedasync_s`` — Xie et al. async with polynomial staleness weighting
+  * ``ssp_s``      — stale-synchronous parallel (threshold s)
+  * ``dcasgd_s``   — DC-ASGD-a (delay-compensated async gradients)
+
+All methods share the same bandwidth assignment, data partition, and model
+init, as in the paper.  Update times are simulated through the channel model
+(training-time sensitivity to pruning is configurable, Appendix E); virtual
+time is what produces the paper's Time columns.
+"""
+from __future__ import annotations
+
+import dataclasses
+import heapq
+import time as _time
+from typing import Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.data.synthetic import SyntheticImageTask, batch_iterator, partition_noniid
+from repro.models.cnn import (
+    CNNConfig,
+    build_unit_space,
+    cnn_apply,
+    cnn_flops,
+    extract_bn_scales,
+    init_cnn,
+    vgg_config,
+)
+
+from .aggregation import aggregate_by_unit, aggregate_by_worker, extract_subparams
+from .importance import CIG_METHODS, METHODS, ImportanceContext
+from .masks import full_index, is_nested, payload_bytes, retention, similarity
+from .pruned_rate import PrunedRateConfig, WorkerHistory, learn_pruned_rates
+from .timing import HeterogeneityConfig, heterogeneity_from_times, make_bandwidths
+from .worker import LocalTrainer, local_unit_stats
+
+__all__ = ["SimConfig", "SimResult", "run_simulation", "default_cnn"]
+
+
+def default_cnn() -> CNNConfig:
+    """Small VGG used by the CPU-budget simulations (same family as VGG16)."""
+    return vgg_config("vgg_sim", [32, "M", 64, "M", 64], num_classes=10, image_size=16)
+
+
+@dataclasses.dataclass
+class SimConfig:
+    method: str = "adaptcl"
+    rounds: int = 30
+    num_workers: int = 10
+    local_epochs: float = 1.0
+    batch_size: int = 32
+    lr: float = 0.05
+    lam: float = 1e-4                   # group-lasso coefficient (sparse train)
+    prune_interval: int = 5             # PI (paper: 10, T=150; scaled T=30)
+    beta: float = 1.0                   # pruning position within local epochs
+    importance: str = "cig_bnscalor"
+    aggregation: str = "by_worker"
+    rate_cfg: PrunedRateConfig = dataclasses.field(default_factory=PrunedRateConfig)
+    het: HeterogeneityConfig = dataclasses.field(default_factory=HeterogeneityConfig)
+    t_train_full: float = 1.0           # seconds per local round, full model
+    train_sens: float = 0.1             # Appendix E: GPU-like ~0, CPU-like ~1
+    time_jitter: float = 0.02
+    noniid_s: float = 0.0               # paper's s%: 0 (IID) or 80
+    ssp_threshold: int = 2
+    fedasync_a: float = 0.5
+    dcasgd_lambda: float = 2.0
+    dcasgd_m: float = 0.95
+    fixed_pruned_rates: Optional[List[List[float]]] = None  # Tab. IX mode
+    # AdaptCL+DGC (Appendix E / Tab. XVII): commit only the largest
+    # (1-sparsity) fraction of each weight delta; the rest accumulates
+    # locally until it crosses the threshold (momentum-factor-masking lite).
+    dgc_sparsity: float = 0.0
+    cnn: CNNConfig = dataclasses.field(default_factory=default_cnn)
+    task: Optional[SyntheticImageTask] = None
+    eval_every: int = 1
+    seed: int = 0
+
+
+@dataclasses.dataclass
+class SimResult:
+    method: str
+    acc_time: List[Tuple[float, float]]         # (virtual seconds, test acc)
+    final_acc: float
+    best_acc: float
+    best_acc_time: float
+    total_time: float
+    het_traj: List[Tuple[int, float]]            # (round, H of update times)
+    retentions: List[float]                      # final gamma per worker
+    param_reduction: float                       # avg over workers
+    flops_reduction: float
+    comm_bytes: float
+    server_overhead_s: float                     # Alg.2 + aggregation walltime
+    recompiles: int
+    similarity_traj: List[Tuple[int, float]]     # Eq. 3 between two workers
+    update_times: List[List[float]]              # per round, per worker
+
+
+def _accuracy(params, cfg, x, y, batch=256) -> float:
+    correct = 0
+    for i in range(0, len(x), batch):
+        logits = cnn_apply({k: jnp.asarray(v) for k, v in params.items()}, cfg, jnp.asarray(x[i : i + batch]))
+        correct += int((np.argmax(np.asarray(logits), -1) == y[i : i + batch]).sum())
+    return correct / len(x)
+
+
+class _Env:
+    """Shared experimental fixture (same across all methods, per seed)."""
+
+    def __init__(self, sim: SimConfig):
+        self.sim = sim
+        self.task = sim.task or SyntheticImageTask(
+            num_classes=sim.cnn.num_classes, image_size=sim.cnn.image_size,
+            train_size=1280, test_size=512, seed=sim.seed,
+        )
+        self.shards = partition_noniid(
+            self.task.y_train, sim.num_workers, sim.noniid_s, seed=sim.seed
+        )
+        key = jax.random.PRNGKey(sim.seed)
+        self.base_params = {k: np.asarray(v) for k, v in init_cnn(key, sim.cnn).items()}
+        self.base_shapes = {k: v.shape for k, v in self.base_params.items()}
+        self.space, self.unit_map = build_unit_space(sim.cnn, self.base_params)
+        self.full_bytes = payload_bytes(full_index(self.space), self.space)
+        self.full_flops = cnn_flops(self.base_params, sim.cnn)
+        self.bandwidths = make_bandwidths(sim.het, self.full_bytes, sim.t_train_full)
+        self.trainer = LocalTrainer(sim.cnn, lr=sim.lr)
+        self.rng = np.random.default_rng(sim.seed + 17)
+
+    def phi(self, worker: int, params, payload_factor: float = 1.0) -> float:
+        """Channel-model update time for this worker's current sub-model."""
+        sim = self.sim
+        bytes_w = payload_factor * sum(v.size * 4 for v in params.values())
+        flops_w = cnn_flops(params, sim.cnn)
+        rel = flops_w / self.full_flops
+        t_train = sim.t_train_full * ((1 - sim.train_sens) + sim.train_sens * rel)
+        t = 2.0 * bytes_w / self.bandwidths[worker] + t_train * sim.local_epochs
+        if sim.time_jitter > 0:
+            t *= float(np.exp(self.rng.normal(0, sim.time_jitter)))
+        return t
+
+    def shard_xy(self, w):
+        sh = self.shards[w]
+        return self.task.x_train[sh], self.task.y_train[sh]
+
+
+# ---------------------------------------------------------------------------
+# synchronous methods: fedavg / fedavg_s / adaptcl
+# ---------------------------------------------------------------------------
+
+def _dgc_compress(delta: Dict[str, np.ndarray], residual: Dict[str, np.ndarray],
+                  sparsity: float):
+    """Top-|.| delta sparsification with local residual accumulation ([11]).
+
+    Returns (committed delta, new residual, kept-fraction payload factor)."""
+    committed, new_res = {}, {}
+    kept = total = 0
+    for k, d in delta.items():
+        r = residual.get(k)
+        if r is not None and r.shape == d.shape:
+            d = d + r
+        # (a reconfiguration changed this tensor's shape -> residual dropped;
+        # DGC's accumulators are restarted after each pruning, like momentum)
+        flat = np.abs(d).ravel()
+        n_keep = max(1, int(round(flat.size * (1.0 - sparsity))))
+        if n_keep >= flat.size:
+            committed[k], new_res[k] = d, np.zeros_like(d)
+        else:
+            thr = np.partition(flat, flat.size - n_keep)[flat.size - n_keep]
+            mask = np.abs(d) >= thr
+            committed[k] = d * mask
+            new_res[k] = d * (1.0 - mask)
+        kept += n_keep
+        total += flat.size
+    # payload: kept values + their indices (~1.25x values, as in DGC)
+    return committed, new_res, 1.25 * kept / max(total, 1)
+
+
+def _run_sync(sim: SimConfig, env: _Env) -> SimResult:
+    W = sim.num_workers
+    sparse = sim.method in ("fedavg_s", "adaptcl")
+    adapt = sim.method == "adaptcl"
+    lam = sim.lam if sparse else 0.0
+    dgc_residuals: List[Dict[str, np.ndarray]] = [{} for _ in range(W)]
+
+    global_params = dict(env.base_params)
+    indices = [full_index(env.space) for _ in range(W)]
+    histories = [WorkerHistory() for _ in range(W)]
+    pending_rates = [0.0] * W
+    cig_scores = None              # frozen at first pruning (CIG principle)
+    interval_phis: List[List[float]] = [[] for _ in range(W)]
+    prune_round_count = 0
+
+    clock = 0.0
+    comm_bytes = 0.0
+    server_overhead = 0.0
+    acc_time, het_traj, sim_traj, upd_times = [], [], [], []
+    acc0 = _accuracy(global_params, sim.cnn, env.task.x_test, env.task.y_test)
+    acc_time.append((0.0, acc0))
+
+    for t in range(1, sim.rounds + 1):
+        submissions = []
+        phis = []
+        for w in range(W):
+            # server sends theta_g ⊙ I_w  (Alg. 1 line 9)
+            params_w = extract_subparams(global_params, indices[w], env.unit_map)
+            x, y = env.shard_xy(w)
+            rate = pending_rates[w] if adapt else 0.0
+            if adapt and rate > 0.0:
+                e1, e2 = sim.beta * sim.local_epochs, (1 - sim.beta) * sim.local_epochs
+                params_w, _ = env.trainer.train(params_w, env.unit_map, x, y, e1, sim.batch_size, env.rng, lam)
+                scores = _scores_for(sim, env, w, prune_round_count, params_w, indices[w], cig_scores)
+                params_w, indices[w] = env.trainer.prune_and_reconfigure(
+                    params_w, indices[w], scores, rate, env.space, env.unit_map
+                )
+                if e2 > 0:
+                    params_w, _ = env.trainer.train(params_w, env.unit_map, x, y, e2, sim.batch_size, env.rng, lam)
+            else:
+                params_w, _ = env.trainer.train(
+                    params_w, env.unit_map, x, y, sim.local_epochs, sim.batch_size, env.rng, lam
+                )
+            payload_factor = 1.0
+            if sim.dgc_sparsity > 0.0:
+                received = extract_subparams(global_params, indices[w], env.unit_map)
+                delta = {k: params_w[k] - received[k] for k in params_w}
+                committed, dgc_residuals[w], payload_factor = _dgc_compress(
+                    delta, dgc_residuals[w], sim.dgc_sparsity
+                )
+                params_w = {k: received[k] + committed[k] for k in params_w}
+            phi_w = env.phi(w, params_w, payload_factor)
+            phis.append(phi_w)
+            interval_phis[w].append(phi_w)
+            comm_bytes += 2.0 * payload_factor * sum(v.size * 4 for v in params_w.values())
+            submissions.append((params_w, indices[w]))
+        pending_rates = [0.0] * W
+
+        clock += max(phis)                      # BSP: slowest worker gates
+        upd_times.append(phis)
+        het_traj.append((t, heterogeneity_from_times(phis)))
+        sim_traj.append((t, similarity(indices[1], indices[3])))
+
+        t0 = _time.perf_counter()
+        if sim.aggregation == "by_unit":
+            global_params = aggregate_by_unit(submissions, env.unit_map, env.base_shapes)
+        else:
+            global_params = aggregate_by_worker(submissions, env.unit_map, env.base_shapes)
+        global_params = {k: v.astype(np.float32) for k, v in global_params.items()}
+
+        if adapt and t % sim.prune_interval == 0:
+            prune_round_count += 1
+            if cig_scores is None and sim.importance == "cig_bnscalor":
+                cig_scores = METHODS["cig_bnscalor"](ImportanceContext(
+                    unit_counts=env.space.unit_counts,
+                    scales=extract_bn_scales(global_params, sim.cnn),
+                ))
+            gammas_now = [retention(indices[w], env.space) for w in range(W)]
+            phis_now = [float(np.mean(interval_phis[w])) for w in range(W)]
+            for w in range(W):
+                histories[w].record(gammas_now[w], phis_now[w])
+            if sim.fixed_pruned_rates is not None:
+                k = prune_round_count - 1
+                rates = (
+                    sim.fixed_pruned_rates[k]
+                    if k < len(sim.fixed_pruned_rates)
+                    else [0.0] * W
+                )
+            else:
+                rates = learn_pruned_rates(histories, gammas_now, phis_now, sim.rate_cfg)
+            pending_rates = list(rates)
+            interval_phis = [[] for _ in range(W)]
+        server_overhead += _time.perf_counter() - t0
+
+        if t % sim.eval_every == 0:
+            acc_time.append((clock, _accuracy(global_params, sim.cnn, env.task.x_test, env.task.y_test)))
+
+    return _finalize(sim, env, acc_time, het_traj, sim_traj, upd_times,
+                     [retention(indices[w], env.space) for w in range(W)],
+                     [extract_subparams(global_params, indices[w], env.unit_map) for w in range(W)],
+                     comm_bytes, server_overhead, clock)
+
+
+def _scores_for(sim: SimConfig, env: _Env, worker, prune_round, params_w, index_w, cig_scores):
+    """Importance scores in base coordinates for this worker/round."""
+    name = sim.importance
+    if name == "cig_bnscalor":
+        if cig_scores is None:
+            raise RuntimeError("CIG order not yet frozen")
+        return cig_scores
+    ctx_kw = dict(unit_counts=env.space.unit_counts, worker=worker,
+                  round=prune_round, seed=sim.seed)
+    if name in ("l1", "taylor", "fpgm", "hrank"):
+        x, y = env.shard_xy(worker)
+        stats = local_unit_stats(env.trainer, params_w, index_w, env.space, env.unit_map, x, y)
+        ctx_kw.update(weight_norms=stats["weight_norms"], grads=stats["grads"],
+                      activations=stats["activations"])
+    return METHODS[name](ImportanceContext(**ctx_kw))
+
+
+# ---------------------------------------------------------------------------
+# asynchronous methods: fedasync_s / ssp_s / dcasgd_s
+# ---------------------------------------------------------------------------
+
+def _run_async(sim: SimConfig, env: _Env) -> SimResult:
+    W = sim.num_workers
+    lam = sim.lam
+    method = sim.method
+    global_params = dict(env.base_params)
+    version = 0
+    idx = full_index(env.space)
+
+    # per-worker: fetched params, fetched version, local round counter
+    fetched = [dict(global_params) for _ in range(W)]
+    fetched_ver = [0] * W
+    rounds_done = [0] * W
+    backup = [dict(global_params) for _ in range(W)]        # DC-ASGD w_bak
+    dc_m = {k: np.zeros_like(v) for k, v in global_params.items()}
+
+    total_commits = W * sim.rounds
+    commits = 0
+    clock = 0.0
+    comm_bytes = 0.0
+    acc_time = [(0.0, _accuracy(global_params, sim.cnn, env.task.x_test, env.task.y_test))]
+    heap: List[Tuple[float, int]] = []
+
+    def schedule(w, now):
+        phi = env.phi(w, fetched[w])
+        heapq.heappush(heap, (now + phi, w))
+
+    for w in range(W):
+        schedule(w, 0.0)
+
+    blocked: List[int] = []
+    while commits < total_commits and heap:
+        finish, w = heapq.heappop(heap)
+        clock = max(clock, finish)
+        x, y = env.shard_xy(w)
+        trained, _ = env.trainer.train(
+            fetched[w], env.unit_map, x, y, sim.local_epochs, sim.batch_size, env.rng, lam
+        )
+        staleness = version - fetched_ver[w]
+        if method == "fedasync_s":
+            a = sim.fedasync_a * (staleness + 1.0) ** -0.5
+            global_params = {
+                k: (1 - a) * global_params[k] + a * trained[k] for k in global_params
+            }
+        elif method == "ssp_s":
+            delta = {k: trained[k] - fetched[w][k] for k in trained}
+            global_params = {k: global_params[k] + delta[k] / W for k in global_params}
+        elif method == "dcasgd_s":
+            # committed "gradient" = accumulated local update / lr
+            g = {k: (fetched[w][k] - trained[k]) / sim.lr for k in trained}
+            for k in g:
+                dc_m[k] = sim.dcasgd_m * dc_m[k] + (1 - sim.dcasgd_m) * g[k] * g[k]
+                lam_t = sim.dcasgd_lambda / np.sqrt(np.mean(dc_m[k]) + 1e-12)
+                comp = g[k] + lam_t * g[k] * g[k] * (global_params[k] - backup[w][k])
+                global_params[k] = global_params[k] - sim.lr * comp
+            backup[w] = dict(global_params)
+        version += 1
+        commits += 1
+        rounds_done[w] += 1
+        comm_bytes += 2.0 * sum(v.size * 4 for v in trained.values())
+        # refetch + maybe block (SSP)
+        fetched[w] = dict(global_params)
+        fetched_ver[w] = version
+        if method == "ssp_s" and rounds_done[w] >= min(rounds_done) + sim.ssp_threshold:
+            blocked.append(w)
+        elif rounds_done[w] < sim.rounds:
+            schedule(w, clock)
+        if method == "ssp_s" and blocked:
+            still = []
+            for bw in blocked:
+                if rounds_done[bw] < min(rounds_done) + sim.ssp_threshold and rounds_done[bw] < sim.rounds:
+                    fetched[bw] = dict(global_params)
+                    fetched_ver[bw] = version
+                    schedule(bw, clock)
+                else:
+                    still.append(bw)
+            blocked = [b for b in still if rounds_done[b] < sim.rounds]
+        if commits % W == 0:
+            acc_time.append((clock, _accuracy(global_params, sim.cnn, env.task.x_test, env.task.y_test)))
+
+    return _finalize(sim, env, acc_time, [], [], [], [1.0] * W,
+                     [dict(global_params) for _ in range(W)], comm_bytes, 0.0, clock)
+
+
+def _finalize(sim, env, acc_time, het_traj, sim_traj, upd_times, retentions,
+              worker_params, comm_bytes, server_overhead, clock) -> SimResult:
+    accs = np.array([a for _, a in acc_time])
+    times = np.array([t for t, _ in acc_time])
+    best = int(np.argmax(accs))
+    param_sizes = [sum(v.size for v in p.values()) for p in worker_params]
+    flops = [cnn_flops(p, sim.cnn) for p in worker_params]
+    full_size = sum(v.size for v in env.base_params.values())
+    return SimResult(
+        method=sim.method,
+        acc_time=acc_time,
+        final_acc=float(accs[-1]),
+        best_acc=float(accs[best]),
+        best_acc_time=float(times[best]),
+        total_time=float(clock),
+        het_traj=het_traj,
+        retentions=retentions,
+        param_reduction=1.0 - float(np.mean(param_sizes)) / full_size,
+        flops_reduction=1.0 - float(np.mean(flops)) / env.full_flops,
+        comm_bytes=comm_bytes,
+        server_overhead_s=server_overhead,
+        recompiles=env.trainer.compile_count,
+        similarity_traj=sim_traj,
+        update_times=upd_times,
+    )
+
+
+def run_simulation(sim: SimConfig) -> SimResult:
+    env = _Env(sim)
+    if sim.method in ("adaptcl", "fedavg", "fedavg_s"):
+        return _run_sync(sim, env)
+    if sim.method in ("fedasync_s", "ssp_s", "dcasgd_s"):
+        return _run_async(sim, env)
+    raise ValueError(f"unknown method {sim.method}")

@@ -1,0 +1,120 @@
+"""Update-time and heterogeneity model (AdaptCL Eq. 4, 6, 7, 8).
+
+The paper emulates heterogeneity by assigning each worker a bandwidth B_w so
+that update times are uniformly spread between the fastest worker and
+``sigma``x the fastest:
+
+    phi_w = (2*s_model/B_max + t_train) * (1 + (sigma-1)/(W-1) * (W-w))   (Eq. 6)
+    B_w   = 2*s_model / (phi_w - t_train)                                  (Eq. 7)
+    H     = 1 - 1/(W-1) * sum_w 1/(1 + (sigma-1)/(W-1)*(W-w))              (Eq. 8)
+
+We reuse the same channel model to *simulate* worker update times as a
+function of the retention ratio gamma:
+
+    phi_w(gamma) = 2 * s_model(gamma) / B_w + t_train(gamma)
+
+where s_model(gamma) is the actual parameter payload of the reconfigured
+sub-model and t_train(gamma) the measured (or modelled) per-round train time.
+Training-time sensitivity to pruning is device-dependent (paper Appendix E):
+``train_sens`` in [0,1] linearly interpolates between "insensitive" (GPU-like,
+t_train const) and "fully proportional" (CPU-like, t_train ~ FLOPs(gamma)).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, List, Sequence
+
+import numpy as np
+
+__all__ = [
+    "HeterogeneityConfig",
+    "heterogeneity_from_times",
+    "heterogeneity_closed_form",
+    "make_bandwidths",
+    "ChannelModel",
+]
+
+
+@dataclasses.dataclass(frozen=True)
+class HeterogeneityConfig:
+    num_workers: int = 10
+    sigma: float = 2.0        # longest/shortest update-time ratio
+    # bytes/s of the fastest worker (paper: 5 MB).  None => auto-scale so that
+    # comm_fast = comm_ratio * t_train (reproduces the paper's comm-dominated
+    # regime regardless of simulated model size).
+    bandwidth_max: float | None = None
+    comm_ratio: float = 3.0
+
+
+def heterogeneity_from_times(phis: Sequence[float]) -> float:
+    """H = 1 - 1/(W-1) * sum_{w != argmin} phi_min/phi_w   (Eq. 4)."""
+    phis = np.asarray(phis, dtype=np.float64)
+    W = phis.size
+    if W < 2:
+        return 0.0
+    phi_min = phis.min()
+    idx_min = int(phis.argmin())
+    others = np.delete(phis, idx_min)
+    return float(1.0 - np.mean(phi_min / others))
+
+
+def heterogeneity_closed_form(W: int, sigma: float) -> float:
+    """Eq. 8 — H for the uniform spread used in the experiments."""
+    ws = np.arange(1, W, dtype=np.float64)  # w = 1..W-1 (worker W is fastest)
+    return float(1.0 - np.mean(1.0 / (1.0 + (sigma - 1.0) / (W - 1) * (W - ws))))
+
+
+def make_bandwidths(
+    cfg: HeterogeneityConfig, model_bytes: float, t_train: float
+) -> List[float]:
+    """Eq. 6/7: bandwidths giving uniformly spread update times.
+
+    Worker index W (last) is the fastest, matching the paper's Tab. VI-VIII
+    (ascending bandwidth lists ending at B_max).
+    """
+    W, sigma = cfg.num_workers, cfg.sigma
+    bmax = cfg.bandwidth_max
+    if bmax is None:
+        bmax = 2.0 * model_bytes / (cfg.comm_ratio * max(t_train, 1e-9))
+    phi_fast = 2.0 * model_bytes / bmax + t_train
+    bws = []
+    for w in range(1, W + 1):
+        phi_w = phi_fast * (1.0 + (sigma - 1.0) / (W - 1) * (W - w))
+        bws.append(2.0 * model_bytes / (phi_w - t_train))
+    return bws
+
+
+@dataclasses.dataclass
+class ChannelModel:
+    """Per-worker update-time simulator phi_w(gamma).
+
+    model_bytes_fn: gamma -> payload bytes of the reconfigured sub-model.
+    flops_fn:       gamma -> per-round training FLOPs of the sub-model.
+    train_sens:     0.0 = train time insensitive to pruning (GPU-like),
+                    1.0 = proportional to FLOPs (CPU-like). Appendix E.
+    jitter:         multiplicative noise std on each observation (bandwidth
+                    fluctuation); the pruning-interval averaging in the
+                    server is what suppresses this.
+    """
+
+    bandwidths: Sequence[float]
+    t_train_full: float
+    model_bytes_fn: Callable[[float], float]
+    flops_fn: Callable[[float], float]
+    train_sens: float = 0.0
+    jitter: float = 0.0
+
+    def train_time(self, gamma: float) -> float:
+        rel = self.flops_fn(gamma) / max(self.flops_fn(1.0), 1e-30)
+        return self.t_train_full * ((1.0 - self.train_sens) + self.train_sens * rel)
+
+    def comm_time(self, worker: int, gamma: float) -> float:
+        return 2.0 * self.model_bytes_fn(gamma) / self.bandwidths[worker]
+
+    def update_time(
+        self, worker: int, gamma: float, rng: np.random.Generator | None = None
+    ) -> float:
+        phi = self.comm_time(worker, gamma) + self.train_time(gamma)
+        if self.jitter > 0.0 and rng is not None:
+            phi *= float(np.exp(rng.normal(0.0, self.jitter)))
+        return phi

@@ -1,0 +1,189 @@
+"""Worker-side logic (AdaptCL Alg. 1, worker part).
+
+SparseTrain -> NetworkPrune -> NetworkReconfigure.  A worker holds a
+*reconfigured* (physically small) sub-model plus its global index I_w.
+Training steps are jitted per parameter-shape signature; a reconfiguration
+triggers one recompilation (counted in the overhead benchmark — this is the
+JAX analogue of PruneTrain's model rebuild).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Mapping, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.cnn import CNNConfig, cnn_apply
+from repro.optim.group_lasso import group_lasso_penalty
+from repro.optim.optimizers import apply_updates, momentum
+
+from .masks import GlobalIndex, prune_to_budget
+
+__all__ = ["LocalTrainer", "reslice_subparams", "local_unit_stats"]
+
+Params = Dict[str, np.ndarray]
+
+
+def reslice_subparams(
+    params: Params, old_index: GlobalIndex, new_index: GlobalIndex, unit_map
+) -> Params:
+    """Slice a sub-model further down: new_index must nest inside old_index."""
+    rel: Dict[str, np.ndarray] = {}
+    for lname, old in old_index.items():
+        pos = {int(u): i for i, u in enumerate(old)}
+        rel[lname] = np.array([pos[int(u)] for u in new_index[lname]], dtype=np.int64)
+    out: Params = {}
+    for path, arr in params.items():
+        for lname, axis in unit_map.get(path, ()):
+            arr = np.take(arr, rel[lname], axis=axis)
+        out[path] = arr
+    return out
+
+
+class LocalTrainer:
+    """Minibatch SGD(+momentum) with optional group-lasso sparse training."""
+
+    def __init__(self, cnn_cfg: CNNConfig, lr: float = 0.05, beta: float = 0.9):
+        self.cfg = cnn_cfg
+        self.lr = lr
+        self.beta = beta
+        self._step_cache: Dict = {}
+        self.compile_count = 0  # reconfigure-induced recompiles (overhead bench)
+
+    def _get_step(self, params: Params, unit_map, lam: float):
+        sig = (tuple(sorted((k, v.shape) for k, v in params.items())), lam > 0.0)
+        if sig in self._step_cache:
+            return self._step_cache[sig]
+        cfg, lr, beta = self.cfg, self.lr, self.beta
+        opt = momentum(lr, beta)
+        frozen_map = {k: tuple(v) for k, v in unit_map.items()}
+
+        def loss_fn(p, x, y):
+            logits = cnn_apply(p, cfg, x)
+            logp = jax.nn.log_softmax(logits)
+            ce = -jnp.take_along_axis(logp, y[:, None], axis=1).mean()
+            if lam > 0.0:
+                ce = ce + group_lasso_penalty(p, frozen_map, lam)
+            return ce
+
+        @jax.jit
+        def step(p, opt_state, x, y):
+            loss, grads = jax.value_and_grad(loss_fn)(p, x, y)
+            updates, opt_state = opt.update(grads, opt_state, p)
+            return apply_updates(p, updates), opt_state, loss
+
+        @jax.jit
+        def grad_fn(p, x, y):
+            return jax.grad(loss_fn)(p, x, y)
+
+        entry = (step, opt.init, grad_fn)
+        self._step_cache[sig] = entry
+        self.compile_count += 1
+        return entry
+
+    def train(
+        self,
+        params: Params,
+        unit_map,
+        x: np.ndarray,
+        y: np.ndarray,
+        epochs: float,
+        batch_size: int,
+        rng: np.random.Generator,
+        lam: float = 0.0,
+    ) -> Tuple[Params, float]:
+        """Returns (new params, mean loss)."""
+        if epochs <= 0:
+            return params, float("nan")
+        step, opt_init, _ = self._get_step(params, unit_map, lam)
+        p = {k: jnp.asarray(v) for k, v in params.items()}
+        opt_state = opt_init(p)
+        losses = []
+        n = len(x)
+        total = max(1, int(round(epochs * n)))
+        done = 0
+        while done < total:
+            order = rng.permutation(n)
+            for i in range(0, n, batch_size):
+                if done >= total:
+                    break
+                sel = order[i : i + batch_size]
+                if len(sel) < batch_size:  # keep shapes static for the jit cache
+                    sel = np.concatenate([sel, order[: batch_size - len(sel)]])
+                p, opt_state, loss = step(p, opt_state, jnp.asarray(x[sel]), jnp.asarray(y[sel]))
+                losses.append(float(loss))
+                done += batch_size
+        return {k: np.asarray(v) for k, v in p.items()}, float(np.mean(losses))
+
+    def gradient(self, params: Params, unit_map, x, y, lam: float = 0.0) -> Params:
+        """One-batch gradient (DC-ASGD commits gradients, not models)."""
+        _, _, grad_fn = self._get_step(params, unit_map, lam)
+        g = grad_fn({k: jnp.asarray(v) for k, v in params.items()}, jnp.asarray(x), jnp.asarray(y))
+        return {k: np.asarray(v) for k, v in g.items()}
+
+    # ---- Alg. 1 lines 3-5: prune + reconfigure ---------------------------
+
+    def prune_and_reconfigure(
+        self,
+        params: Params,
+        index: GlobalIndex,
+        scores: Mapping[str, np.ndarray],
+        pruned_rate: float,
+        space,
+        unit_map,
+    ) -> Tuple[Params, GlobalIndex]:
+        new_index = prune_to_budget(index, scores, pruned_rate, space)
+        new_params = reslice_subparams(params, index, new_index, unit_map)
+        return new_params, new_index
+
+
+def local_unit_stats(
+    trainer: LocalTrainer,
+    params: Params,
+    index: GlobalIndex,
+    space,
+    unit_map,
+    x: np.ndarray,
+    y: np.ndarray,
+) -> Dict[str, Dict[str, np.ndarray]]:
+    """Data/sub-model-dependent importance signals, scattered to base unit
+    coordinates (missing units get -inf so they sort as already-pruned).
+
+    weight_norms -> L1/FPGM; grads -> Taylor |g.w|; activations -> HRank proxy.
+    """
+    from repro.optim.group_lasso import unit_group_norms
+
+    jparams = {k: jnp.asarray(v) for k, v in params.items()}
+    norms, _ = unit_group_norms(jparams, unit_map)
+    grads = trainer.gradient(params, unit_map, x[:64], y[:64])
+    gw = {}
+    for lname in norms:
+        acc = 0.0
+        for path, entries in unit_map.items():
+            for ln, axis in entries:
+                if ln != lname:
+                    continue
+                g = np.asarray(grads[path], np.float64)
+                w = np.asarray(params[path], np.float64)
+                axes = tuple(i for i in range(g.ndim) if i != axis)
+                acc = acc + np.abs((g * w).sum(axis=axes))
+        gw[lname] = acc
+    # activation statistic (HRank proxy): real per-filter mean|activation|
+    stats: Dict[str, jnp.ndarray] = {}
+    cnn_apply(jparams, trainer.cfg, jnp.asarray(x[:64]), stats=stats)
+    acts = {
+        lname: np.asarray(stats[lname], np.float64) for lname in norms if lname in stats
+    }
+
+    def scatter(local: np.ndarray, lname: str) -> np.ndarray:
+        full = np.full(space.layer(lname).num_units, -np.inf)
+        full[np.asarray(index[lname], np.int64)] = np.asarray(local, np.float64)
+        return full
+
+    return {
+        "weight_norms": {k: scatter(np.asarray(v), k) for k, v in norms.items()},
+        "grads": {k: scatter(v, k) for k, v in gw.items()},
+        "activations": {k: scatter(v, k) for k, v in acts.items()},
+    }

@@ -1,0 +1,91 @@
+"""Pruned (block-sparse) matmul Pallas kernel — AdaptCL's masked-training hot spot.
+
+TPU adaptation of the paper's sub-model compute (DESIGN.md §2): instead of a
+GPU gather-matmul, unit pruning is expressed as 0/1 masks over the K (input
+units) and N (output units) dims, and the kernel is a 128-aligned blocked
+matmul that (a) applies the masks fused in VMEM (no separate ``W * mask``
+materialization in HBM) and (b) *skips whole K-blocks* whose units are all
+pruned, via scalar-prefetched block-keep flags — the MXU-granular analogue of
+NetworkReconfigure.  With CIG pruning the retained set is a fixed prefix of
+the frozen importance order, so block occupancy stays high and skipping is
+effective (FLOPs scale ~ with the retention ratio).
+
+Grid: (M/bm, N/bn, K/bk), K innermost (sequential); fp32 VMEM accumulator.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+__all__ = ["pruned_matmul_kernel_call"]
+
+
+def _kernel(k_keep_ref, x_ref, w_ref, in_mask_ref, out_mask_ref, o_ref, acc_ref):
+    ki = pl.program_id(2)
+    nk = pl.num_programs(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    @pl.when(k_keep_ref[ki] > 0)
+    def _compute():
+        xm = x_ref[...].astype(jnp.float32) * in_mask_ref[...].astype(jnp.float32)[None, :]
+        acc_ref[...] += jax.lax.dot_general(
+            xm,
+            w_ref[...].astype(jnp.float32),
+            (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        )
+
+    @pl.when(ki == nk - 1)
+    def _finish():
+        o_ref[...] = (
+            acc_ref[...] * out_mask_ref[...].astype(jnp.float32)[None, :]
+        ).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("block_m", "block_n", "block_k", "interpret"))
+def pruned_matmul_kernel_call(
+    x: jnp.ndarray,          # [M, K]
+    w: jnp.ndarray,          # [K, N]
+    in_mask: jnp.ndarray,    # [K] 0/1
+    out_mask: jnp.ndarray,   # [N] 0/1
+    *,
+    block_m: int = 128,
+    block_n: int = 128,
+    block_k: int = 128,
+    interpret: bool = False,
+) -> jnp.ndarray:
+    M, K = x.shape
+    K2, N = w.shape
+    assert K == K2 and in_mask.shape == (K,) and out_mask.shape == (N,)
+    assert M % block_m == 0 and N % block_n == 0 and K % block_k == 0, (
+        f"dims ({M},{K},{N}) must be multiples of blocks ({block_m},{block_k},{block_n})"
+    )
+    nk = K // block_k
+    # block-keep flags: 1 if any unit in the K block survives (scalar prefetch)
+    k_keep = (in_mask.reshape(nk, block_k).sum(axis=1) > 0).astype(jnp.int32)
+
+    grid = (M // block_m, N // block_n, nk)
+    return pl.pallas_call(
+        _kernel,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=1,
+            grid=grid,
+            in_specs=[
+                pl.BlockSpec((block_m, block_k), lambda i, j, k, keep: (i, k)),
+                pl.BlockSpec((block_k, block_n), lambda i, j, k, keep: (k, j)),
+                pl.BlockSpec((block_k,), lambda i, j, k, keep: (k,)),
+                pl.BlockSpec((block_n,), lambda i, j, k, keep: (j,)),
+            ],
+            out_specs=pl.BlockSpec((block_m, block_n), lambda i, j, k, keep: (i, j)),
+            scratch_shapes=[pltpu.VMEM((block_m, block_n), jnp.float32)],
+        ),
+        out_shape=jax.ShapeDtypeStruct((M, N), x.dtype),
+        interpret=interpret,
+    )(k_keep, x, w, in_mask, out_mask)

@@ -1,0 +1,71 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose ground truth)."""
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["pruned_matmul_ref", "flash_attention_ref", "rg_lru_ref"]
+
+
+def pruned_matmul_ref(
+    x: jnp.ndarray,          # [m, k_full]
+    w: jnp.ndarray,          # [k_full, n_full]
+    in_idx: jnp.ndarray,     # [k_sub] retained input-unit ids (sorted)
+    out_idx: jnp.ndarray,    # [n_sub] retained output-unit ids (sorted)
+) -> jnp.ndarray:
+    """y = x[:, in_idx] @ w[in_idx][:, out_idx] — the masked-training matmul
+    of an AdaptCL sub-model expressed against base-model weights."""
+    return jnp.take(x, in_idx, axis=1) @ jnp.take(
+        jnp.take(w, in_idx, axis=0), out_idx, axis=1
+    )
+
+
+def flash_attention_ref(
+    q: jnp.ndarray,          # [b, s, h, d]
+    k: jnp.ndarray,          # [b, s, h, d]  (kv already repeated to h)
+    v: jnp.ndarray,
+    *,
+    causal: bool = True,
+    window: Optional[int] = None,
+    softcap: Optional[float] = None,
+) -> jnp.ndarray:
+    b, s, h, d = q.shape
+    scores = jnp.einsum("bshd,bthd->bhst", q.astype(jnp.float32), k.astype(jnp.float32))
+    scores = scores / math.sqrt(d)
+    if softcap is not None:
+        scores = softcap * jnp.tanh(scores / softcap)
+    qp = jnp.arange(s)[:, None]
+    kp = jnp.arange(s)[None, :]
+    keep = jnp.ones((s, s), bool)
+    if causal:
+        keep &= kp <= qp
+    if window is not None:
+        keep &= kp > qp - window
+    scores = jnp.where(keep, scores, jnp.finfo(jnp.float32).min)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bhst,bthd->bshd", probs, v.astype(jnp.float32))
+    return out.astype(q.dtype)
+
+
+def rg_lru_ref(
+    x: jnp.ndarray,          # [b, s, r] gated inputs (i_t * x_t pre-applied upstream)
+    a: jnp.ndarray,          # [b, s, r] per-step decay in (0, 1)
+    h0: Optional[jnp.ndarray] = None,   # [b, r]
+) -> jnp.ndarray:
+    """h_t = a_t * h_{t-1} + x_t  (the RG-LRU core linear recurrence)."""
+    b, s, r = x.shape
+    if h0 is None:
+        h0 = jnp.zeros((b, r), x.dtype)
+
+    def step(h, xs):
+        a_t, x_t = xs
+        h = a_t * h + x_t
+        return h, h
+
+    _, hs = jax.lax.scan(step, h0.astype(jnp.float32),
+                         (a.swapaxes(0, 1).astype(jnp.float32),
+                          x.swapaxes(0, 1).astype(jnp.float32)))
+    return hs.swapaxes(0, 1).astype(x.dtype)

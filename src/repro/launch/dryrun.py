@@ -1,0 +1,349 @@
+import os
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count=512 " + os.environ.get("XLA_FLAGS", "")
+)
+# ^ MUST run before any jax import: jax locks the device count on first init.
+
+"""Multi-pod dry-run: lower + compile every (arch x input-shape x mesh) pair.
+
+For each pair this produces the *production artifact*: the scanned,
+remat'd, q-blocked step function, jitted with rule-derived shardings, lowered
+and compiled against the 256-chip (16x16) or 512-chip (2x16x16) mesh of host
+placeholder devices.  ``compiled.memory_analysis()`` proves the memory fit;
+``compiled.cost_analysis()`` + the HLO collective listing feed §Roofline.
+
+AdaptCL hook: ``--retention g`` reconfigures the model to the gamma-g
+sub-model (NetworkReconfigure at production scale) before lowering, so the
+roofline table can show how each term scales with pruning.
+
+Usage:
+  python -m repro.launch.dryrun --arch qwen3-32b --shape train_4k --mesh single
+  python -m repro.launch.dryrun --all --mesh both --out results/dryrun
+"""
+import argparse
+import dataclasses
+import json
+import re
+import time
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs import SHAPES, get_config, list_archs
+from repro.launch.mesh import make_production_mesh
+from repro.models import transformer as T
+from repro.models.config import ModelConfig, apply_retention, flops_per_token, param_count
+from repro.optim.optimizers import adamw
+from repro.sharding.specs import batch_pspecs, decode_state_pspecs, param_pspec, shard_tree
+
+__all__ = [
+    "input_specs",
+    "make_step",
+    "lower_pair",
+    "run_pair",
+    "long_500k_eligible",
+    "prepare_config",
+    "collective_bytes_from_hlo",
+]
+
+WHISPER_ENC_FRAMES = 1500  # 30 s of audio at 50 Hz post-conv (Whisper native)
+
+
+def long_500k_eligible(cfg: ModelConfig, variant: Optional[str]) -> bool:
+    """Sub-quadratic rule (DESIGN.md §5): every layer must be windowed or
+    recurrent at decode time."""
+    kinds = set(cfg.layer_kinds())
+    if cfg.encoder_layers:
+        return False  # enc-dec cross attention over full encoder output
+    if variant == "windowed":
+        return True
+    return kinds <= {"rglru", "local", "mlstm", "slstm", "moe_local"}
+
+
+def prepare_config(
+    arch: str,
+    shape_name: str,
+    *,
+    retention: float = 1.0,
+    variant: Optional[str] = None,
+    dtype: str = "bfloat16",
+    scan_layers: bool = True,
+    remat: bool = True,
+    q_block: Optional[int] = 1024,
+    num_layers: Optional[int] = None,
+    seq_shard: bool = False,
+) -> ModelConfig:
+    cfg = get_config(arch)
+    if variant == "windowed":
+        pattern = tuple(
+            {"attn": "local", "moe": "moe_local"}.get(k, k) for k in cfg.block_pattern
+        )
+        cfg = cfg.replace(block_pattern=pattern,
+                          window_size=cfg.window_size or 4096)
+    if retention < 1.0:
+        cfg = apply_retention(cfg, retention)
+    kw: Dict[str, Any] = dict(dtype=dtype, scan_layers=scan_layers, remat=remat,
+                              attn_q_block=q_block,
+                              seq_shard_activations=seq_shard)
+    if num_layers is not None:
+        kw["num_layers"] = num_layers
+    if shape_name == "decode_32k" and cfg.pos_embed == "learned":
+        kw["max_position"] = 32_768 + 8
+    # pad vocab to a model-axis-shardable multiple (logits masked above real)
+    if cfg.vocab_size % 256 != 0:
+        kw["vocab_size_real"] = cfg.vocab_size
+        kw["vocab_size"] = ((cfg.vocab_size + 255) // 256) * 256
+    return cfg.replace(**kw)
+
+
+def input_specs(cfg: ModelConfig, shape_name: str, mesh) -> Dict[str, Any]:
+    """ShapeDtypeStruct stand-ins (weak-type-correct, sharded, no allocation)
+    for every input of the step function selected by the shape kind."""
+    shp = SHAPES[shape_name]
+    B, S = shp.global_batch, shp.seq_len
+
+    def sds(shape, dtype, pspec):
+        return jax.ShapeDtypeStruct(shape, dtype, sharding=NamedSharding(mesh, pspec))
+
+    if shp.kind in ("train", "prefill"):
+        n_prefix = cfg.num_prefix_embeds
+        s_text = S - n_prefix
+        batch = {"tokens": sds((B, s_text), jnp.int32, batch_pspecs("tokens", (B, s_text), mesh))}
+        if n_prefix:
+            batch["prefix_embeds"] = sds(
+                (B, n_prefix, cfg.d_model), jnp.dtype(cfg.dtype),
+                batch_pspecs("prefix_embeds", (B, n_prefix, cfg.d_model), mesh),
+            )
+        if cfg.encoder_layers:
+            batch["enc_embeds"] = sds(
+                (B, WHISPER_ENC_FRAMES, cfg.d_model), jnp.dtype(cfg.dtype),
+                batch_pspecs("enc_embeds", (B, WHISPER_ENC_FRAMES, cfg.d_model), mesh),
+            )
+        return {"batch": batch}
+
+    # decode: one token against a cache of S
+    enc_len = WHISPER_ENC_FRAMES if cfg.encoder_layers else 0
+    state_shapes = jax.eval_shape(
+        lambda: T.init_decode_state(cfg, B, S, enc_len=enc_len)
+    )
+    state = shard_tree(state_shapes, mesh, decode_state_pspecs)
+    token = sds((B,), jnp.int32, batch_pspecs("token", (B,), mesh))
+    return {"state": state, "token": token}
+
+
+def make_step(cfg: ModelConfig, shape_name: str, optimizer="adamw",
+              opt_dtype="float32", microbatch: int = 1):
+    """Returns (step_fn, abstract_args_builder(mesh) -> tuple of SDS).
+
+    ``opt_dtype="bfloat16"`` halves Adam m/v memory (a §Perf lever for the
+    400B config); ``microbatch=k`` splits the global batch into k sequential
+    gradient-accumulation chunks (k-fold smaller activations).
+    """
+    shp = SHAPES[shape_name]
+    opt = adamw(3e-4, state_dtype=jnp.dtype(opt_dtype))
+
+    if shp.kind == "train":
+        def train_step(params, opt_state, batch):
+            if microbatch > 1:
+                def one(i):
+                    mb = jax.tree.map(
+                        lambda x: x.reshape(microbatch, x.shape[0] // microbatch, *x.shape[1:])[i],
+                        batch,
+                    )
+                    return jax.value_and_grad(lambda p: T.lm_loss(p, cfg, mb))(params)
+
+                def body(carry, i):
+                    loss_acc, grad_acc = carry
+                    loss, grads = one(i)
+                    return (loss_acc + loss,
+                            jax.tree.map(jnp.add, grad_acc, grads)), None
+
+                zero = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+                (loss, grads), _ = jax.lax.scan(
+                    body, (jnp.zeros((), jnp.float32), zero), jnp.arange(microbatch)
+                )
+                loss = loss / microbatch
+                grads = jax.tree.map(lambda g: g / microbatch, grads)
+            else:
+                loss, grads = jax.value_and_grad(lambda p: T.lm_loss(p, cfg, batch))(params)
+            updates, opt_state = opt.update(grads, opt_state, params)
+            params = jax.tree.map(lambda p, u: (p + u).astype(p.dtype), params, updates)
+            return params, opt_state, loss
+
+        def abstract_args(mesh):
+            p_sds = jax.eval_shape(lambda: T.init_params(jax.random.key(0), cfg))
+            p_sds = shard_tree(p_sds, mesh, param_pspec)
+            o_sds = jax.eval_shape(opt.init, p_sds)
+            o_sds = shard_tree(o_sds, mesh, lambda path, shp_, m: param_pspec(path.split("/", 1)[-1] if "/" in path else path, shp_, m))
+            specs = input_specs(cfg, shape_name, mesh)
+            return (p_sds, o_sds, specs["batch"])
+
+        return train_step, abstract_args
+
+    if shp.kind == "prefill":
+        def prefill_step(params, batch):
+            return T.prefill(params, cfg, batch, max_len=SHAPES[shape_name].seq_len)
+
+        def abstract_args(mesh):
+            p_sds = shard_tree(
+                jax.eval_shape(lambda: T.init_params(jax.random.key(0), cfg)), mesh, param_pspec
+            )
+            return (p_sds, input_specs(cfg, shape_name, mesh)["batch"])
+
+        return prefill_step, abstract_args
+
+    def serve_step(params, state, token):
+        return T.decode_step(params, cfg, state, token)
+
+    def abstract_args(mesh):
+        p_sds = shard_tree(
+            jax.eval_shape(lambda: T.init_params(jax.random.key(0), cfg)), mesh, param_pspec
+        )
+        specs = input_specs(cfg, shape_name, mesh)
+        return (p_sds, specs["state"], specs["token"])
+
+    return serve_step, abstract_args
+
+
+_SHAPE_RE = re.compile(r"(bf16|f16|f32|f64|u8|u16|u32|u64|s8|s16|s32|s64|pred)\[([\d,]*)\]")
+_BYTES = {"bf16": 2, "f16": 2, "f32": 4, "f64": 8, "u8": 1, "s8": 1, "u16": 2,
+          "s16": 2, "u32": 4, "s32": 4, "u64": 8, "s64": 8, "pred": 1}
+_COLL_OPS = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all", "collective-permute")
+
+
+def collective_bytes_from_hlo(hlo_text: str) -> Dict[str, float]:
+    """Sum result-shape bytes of every collective op in the HLO (per device)."""
+    out = {op: 0.0 for op in _COLL_OPS}
+    out["count"] = 0
+    for line in hlo_text.splitlines():
+        stripped = line.strip()
+        m = re.match(r"^(%?[\w.\-]+)\s*=\s*(.*)$", stripped)
+        if not m:
+            continue
+        rhs = m.group(2)
+        for op in _COLL_OPS:
+            # match the op as the instruction name: "<type> all-reduce(" etc.
+            if re.search(rf"\s{op}(-start|-done)?\(", rhs) or rhs.startswith(f"{op}("):
+                head = rhs.split(f" {op}", 1)[0]
+                nbytes = 0.0
+                for dt, dims in _SHAPE_RE.findall(head):
+                    n = 1
+                    for d in dims.split(","):
+                        if d:
+                            n *= int(d)
+                    nbytes += n * _BYTES[dt]
+                out[op] += nbytes
+                out["count"] += 1
+                break
+    out["total"] = sum(out[op] for op in _COLL_OPS)
+    return out
+
+
+def lower_pair(cfg: ModelConfig, shape_name: str, mesh, **step_kw):
+    """Lower + compile; returns (compiled, lowered, elapsed seconds)."""
+    step, abstract_args = make_step(cfg, shape_name, **step_kw)
+    args = abstract_args(mesh)
+    t0 = time.perf_counter()
+    with mesh:
+        lowered = jax.jit(step).lower(*args)
+        compiled = lowered.compile()
+    return compiled, lowered, time.perf_counter() - t0
+
+
+def run_pair(
+    arch: str,
+    shape_name: str,
+    mesh_kind: str = "single",
+    *,
+    retention: float = 1.0,
+    variant: Optional[str] = None,
+    verbose: bool = True,
+) -> Dict[str, Any]:
+    mesh = make_production_mesh(multi_pod=(mesh_kind == "multi"))
+    cfg = prepare_config(arch, shape_name, retention=retention, variant=variant)
+    if shape_name == "long_500k" and not long_500k_eligible(cfg, variant):
+        return {"arch": arch, "shape": shape_name, "mesh": mesh_kind,
+                "status": "skipped", "reason": "quadratic attention at 500k (DESIGN.md §5)"}
+    compiled, lowered, dt = lower_pair(cfg, shape_name, mesh)
+    mem = compiled.memory_analysis()
+    cost = compiled.cost_analysis()
+    coll = collective_bytes_from_hlo(compiled.as_text())
+    n_dev = int(np.prod(list(mesh.shape.values())))
+    rec = {
+        "arch": arch,
+        "shape": shape_name,
+        "mesh": mesh_kind,
+        "devices": n_dev,
+        "retention": retention,
+        "variant": variant,
+        "status": "ok",
+        "compile_s": round(dt, 2),
+        "params": param_count(cfg),
+        "model_flops_per_token": flops_per_token(cfg, SHAPES[shape_name].seq_len),
+        "hlo_flops_per_device": float(cost.get("flops", 0.0)),
+        "hlo_bytes_per_device": float(cost.get("bytes accessed", 0.0)),
+        "collectives": coll,
+        "memory": {
+            "argument_bytes": getattr(mem, "argument_size_in_bytes", 0),
+            "output_bytes": getattr(mem, "output_size_in_bytes", 0),
+            "temp_bytes": getattr(mem, "temp_size_in_bytes", 0),
+            "peak_bytes": getattr(mem, "peak_memory_in_bytes", 0),
+        },
+    }
+    if verbose:
+        print(
+            f"[dryrun] {arch} x {shape_name} x {mesh_kind}({n_dev}) "
+            f"retention={retention} compile={dt:.1f}s "
+            f"temp={rec['memory']['temp_bytes']/2**30:.2f}GiB "
+            f"args={rec['memory']['argument_bytes']/2**30:.2f}GiB "
+            f"flops/dev={rec['hlo_flops_per_device']:.3g} "
+            f"coll={coll['total']/2**20:.1f}MiB/{int(coll['count'])}ops"
+        )
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--mesh", default="single", choices=["single", "multi", "both"])
+    ap.add_argument("--retention", type=float, default=1.0)
+    ap.add_argument("--variant", default=None, choices=[None, "windowed"])
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--out", default=None, help="JSONL output path")
+    args = ap.parse_args()
+
+    meshes = ["single", "multi"] if args.mesh == "both" else [args.mesh]
+    archs = list_archs() if (args.all or args.arch is None) else [args.arch]
+    shapes = list(SHAPES) if (args.all or args.shape is None) else [args.shape]
+
+    records = []
+    for mesh_kind in meshes:
+        for arch in archs:
+            for shape in shapes:
+                variant = args.variant
+                if shape == "long_500k" and arch == "granite-moe-1b-a400m" and variant is None:
+                    variant = "windowed"  # demonstrate the dense windowed variant
+                try:
+                    rec = run_pair(arch, shape, mesh_kind,
+                                   retention=args.retention, variant=variant)
+                except Exception as e:  # a failure here is a sharding bug
+                    rec = {"arch": arch, "shape": shape, "mesh": mesh_kind,
+                           "status": "FAILED", "error": f"{type(e).__name__}: {e}"}
+                    print(f"[dryrun] FAILED {arch} x {shape} x {mesh_kind}: {e}")
+                records.append(rec)
+                if args.out:
+                    with open(args.out, "a") as f:
+                        f.write(json.dumps(rec) + "\n")
+    n_ok = sum(r["status"] == "ok" for r in records)
+    n_skip = sum(r["status"] == "skipped" for r in records)
+    n_fail = len(records) - n_ok - n_skip
+    print(f"[dryrun] done: {n_ok} ok, {n_skip} skipped, {n_fail} failed")
+    return 1 if n_fail else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,36 @@
+"""Production mesh construction (TPU v5e target).
+
+Single pod: 16 x 16 = 256 chips, axes (data, model).
+Multi-pod:  2 x 16 x 16 = 512 chips, axes (pod, data, model) — `pod` is the
+cross-pod data-parallel axis (DCN-connected in a real deployment).
+
+Functions, not module-level constants: importing this module never touches
+jax device state (the dry-run sets XLA_FLAGS before any jax import).
+"""
+from __future__ import annotations
+
+import jax
+
+__all__ = ["make_production_mesh", "make_local_mesh", "HARDWARE"]
+
+# TPU v5e hardware constants used by the roofline analysis (per chip).
+HARDWARE = {
+    "peak_flops_bf16": 197e12,   # FLOP/s
+    "hbm_bandwidth": 819e9,      # bytes/s
+    "ici_bandwidth": 50e9,       # bytes/s per link
+    "hbm_bytes": 16 * 2**30,     # 16 GiB
+}
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_local_mesh(data: int = 1, model: int = 1):
+    """Small mesh over whatever devices exist (tests on CPU)."""
+    n = len(jax.devices())
+    if data * model > n:
+        data, model = n, 1
+    return jax.make_mesh((data, model), ("data", "model"))

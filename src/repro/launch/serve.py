@@ -1,0 +1,73 @@
+"""Serving launcher: prefill + batched greedy decode on local devices.
+
+Demonstrates the inference path end-to-end (reduced configs on CPU): batch of
+prompts -> prefill builds the ring-buffer KV caches / recurrent states ->
+token-by-token decode.  The same ``decode_step`` is what the dry-run lowers
+at production shapes.  ``--retention`` serves an AdaptCL-reconfigured
+sub-model (capability-adapted serving).
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config, smoke_config
+from repro.models import transformer as T
+from repro.models.config import apply_retention
+
+__all__ = ["serve_batch", "main"]
+
+
+def serve_batch(cfg, params, prompts: jnp.ndarray, new_tokens: int = 16,
+                extra_batch=None):
+    """prompts [b, s] -> generated [b, new_tokens] (greedy)."""
+    b, s = prompts.shape
+    batch = {"tokens": prompts}
+    if extra_batch:
+        batch.update(extra_batch)
+    decode = jax.jit(lambda p, st, tok: T.decode_step(p, cfg, st, tok))
+    logits, state = T.prefill(params, cfg, batch, max_len=s + new_tokens)
+    out = []
+    tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    for _ in range(new_tokens):
+        out.append(tok)
+        logits, state = decode(params, state, tok)
+        tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    return jnp.stack(out, axis=1)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=32)
+    ap.add_argument("--new-tokens", type=int, default=16)
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--retention", type=float, default=1.0)
+    args = ap.parse_args()
+    cfg = smoke_config(args.arch) if args.smoke else get_config(args.arch)
+    if args.retention < 1.0:
+        cfg = apply_retention(cfg, args.retention)
+    key = jax.random.PRNGKey(0)
+    params = T.init_params(key, cfg)
+    prompts = jax.random.randint(key, (args.batch, args.prompt_len), 0, cfg.vocab_size)
+    extra = {}
+    if cfg.num_prefix_embeds:
+        extra["prefix_embeds"] = jnp.zeros((args.batch, cfg.num_prefix_embeds, cfg.d_model), jnp.dtype(cfg.dtype))
+    if cfg.encoder_layers:
+        extra["enc_embeds"] = jnp.zeros((args.batch, 16, cfg.d_model), jnp.dtype(cfg.dtype))
+    t0 = time.perf_counter()
+    gen = serve_batch(cfg, params, prompts, args.new_tokens, extra)
+    dt = time.perf_counter() - t0
+    tps = args.batch * args.new_tokens / dt
+    print(f"[serve] {cfg.name} retention={cfg.retention}: generated {gen.shape} "
+          f"in {dt:.2f}s ({tps:.1f} tok/s); sample: {np.asarray(gen[0])[:8]}")
+    assert np.isfinite(np.asarray(gen)).all()
+
+
+if __name__ == "__main__":
+    main()

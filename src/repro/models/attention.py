@@ -1,0 +1,229 @@
+"""Grouped-query attention with the feature set of the assigned pool.
+
+Supports: GQA (num_kv_heads <= num_heads), rotary embeddings, qk-norm
+(Qwen-3), QKV bias (Qwen-1.5), attention-logit softcap (Gemma-2), causal /
+bidirectional / sliding-window masks, cross-attention (Whisper), and
+single-token decode against a KV cache (full or ring-buffer window cache).
+
+Two execution paths: a pure-jnp path (works everywhere; used by the CPU
+dry-run + smoke tests) and the Pallas flash kernel path
+(``repro.kernels.ops.flash_attention``) for TPU training/prefill.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .layers import apply_rope, dense_init, rms_norm, rotary_embedding, softcap
+from repro.sharding.specs import constrain
+
+__all__ = ["AttnSpec", "init_attention", "attention_fwd", "attention_decode"]
+
+
+@dataclasses.dataclass(frozen=True)
+class AttnSpec:
+    d_model: int
+    num_heads: int
+    num_kv_heads: int
+    head_dim: int
+    qk_norm: bool = False
+    qkv_bias: bool = False
+    logit_softcap: Optional[float] = None
+    window: Optional[int] = None        # sliding-window size (None = full)
+    causal: bool = True                 # False for encoder / cross-attn
+    rope_theta: float = 10000.0
+    use_rope: bool = True
+
+
+def init_attention(key, spec: AttnSpec, dtype=jnp.float32):
+    kq, kk, kv, ko, kb = jax.random.split(key, 5)
+    H, KV, hd, D = spec.num_heads, spec.num_kv_heads, spec.head_dim, spec.d_model
+    p = {
+        "wq": dense_init(kq, D, (H, hd), dtype=dtype),
+        "wk": dense_init(kk, D, (KV, hd), dtype=dtype),
+        "wv": dense_init(kv, D, (KV, hd), dtype=dtype),
+        "wo": dense_init(ko, H * hd, D, scale=1.0 / math.sqrt(H * hd), dtype=dtype).reshape(H, hd, D),
+    }
+    if spec.qkv_bias:
+        p["bq"] = jnp.zeros((H, hd), dtype)
+        p["bk"] = jnp.zeros((KV, hd), dtype)
+        p["bv"] = jnp.zeros((KV, hd), dtype)
+    if spec.qk_norm:
+        p["q_norm"] = jnp.zeros((hd,), dtype)
+        p["k_norm"] = jnp.zeros((hd,), dtype)
+    return p
+
+
+def _project_qkv(params, spec: AttnSpec, x, xkv, q_positions, kv_positions):
+    q = constrain(jnp.einsum("bsd,dhk->bshk", x, params["wq"]), [(0, "batch"), (2, "model")])
+    k = constrain(jnp.einsum("bsd,dhk->bshk", xkv, params["wk"]), [(0, "batch"), (2, "model")])
+    v = constrain(jnp.einsum("bsd,dhk->bshk", xkv, params["wv"]), [(0, "batch"), (2, "model")])
+    if spec.qkv_bias:
+        q = q + params["bq"]
+        k = k + params["bk"]
+        v = v + params["bv"]
+    if spec.qk_norm:
+        q = rms_norm(q, params["q_norm"])
+        k = rms_norm(k, params["k_norm"])
+    if spec.use_rope:
+        sin_q, cos_q = rotary_embedding(q_positions, spec.head_dim, spec.rope_theta)
+        sin_k, cos_k = rotary_embedding(kv_positions, spec.head_dim, spec.rope_theta)
+        q = apply_rope(q, sin_q, cos_q)
+        k = apply_rope(k, sin_k, cos_k)
+    return q, k, v
+
+
+def _mask_bias(spec: AttnSpec, q_pos, kv_pos, dtype):
+    """[q_len, kv_len] additive mask (0 keep / -inf drop)."""
+    neg = jnp.finfo(jnp.float32).min
+    qp = q_pos[:, None]
+    kp = kv_pos[None, :]
+    keep = jnp.ones(qp.shape[:1] + kp.shape[1:], dtype=bool)
+    if spec.causal:
+        keep = keep & (kp <= qp)
+    if spec.window is not None:
+        keep = keep & (kp > qp - spec.window)
+    return jnp.where(keep, 0.0, neg)
+
+
+def _repeat_kv(x, rep):
+    # [b,t,kv,hd] -> [b,t,kv*rep,hd]; keeps scores head-major so the TP axis
+    # shards all H query heads (kv alone rarely divides the model axis).
+    if rep == 1:
+        return x
+    b, t, kv, hd = x.shape
+    return jnp.broadcast_to(x[:, :, :, None, :], (b, t, kv, rep, hd)).reshape(b, t, kv * rep, hd)
+
+
+def _sdpa(spec: AttnSpec, q, k, v, bias):
+    """q:[b,s,h,hd] k/v:[b,t,kv,hd] bias:[s,t] -> [b,s,h,hd]."""
+    b, s, H, hd = q.shape
+    rep = H // k.shape[2]
+    k = _repeat_kv(k.astype(jnp.float32), rep)
+    v = _repeat_kv(v.astype(jnp.float32), rep)
+    scores = jnp.einsum("bshk,bthk->bhst", q.astype(jnp.float32), k)
+    scores = scores / math.sqrt(hd)
+    scores = softcap(scores, spec.logit_softcap)
+    scores = scores + bias
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bhst,bthk->bshk", probs, v)
+    return constrain(out, [(0, "batch"), (2, "model")])
+
+
+def attention_fwd(
+    params,
+    spec: AttnSpec,
+    x: jnp.ndarray,
+    *,
+    xkv: Optional[jnp.ndarray] = None,
+    q_offset: int = 0,
+    q_block: Optional[int] = None,
+) -> Tuple[jnp.ndarray, Tuple[jnp.ndarray, jnp.ndarray]]:
+    """Full-sequence attention (training / prefill).
+
+    ``q_block``: process queries in blocks of this size (scores stay
+    [b, qb, ., s] instead of [b, s, ., s]) — the memory-safe path for long
+    sequences on the jnp backend; the Pallas flash kernel is the TPU
+    fast path.  Returns (output [b,s,d], (k_cache, v_cache)) — caches are the
+    raw post-rope K/V, reusable by ``attention_decode``.
+    """
+    self_attn = xkv is None
+    xkv = x if self_attn else xkv
+    b, s, _ = x.shape
+    t = xkv.shape[1]
+    q_pos = jnp.arange(s) + q_offset
+    kv_pos = jnp.arange(t) + (q_offset if self_attn else 0)
+    q, k, v = _project_qkv(params, spec, x, xkv, q_pos, kv_pos)
+    if q_block is None or s <= q_block or s % q_block != 0:
+        bias = _mask_bias(spec, q_pos, kv_pos, x.dtype)
+        out = _sdpa(spec, q, k, v, bias)
+    else:
+        nq = s // q_block
+        qb = jnp.moveaxis(q.reshape(b, nq, q_block, *q.shape[2:]), 1, 0)
+        pb = q_pos.reshape(nq, q_block)
+
+        def body(_, xs):
+            q_i, pos_i = xs
+            bias_i = _mask_bias(spec, pos_i, kv_pos, x.dtype)
+            return None, _sdpa(spec, q_i, k, v, bias_i)
+
+        _, ob = jax.lax.scan(body, None, (qb, pb))
+        out = jnp.moveaxis(ob, 0, 1).reshape(b, s, *ob.shape[3:])
+    out = jnp.einsum("bshk,hkd->bsd", out.astype(x.dtype), params["wo"])
+    return out, (k, v)
+
+
+def init_cache(spec: AttnSpec, batch: int, max_len: int, dtype):
+    """Ring-buffer KV cache. For windowed layers max_len = window."""
+    if spec.window is not None:
+        max_len = min(max_len, spec.window)
+    shape = (batch, max_len, spec.num_kv_heads, spec.head_dim)
+    return {
+        "k": jnp.zeros(shape, dtype),
+        "v": jnp.zeros(shape, dtype),
+        # absolute position of each slot's token; -1 = empty
+        "pos": jnp.full((batch, max_len), -1, jnp.int32),
+    }
+
+
+def attention_decode(
+    params,
+    spec: AttnSpec,
+    x: jnp.ndarray,           # [b, 1, d]
+    cache,                    # ring-buffer dict from init_cache
+    position: jnp.ndarray,    # scalar int32: absolute position of this token
+):
+    """One-token decode; returns (out [b,1,d], new_cache)."""
+    b = x.shape[0]
+    q_pos = jnp.asarray(position)[None]
+    q, k_new, v_new = _project_qkv(params, spec, x, x, q_pos, q_pos)
+    L = cache["k"].shape[1]
+    slot = jnp.mod(position, L)
+    # ring-buffer write at `slot`
+    k = jax.lax.dynamic_update_slice(cache["k"], k_new, (0, slot, 0, 0))
+    v = jax.lax.dynamic_update_slice(cache["v"], v_new, (0, slot, 0, 0))
+    pos = jax.lax.dynamic_update_slice(
+        cache["pos"], jnp.full((b, 1), position, jnp.int32), (0, slot)
+    )
+    new_cache = {"k": k, "v": v, "pos": pos}
+    # bias from stored absolute positions: keep pos>=0, causal, window
+    neg = jnp.finfo(jnp.float32).min
+    keep = pos >= 0
+    keep = keep & (pos <= position)
+    if spec.window is not None:
+        keep = keep & (pos > position - spec.window)
+    bias = jnp.where(keep, 0.0, neg)  # [b, L]
+    H, KV, hd = spec.num_heads, spec.num_kv_heads, spec.head_dim
+    rep = H // KV
+    kr = _repeat_kv(k.astype(jnp.float32), rep)
+    vr = _repeat_kv(v.astype(jnp.float32), rep)
+    scores = jnp.einsum("bshk,bthk->bhst", q.astype(jnp.float32), kr)
+    scores = scores / math.sqrt(hd)
+    scores = softcap(scores, spec.logit_softcap)
+    scores = scores + bias[:, None, None, :]  # broadcast over h,s
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bhst,bthk->bshk", probs, vr)
+    out = jnp.einsum("bshk,hkd->bsd", out.astype(x.dtype), params["wo"])
+    return out, new_cache
+
+
+def cross_attention_decode(params, spec: AttnSpec, x, enc_k, enc_v):
+    """Decode-time cross-attention: static encoder K/V, no cache update."""
+    b = x.shape[0]
+    q = jnp.einsum("bsd,dhk->bshk", x, params["wq"])
+    if spec.qkv_bias:
+        q = q + params["bq"]
+    if spec.qk_norm:
+        q = rms_norm(q, params["q_norm"])
+    H, KV, hd = spec.num_heads, spec.num_kv_heads, spec.head_dim
+    rep = H // KV
+    kr = _repeat_kv(enc_k.astype(jnp.float32), rep)
+    vr = _repeat_kv(enc_v.astype(jnp.float32), rep)
+    scores = jnp.einsum("bshk,bthk->bhst", q.astype(jnp.float32), kr) / math.sqrt(hd)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bhst,bthk->bshk", probs, vr)
+    return jnp.einsum("bshk,hkd->bsd", out.astype(x.dtype), params["wo"])

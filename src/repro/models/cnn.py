@@ -1,0 +1,301 @@
+"""CNNs for the faithful AdaptCL reproduction: VGG16 + ResNet bottleneck nets.
+
+These carry real BatchNorm scaling factors — the importance signal of
+CIG-BNscalor — and a filter-level prunable unit space.  Parameters are flat
+``{path: array}`` dicts so `core.aggregation` / `core.masks` can slice and
+embed sub-models directly (shapes are read from the arrays, so a reconfigured
+smaller model runs through the same ``cnn_apply``).
+
+Pruning protocol (paper Appendix B): VGG16 — all conv layers prunable, the
+final FC is not; ResNet — the stem conv and the last conv of each residual
+block (and shortcuts) are not pruned, interior convs are.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.masks import UnitLayer, UnitSpace
+
+__all__ = [
+    "CNNConfig",
+    "cnn_flops",
+    "vgg_config",
+    "resnet_config",
+    "VGG16_CIFAR",
+    "VGG11_SMALL",
+    "RESNET50_TINY",
+    "RESNET20_SMALL",
+    "init_cnn",
+    "cnn_apply",
+    "build_unit_space",
+    "extract_bn_scales",
+]
+
+
+@dataclasses.dataclass(frozen=True)
+class CNNConfig:
+    name: str
+    kind: str                      # "vgg" | "resnet"
+    num_classes: int
+    image_size: int
+    # vgg: plan entries are ints (conv width) or "M" (maxpool)
+    plan: Tuple = ()
+    # resnet: stem width + (block_count, width) per stage
+    stem: int = 64
+    stages: Tuple[Tuple[int, int], ...] = ()
+    bottleneck: bool = True
+
+
+def vgg_config(name, plan, num_classes=10, image_size=32) -> CNNConfig:
+    return CNNConfig(name=name, kind="vgg", plan=tuple(plan), num_classes=num_classes, image_size=image_size)
+
+
+def resnet_config(name, stem, stages, num_classes=200, image_size=64, bottleneck=True) -> CNNConfig:
+    return CNNConfig(
+        name=name, kind="resnet", stem=stem, stages=tuple(stages),
+        num_classes=num_classes, image_size=image_size, bottleneck=bottleneck,
+    )
+
+
+VGG16_CIFAR = vgg_config(
+    "vgg16_cifar",
+    [64, 64, "M", 128, 128, "M", 256, 256, 256, "M", 512, 512, 512, "M", 512, 512, 512, "M"],
+)
+# reduced same-family net for fast CPU FL simulation
+VGG11_SMALL = vgg_config("vgg11_small", [16, "M", 32, "M", 64, 64, "M", 64, 64, "M"])
+RESNET50_TINY = resnet_config("resnet50_tiny", 64, [(3, 64), (4, 128), (6, 256), (3, 512)])
+RESNET20_SMALL = resnet_config(
+    "resnet20_small", 16, [(2, 16), (2, 32), (2, 64)], num_classes=10, image_size=32, bottleneck=False
+)
+
+
+# ---------------------------------------------------------------------------
+# init / apply
+# ---------------------------------------------------------------------------
+
+def _conv_init(key, kh, kw, cin, cout):
+    fan_in = kh * kw * cin
+    w = jax.random.truncated_normal(key, -2, 2, (kh, kw, cin, cout), jnp.float32)
+    return w * np.sqrt(2.0 / fan_in)
+
+
+def _conv_names(cfg: CNNConfig) -> List[Tuple[str, int, int, bool]]:
+    """[(name, ksize, stride, prunable)] in order, for vgg plans."""
+    out = []
+    i = 0
+    for entry in cfg.plan:
+        if entry == "M":
+            continue
+        out.append((f"conv{i}", 3, 1, True))
+        i += 1
+    return out
+
+
+def init_cnn(key, cfg: CNNConfig) -> Dict[str, jnp.ndarray]:
+    params: Dict[str, jnp.ndarray] = {}
+    keys = iter(jax.random.split(key, 256))
+
+    def add_conv(name, kh, cin, cout):
+        params[f"{name}/w"] = _conv_init(next(keys), kh, kh, cin, cout)
+        params[f"{name}/bn_g"] = jnp.ones((cout,))
+        params[f"{name}/bn_b"] = jnp.zeros((cout,))
+        return cout
+
+    if cfg.kind == "vgg":
+        cin = 3
+        i = 0
+        for entry in cfg.plan:
+            if entry == "M":
+                continue
+            cin = add_conv(f"conv{i}", 3, cin, int(entry))
+            i += 1
+        params["fc/w"] = (
+            jax.random.truncated_normal(next(keys), -2, 2, (cin, cfg.num_classes), jnp.float32)
+            * np.sqrt(1.0 / cin)
+        )
+        params["fc/b"] = jnp.zeros((cfg.num_classes,))
+    else:  # resnet
+        cin = add_conv("stem", 3, 3, cfg.stem)
+        for si, (nblocks, width) in enumerate(cfg.stages):
+            for bi in range(nblocks):
+                pre = f"s{si}b{bi}"
+                out_w = width * (4 if cfg.bottleneck else 1)
+                if cfg.bottleneck:
+                    add_conv(f"{pre}/c1", 1, cin, width)
+                    add_conv(f"{pre}/c2", 3, width, width)
+                    add_conv(f"{pre}/c3", 1, width, out_w)
+                else:
+                    add_conv(f"{pre}/c1", 3, cin, width)
+                    add_conv(f"{pre}/c2", 3, width, out_w)
+                if cin != out_w:
+                    add_conv(f"{pre}/sc", 1, cin, out_w)
+                cin = out_w
+        params["fc/w"] = (
+            jax.random.truncated_normal(next(keys), -2, 2, (cin, cfg.num_classes), jnp.float32)
+            * np.sqrt(1.0 / cin)
+        )
+        params["fc/b"] = jnp.zeros((cfg.num_classes,))
+    return params
+
+
+def _conv(x, w, stride=1):
+    return jax.lax.conv_general_dilated(
+        x, w, (stride, stride), "SAME", dimension_numbers=("NHWC", "HWIO", "NHWC")
+    )
+
+
+def _bn(x, g, b, eps=1e-5):
+    mu = x.mean(axis=(0, 1, 2))
+    var = x.var(axis=(0, 1, 2))
+    return (x - mu) * jax.lax.rsqrt(var + eps) * g + b
+
+
+def _cbr(params, name, x, stride=1, relu=True):
+    x = _conv(x, params[f"{name}/w"], stride)
+    x = _bn(x, params[f"{name}/bn_g"], params[f"{name}/bn_b"])
+    return jax.nn.relu(x) if relu else x
+
+
+def cnn_apply(
+    params: Dict[str, jnp.ndarray], cfg: CNNConfig, x: jnp.ndarray,
+    stats: dict | None = None,
+) -> jnp.ndarray:
+    """x: [b, h, w, 3] -> logits [b, classes]. Shapes come from the params.
+
+    If ``stats`` (a dict) is passed, per-conv mean|activation| per filter is
+    recorded into it — the data-dependent signal for the HRank-style
+    importance baseline (Fig. 2 reproduction).
+    """
+
+    def rec(name, h):
+        if stats is not None:
+            stats[name] = jnp.abs(h).mean(axis=(0, 1, 2))
+        return h
+
+    if cfg.kind == "vgg":
+        i = 0
+        for entry in cfg.plan:
+            if entry == "M":
+                x = jax.lax.reduce_window(
+                    x, -jnp.inf, jax.lax.max, (1, 2, 2, 1), (1, 2, 2, 1), "VALID"
+                )
+            else:
+                x = rec(f"conv{i}", _cbr(params, f"conv{i}", x))
+                i += 1
+        x = x.mean(axis=(1, 2))
+    else:
+        x = _cbr(params, "stem", x)
+        for si, (nblocks, width) in enumerate(cfg.stages):
+            for bi in range(nblocks):
+                pre = f"s{si}b{bi}"
+                stride = 2 if (bi == 0 and si > 0) else 1
+                h = rec(f"{pre}/c1", _cbr(params, f"{pre}/c1", x, stride))
+                if cfg.bottleneck:
+                    h = rec(f"{pre}/c2", _cbr(params, f"{pre}/c2", h))
+                    h = _cbr(params, f"{pre}/c3", h, relu=False)
+                else:
+                    h = _cbr(params, f"{pre}/c2", h, relu=False)
+                if f"{pre}/sc/w" in params:
+                    x = _cbr(params, f"{pre}/sc", x, stride, relu=False)
+                elif stride != 1:
+                    x = x[:, ::stride, ::stride, :]
+                x = jax.nn.relu(x + h)
+        x = x.mean(axis=(1, 2))
+    return x @ params["fc/w"] + params["fc/b"]
+
+
+def cnn_flops(params: Dict, cfg: CNNConfig) -> float:
+    """Per-image forward FLOPs of the (possibly reconfigured) model."""
+    total = 0.0
+    hw = cfg.image_size
+    if cfg.kind == "vgg":
+        i = 0
+        for entry in cfg.plan:
+            if entry == "M":
+                hw //= 2
+            else:
+                w = params[f"conv{i}/w"]
+                total += 2.0 * hw * hw * int(np.prod(w.shape))
+                i += 1
+    else:
+        w = params["stem/w"]
+        total += 2.0 * hw * hw * int(np.prod(w.shape))
+        for si, (nblocks, _) in enumerate(cfg.stages):
+            for bi in range(nblocks):
+                if bi == 0 and si > 0:
+                    hw //= 2
+                pre = f"s{si}b{bi}"
+                for c in ("c1", "c2", "c3", "sc"):
+                    key = f"{pre}/{c}/w"
+                    if key in params:
+                        total += 2.0 * hw * hw * int(np.prod(params[key].shape))
+    total += 2.0 * int(np.prod(params["fc/w"].shape))
+    return total
+
+
+# ---------------------------------------------------------------------------
+# prunable unit metadata
+# ---------------------------------------------------------------------------
+
+def _prunable_convs(cfg: CNNConfig) -> List[Tuple[str, int, str]]:
+    """[(conv_name, width, next_consumer)] — convs whose OUTPUT filters prune."""
+    out = []
+    if cfg.kind == "vgg":
+        convs = [e for e in cfg.plan if e != "M"]
+        for i, w in enumerate(convs):
+            nxt = f"conv{i+1}" if i + 1 < len(convs) else "fc"
+            out.append((f"conv{i}", int(w), nxt))
+    else:
+        # interior convs only (paper: keep stem, block-last conv, shortcuts)
+        for si, (nblocks, width) in enumerate(cfg.stages):
+            for bi in range(nblocks):
+                pre = f"s{si}b{bi}"
+                if cfg.bottleneck:
+                    out.append((f"{pre}/c1", width, f"{pre}/c2"))
+                    out.append((f"{pre}/c2", width, f"{pre}/c3"))
+                else:
+                    out.append((f"{pre}/c1", width, f"{pre}/c2"))
+    return out
+
+
+def build_unit_space(cfg: CNNConfig, params) -> Tuple[UnitSpace, Dict[str, list]]:
+    """Returns (UnitSpace, unit_map path->[(unit_layer, axis)])."""
+    unit_map: Dict[str, list] = {}
+    layers = []
+    prunable = _prunable_convs(cfg)
+    prunable_names = {n for n, _, _ in prunable}
+    for name, width, nxt in prunable:
+        w = params[f"{name}/w"]
+        kh, kw, cin, cout = w.shape
+        # per-filter cost: own kernel column + bn(2) + consumer input slice
+        cost = kh * kw * cin + 2
+        if nxt == "fc":
+            cost += params["fc/w"].shape[1]
+        else:
+            nw = params[f"{nxt}/w"]
+            cost += nw.shape[0] * nw.shape[1] * nw.shape[3]
+        layers.append(UnitLayer(name=name, num_units=cout, unit_param_cost=int(cost), min_units=2))
+        unit_map.setdefault(f"{name}/w", []).append((name, 3))
+        unit_map.setdefault(f"{name}/bn_g", []).append((name, 0))
+        unit_map.setdefault(f"{name}/bn_b", []).append((name, 0))
+        if nxt == "fc":
+            unit_map.setdefault("fc/w", []).append((name, 0))
+        else:
+            unit_map.setdefault(f"{nxt}/w", []).append((name, 2))
+    total = sum(int(np.prod(v.shape)) for v in params.values())
+    prunable_mass = sum(l.num_units * l.unit_param_cost for l in layers)
+    space = UnitSpace(layers=tuple(layers), fixed_params=total - prunable_mass)
+    return space, unit_map
+
+
+def extract_bn_scales(params, cfg: CNNConfig) -> Dict[str, np.ndarray]:
+    """|BN gamma| per prunable filter — the CIG-BNscalor signal (§III-D)."""
+    return {
+        name: np.abs(np.asarray(params[f"{name}/bn_g"], np.float64))
+        for name, _, _ in _prunable_convs(cfg)
+    }

@@ -1,0 +1,49 @@
+"""Feed-forward layers: gated (SwiGLU/GeGLU) and plain MLP.
+
+The hidden dimension d_ff is a prunable unit axis for AdaptCL: every hidden
+unit owns one column of w_gate/w_up and one row of w_down — a "group" in the
+group-lasso sense (Eq. 1).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from .layers import dense_init, gelu, silu
+from repro.sharding.specs import constrain
+
+__all__ = ["FFNSpec", "init_ffn", "ffn_fwd"]
+
+
+@dataclasses.dataclass(frozen=True)
+class FFNSpec:
+    d_model: int
+    d_ff: int
+    gated: bool = True          # SwiGLU (llama-family) vs plain 2-layer MLP
+    activation: str = "silu"    # "silu" | "gelu"
+
+
+def init_ffn(key, spec: FFNSpec, dtype=jnp.float32):
+    kg, ku, kd = jax.random.split(key, 3)
+    p = {
+        "w_up": dense_init(ku, spec.d_model, spec.d_ff, dtype=dtype),
+        "w_down": dense_init(kd, spec.d_ff, spec.d_model, dtype=dtype),
+    }
+    if spec.gated:
+        p["w_gate"] = dense_init(kg, spec.d_model, spec.d_ff, dtype=dtype)
+    return p
+
+
+def ffn_fwd(params, spec: FFNSpec, x: jnp.ndarray) -> jnp.ndarray:
+    act = silu if spec.activation == "silu" else gelu
+    up = jnp.einsum("bsd,df->bsf", x, params["w_up"])
+    if spec.gated:
+        gate = jnp.einsum("bsd,df->bsf", x, params["w_gate"])
+        h = act(gate) * up
+    else:
+        h = act(up)
+    h = constrain(h, [(0, "batch"), (2, "model")])
+    return constrain(jnp.einsum("bsf,fd->bsd", h, params["w_down"]), [(0, "batch")])

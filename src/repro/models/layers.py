@@ -1,0 +1,87 @@
+"""Shared neural-net building blocks (pure JAX, functional).
+
+Parameters are nested dicts of jnp arrays.  Initializers take an explicit
+``jax.random`` key.  Everything here is shape-polymorphic over batch/seq and
+dtype-polymorphic (params may be f32 for the FL simulation or bf16 for the
+production dry-run).
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+__all__ = [
+    "dense_init",
+    "rms_norm",
+    "layer_norm",
+    "softcap",
+    "rotary_embedding",
+    "apply_rope",
+    "gelu",
+    "silu",
+]
+
+
+def dense_init(key, in_dim: int, out_shape, scale: float | None = None, dtype=jnp.float32):
+    """Truncated-normal fan-in init (LeCun-ish), matmul weight of shape
+    (in_dim, *out_shape)."""
+    if scale is None:
+        scale = 1.0 / math.sqrt(in_dim)
+    shape = (in_dim, *out_shape) if isinstance(out_shape, tuple) else (in_dim, out_shape)
+    return (jax.random.truncated_normal(key, -2.0, 2.0, shape, jnp.float32) * scale).astype(dtype)
+
+
+def rms_norm(x: jnp.ndarray, scale: jnp.ndarray, eps: float = 1e-6) -> jnp.ndarray:
+    """RMSNorm with (1+scale) parameterization (Gemma-style: init scale=0)."""
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    x = x * jax.lax.rsqrt(var + eps)
+    return (x * (1.0 + scale.astype(jnp.float32))).astype(dt)
+
+
+def layer_norm(x, scale, bias, eps: float = 1e-5):
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.var(x, axis=-1, keepdims=True)
+    x = (x - mu) * jax.lax.rsqrt(var + eps)
+    return (x * scale.astype(jnp.float32) + bias.astype(jnp.float32)).astype(dt)
+
+
+def softcap(x: jnp.ndarray, cap: Optional[float]) -> jnp.ndarray:
+    """Gemma-2 logit soft-capping: cap * tanh(x / cap)."""
+    if cap is None:
+        return x
+    return cap * jnp.tanh(x / cap)
+
+
+def rotary_embedding(positions: jnp.ndarray, head_dim: int, theta: float = 10000.0):
+    """Return (sin, cos) of shape [..., head_dim/2] for given positions."""
+    freqs = 1.0 / (
+        theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim)
+    )
+    angles = positions.astype(jnp.float32)[..., None] * freqs  # [..., hd/2]
+    return jnp.sin(angles), jnp.cos(angles)
+
+
+def apply_rope(x: jnp.ndarray, sin: jnp.ndarray, cos: jnp.ndarray) -> jnp.ndarray:
+    """x: [..., seq, heads, head_dim]; sin/cos: [..., seq, head_dim/2]."""
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    x1, x2 = jnp.split(x, 2, axis=-1)
+    sin = sin[..., :, None, :]
+    cos = cos[..., :, None, :]
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(dt)
+
+
+def gelu(x):
+    return jax.nn.gelu(x, approximate=True)
+
+
+def silu(x):
+    return jax.nn.silu(x)

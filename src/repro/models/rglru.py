@@ -1,0 +1,128 @@
+"""RecurrentGemma / Griffin recurrent block: conv1d + RG-LRU (arXiv:2402.19427).
+
+RG-LRU recurrence (per channel):
+    r_t = sigmoid(W_a x_t)          # recurrence gate
+    i_t = sigmoid(W_x x_t)          # input gate
+    a_t = exp(-c * softplus(Lambda) * r_t)
+    h_t = a_t * h_{t-1} + sqrt(1 - a_t^2) * (i_t * x_t)
+
+Train/prefill uses ``jax.lax.associative_scan`` over the sequence — a
+log-depth combinator tree, deliberately NOT a ``while`` loop so that XLA
+cost_analysis attributes the full sequence cost (see DESIGN.md roofline
+notes).  Decode carries the [b, dr] state one step.  TPU adaptation: the
+original GPU implementation uses a custom linear-scan kernel; our Pallas
+``rg_lru_scan`` kernel covers the sequential-block variant, the jnp path here
+is the oracle-equivalent associative form.
+
+Gates are block-diagonal over heads as in Griffin.  Prunable units are
+*recurrent head groups* (dr/heads channels each).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .layers import dense_init, gelu
+
+__all__ = ["RGLRUSpec", "init_rglru", "rglru_fwd", "rglru_decode", "init_rglru_state"]
+
+_C = 8.0  # Griffin's fixed temperature on the recurrence gate
+
+
+@dataclasses.dataclass(frozen=True)
+class RGLRUSpec:
+    d_model: int
+    d_rnn: int               # lru width
+    num_heads: int           # block-diagonal gate heads
+    conv_width: int = 4
+
+
+def init_rglru(key, spec: RGLRUSpec, dtype=jnp.float32):
+    ky, kx, kc, ka, kb, ko, kl = jax.random.split(key, 7)
+    D, R, H = spec.d_model, spec.d_rnn, spec.num_heads
+    hw = R // H
+    # Lambda init so that a = exp(-c*softplus(L)) spreads over (0.9, 0.999)
+    u = jax.random.uniform(kl, (R,), jnp.float32, 0.9**2, 0.999**2)
+    lam = jnp.log(jnp.exp(-jnp.log(u) / (2 * _C)) - 1.0)  # softplus^-1(-log(u)/(2c))
+    return {
+        "w_y": dense_init(ky, D, R, dtype=dtype),            # gate branch in
+        "w_x": dense_init(kx, D, R, dtype=dtype),            # recurrent branch in
+        "conv": (jax.random.normal(kc, (spec.conv_width, R), jnp.float32) * 0.02).astype(dtype),
+        "gate_a": (jax.random.normal(ka, (H, hw, hw), jnp.float32) / math.sqrt(hw)).astype(dtype),
+        "gate_x": (jax.random.normal(kb, (H, hw, hw), jnp.float32) / math.sqrt(hw)).astype(dtype),
+        "lam": lam.astype(jnp.float32),                      # keep f32 (stability)
+        "w_out": dense_init(ko, R, D, dtype=dtype),
+    }
+
+
+def _causal_conv(x, kernel):
+    """Depthwise causal conv over seq: x [b,s,r], kernel [w,r]."""
+    w = kernel.shape[0]
+    xp = jnp.pad(x, ((0, 0), (w - 1, 0), (0, 0)))
+    out = sum(
+        xp[:, i : i + x.shape[1], :] * kernel[i][None, None, :] for i in range(w)
+    )
+    return out
+
+
+def _gates(x, params, spec: RGLRUSpec):
+    """Block-diagonal gate projections; x [.., s, r] -> (r_t, i_t)."""
+    H = spec.num_heads
+    hw = x.shape[-1] // H
+    xh = x.reshape(*x.shape[:-1], H, hw)
+    r = jax.nn.sigmoid(jnp.einsum("...hi,hij->...hj", xh, params["gate_a"]))
+    i = jax.nn.sigmoid(jnp.einsum("...hi,hij->...hj", xh, params["gate_x"]))
+    return r.reshape(x.shape), i.reshape(x.shape)
+
+
+def _lru_coeffs(params, x_branch, spec: RGLRUSpec):
+    r, i = _gates(x_branch, params, spec)
+    log_a = -_C * jax.nn.softplus(params["lam"]) * r.astype(jnp.float32)
+    a = jnp.exp(log_a)
+    # sqrt(1 - a^2) with numerical floor
+    beta = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-12))
+    b = beta * (i.astype(jnp.float32) * x_branch.astype(jnp.float32))
+    return a, b
+
+
+def init_rglru_state(spec: RGLRUSpec, batch: int, dtype=jnp.float32):
+    return {
+        "h": jnp.zeros((batch, spec.d_rnn), jnp.float32),
+        "conv": jnp.zeros((batch, spec.conv_width - 1, spec.d_rnn), dtype),
+    }
+
+
+def rglru_fwd(params, spec: RGLRUSpec, x: jnp.ndarray):
+    """Full-sequence forward. x [b,s,d] -> ([b,s,d], final_state)."""
+    y = gelu(jnp.einsum("bsd,dr->bsr", x, params["w_y"]))
+    xr = jnp.einsum("bsd,dr->bsr", x, params["w_x"])
+    conv_tail = xr[:, -(spec.conv_width - 1) :, :]
+    xr = _causal_conv(xr, params["conv"])
+    a, b = _lru_coeffs(params, xr, spec)
+
+    def combine(c1, c2):
+        a1, b1 = c1
+        a2, b2 = c2
+        return a1 * a2, a2 * b1 + b2
+
+    _, h = jax.lax.associative_scan(combine, (a, b), axis=1)
+    out = jnp.einsum("bsr,rd->bsd", (h * y.astype(jnp.float32)).astype(x.dtype), params["w_out"])
+    state = {"h": h[:, -1, :], "conv": conv_tail}
+    return out, state
+
+
+def rglru_decode(params, spec: RGLRUSpec, x: jnp.ndarray, state):
+    """One-token decode. x [b,1,d] -> ([b,1,d], new_state)."""
+    y = gelu(jnp.einsum("bsd,dr->bsr", x, params["w_y"]))
+    xr = jnp.einsum("bsd,dr->bsr", x, params["w_x"])          # [b,1,r]
+    window = jnp.concatenate([state["conv"], xr], axis=1)     # [b,w,r]
+    kernel = params["conv"]
+    xc = jnp.einsum("bwr,wr->br", window, kernel)[:, None, :]
+    a, b = _lru_coeffs(params, xc, spec)
+    h = a[:, 0] * state["h"] + b[:, 0]
+    out = jnp.einsum("bsr,rd->bsd", (h[:, None] * y.astype(jnp.float32)).astype(x.dtype), params["w_out"])
+    return out, {"h": h, "conv": window[:, 1:, :]}

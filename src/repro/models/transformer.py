@@ -1,0 +1,531 @@
+"""Model assembly: decoder-only LMs, enc-dec (Whisper), hybrid/SSM stacks.
+
+Layer stacking: full periods of ``cfg.block_pattern`` are parameter-stacked
+and driven by ``lax.scan`` (small HLO — essential for 512-device CPU
+compiles); remainder layers are unrolled.  Each scan body is rematerialized
+(``jax.checkpoint``) when ``cfg.remat``.
+
+Three entry points per model:
+  * ``forward(params, cfg, batch)``          -> logits              (train)
+  * ``prefill(params, cfg, batch)``          -> (logits, state)     (inference)
+  * ``decode_step(params, cfg, state, tok, pos)`` -> (logits, state)
+
+The decode state is a pytree of ring-buffer KV caches / recurrent states,
+stacked over scan groups exactly like the parameters.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from . import attention as attn_mod
+from . import ffn as ffn_mod
+from . import moe as moe_mod
+from . import rglru as rglru_mod
+from . import xlstm as xlstm_mod
+from .attention import AttnSpec
+from .config import ModelConfig
+from .ffn import FFNSpec
+from .layers import layer_norm, rms_norm, softcap
+from .moe import MoESpec
+from .rglru import RGLRUSpec
+from .xlstm import XLSTMSpec
+from repro.sharding.specs import constrain
+
+__all__ = [
+    "init_params",
+    "forward",
+    "lm_loss",
+    "prefill",
+    "init_decode_state",
+    "decode_step",
+]
+
+
+# --------------------------------------------------------------------------
+# specs per block kind
+# --------------------------------------------------------------------------
+
+def _attn_spec(cfg: ModelConfig, kind: str, causal: bool = True) -> AttnSpec:
+    return AttnSpec(
+        d_model=cfg.d_model,
+        num_heads=cfg.num_heads,
+        num_kv_heads=cfg.num_kv_heads,
+        head_dim=cfg.resolved_head_dim,
+        qk_norm=cfg.qk_norm,
+        qkv_bias=cfg.qkv_bias,
+        logit_softcap=cfg.attn_softcap,
+        window=cfg.window_size if kind in ("local", "moe_local") else None,
+        causal=causal,
+        rope_theta=cfg.rope_theta,
+        use_rope=cfg.pos_embed == "rope",
+    )
+
+
+def _ffn_spec(cfg: ModelConfig) -> FFNSpec:
+    return FFNSpec(cfg.d_model, cfg.d_ff, gated=cfg.gated_ffn, activation=cfg.activation)
+
+
+def _moe_spec(cfg: ModelConfig) -> MoESpec:
+    return MoESpec(
+        d_model=cfg.d_model,
+        num_experts=cfg.num_experts,
+        num_experts_per_tok=cfg.experts_per_tok,
+        d_ff=cfg.d_ff,
+        capacity_factor=cfg.moe_capacity_factor,
+        shared_expert=cfg.shared_expert,
+    )
+
+
+def _rglru_spec(cfg: ModelConfig) -> RGLRUSpec:
+    return RGLRUSpec(cfg.d_model, cfg.rnn_width or cfg.d_model, cfg.rnn_heads)
+
+
+def _xlstm_spec(cfg: ModelConfig) -> XLSTMSpec:
+    return XLSTMSpec(cfg.d_model, cfg.num_heads, cfg.xlstm_proj_factor,
+                     t_block=cfg.attn_q_block)
+
+
+def _dtype(cfg: ModelConfig):
+    return jnp.dtype(cfg.dtype)
+
+
+# --------------------------------------------------------------------------
+# init
+# --------------------------------------------------------------------------
+
+def _init_norm(cfg: ModelConfig, dtype):
+    if cfg.norm_style == "layernorm":
+        return {"scale": jnp.ones((cfg.d_model,), dtype), "bias": jnp.zeros((cfg.d_model,), dtype)}
+    return {"scale": jnp.zeros((cfg.d_model,), dtype)}
+
+
+def _apply_norm(cfg: ModelConfig, p, x):
+    if cfg.norm_style == "layernorm":
+        return layer_norm(x, p["scale"], p["bias"])
+    return rms_norm(x, p["scale"])
+
+
+def _init_block(key, cfg: ModelConfig, kind: str, dtype, causal: bool = True, cross: bool = False):
+    keys = jax.random.split(key, 6)
+    if kind in ("attn", "local", "moe", "moe_local"):
+        p = {
+            "ln1": _init_norm(cfg, dtype),
+            "attn": attn_mod.init_attention(keys[0], _attn_spec(cfg, kind, causal), dtype),
+            "ln2": _init_norm(cfg, dtype),
+        }
+        if kind in ("moe", "moe_local"):
+            p["moe"] = moe_mod.init_moe(keys[1], _moe_spec(cfg), dtype)
+        else:
+            p["ffn"] = ffn_mod.init_ffn(keys[1], _ffn_spec(cfg), dtype)
+        if cross:
+            xspec = _attn_spec(cfg, "attn", causal=False)
+            p["lnx"] = _init_norm(cfg, dtype)
+            p["xattn"] = attn_mod.init_attention(keys[2], xspec, dtype)
+        return p
+    if kind == "rglru":
+        return {
+            "ln1": _init_norm(cfg, dtype),
+            "rglru": rglru_mod.init_rglru(keys[0], _rglru_spec(cfg), dtype),
+            "ln2": _init_norm(cfg, dtype),
+            "ffn": ffn_mod.init_ffn(keys[1], _ffn_spec(cfg), dtype),
+        }
+    if kind == "mlstm":
+        return {"ln": _init_norm(cfg, dtype), "cell": xlstm_mod.init_mlstm(keys[0], _xlstm_spec(cfg), dtype)}
+    if kind == "slstm":
+        return {"ln": _init_norm(cfg, dtype), "cell": xlstm_mod.init_slstm(keys[0], _xlstm_spec(cfg), dtype)}
+    raise ValueError(f"unknown block kind {kind}")
+
+
+def _split_layers(cfg: ModelConfig) -> Tuple[int, List[str]]:
+    """(num_full_groups, remainder_kinds)."""
+    period = len(cfg.block_pattern)
+    if not cfg.scan_layers:
+        return 0, list(cfg.layer_kinds())
+    g = cfg.num_layers // period
+    rem = list(cfg.layer_kinds()[g * period :])
+    return g, rem
+
+
+def init_params(key, cfg: ModelConfig) -> Dict[str, Any]:
+    dtype = _dtype(cfg)
+    keys = jax.random.split(key, 8)
+    params: Dict[str, Any] = {}
+    params["embed"] = (
+        jax.random.normal(keys[0], (cfg.vocab_size, cfg.d_model), jnp.float32) * 0.02
+    ).astype(dtype)
+    if cfg.pos_embed == "learned":
+        params["pos_embed"] = (
+            jax.random.normal(keys[1], (cfg.max_position, cfg.d_model), jnp.float32) * 0.01
+        ).astype(dtype)
+    g, rem = _split_layers(cfg)
+    cross = cfg.encoder_layers > 0
+    if g > 0:
+        def one_group(k):
+            ks = jax.random.split(k, len(cfg.block_pattern))
+            return {
+                f"s{j}": _init_block(ks[j], cfg, kind, dtype, cross=cross)
+                for j, kind in enumerate(cfg.block_pattern)
+            }
+        gkeys = jax.random.split(keys[2], g)
+        groups = [one_group(gkeys[i]) for i in range(g)]
+        params["blocks"] = jax.tree.map(lambda *xs: jnp.stack(xs), *groups)
+    if rem:
+        rkeys = jax.random.split(keys[3], len(rem))
+        params["rem"] = [
+            _init_block(rkeys[i], cfg, kind, dtype, cross=cross) for i, kind in enumerate(rem)
+        ]
+    params["final_norm"] = _init_norm(cfg, dtype)
+    if not cfg.tie_embeddings:
+        params["lm_head"] = (
+            jax.random.normal(keys[4], (cfg.d_model, cfg.vocab_size), jnp.float32) * 0.02
+        ).astype(dtype)
+    if cfg.encoder_layers:
+        ekeys = jax.random.split(keys[5], cfg.encoder_layers + 2)
+        params["enc_blocks"] = jax.tree.map(
+            lambda *xs: jnp.stack(xs),
+            *[
+                {"s0": _init_block(ekeys[i], cfg, "attn", dtype, causal=False)}
+                for i in range(cfg.encoder_layers)
+            ],
+        )
+        params["enc_norm"] = _init_norm(cfg, dtype)
+        params["enc_pos"] = (
+            jax.random.normal(ekeys[-1], (cfg.max_position, cfg.d_model), jnp.float32) * 0.01
+        ).astype(dtype)
+    return params
+
+
+# --------------------------------------------------------------------------
+# block application (full-sequence)
+# --------------------------------------------------------------------------
+
+def _block_fwd(cfg: ModelConfig, kind: str, p, x, enc_out, collect_cache: bool,
+               cache_len: int = 0):
+    """Returns (x, aux_loss, cache_or_None)."""
+    aux = jnp.zeros((), jnp.float32)
+    cache = None
+    if kind in ("attn", "local", "moe", "moe_local"):
+        spec = _attn_spec(cfg, kind)
+        h, (k, v) = attn_mod.attention_fwd(
+            p["attn"], spec, _apply_norm(cfg, p["ln1"], x), q_block=cfg.attn_q_block
+        )
+        x = x + h
+        if "xattn" in p:
+            xh, _ = attn_mod.attention_fwd(
+                p["xattn"], _attn_spec(cfg, "attn", causal=False),
+                _apply_norm(cfg, p["lnx"], x), xkv=enc_out, q_block=cfg.attn_q_block,
+            )
+            x = x + xh
+        if kind in ("moe", "moe_local"):
+            h, aux = moe_mod.moe_fwd(p["moe"], _moe_spec(cfg), _apply_norm(cfg, p["ln2"], x))
+        else:
+            h = ffn_mod.ffn_fwd(p["ffn"], _ffn_spec(cfg), _apply_norm(cfg, p["ln2"], x))
+        x = x + h
+        if collect_cache:
+            cache = _ringify(cfg, kind, k, v, p, enc_out, cache_len)
+    elif kind == "rglru":
+        h, state = rglru_mod.rglru_fwd(p["rglru"], _rglru_spec(cfg), _apply_norm(cfg, p["ln1"], x))
+        x = x + h
+        h = ffn_mod.ffn_fwd(p["ffn"], _ffn_spec(cfg), _apply_norm(cfg, p["ln2"], x))
+        x = x + h
+        if collect_cache:
+            cache = state
+    elif kind == "mlstm":
+        h, state = xlstm_mod.mlstm_fwd(p["cell"], _xlstm_spec(cfg), _apply_norm(cfg, p["ln"], x))
+        x = x + h
+        if collect_cache:
+            cache = state
+    elif kind == "slstm":
+        h, state = xlstm_mod.slstm_fwd(p["cell"], _xlstm_spec(cfg), _apply_norm(cfg, p["ln"], x))
+        x = x + h
+        if collect_cache:
+            cache = state
+    else:
+        raise ValueError(kind)
+    return x, aux, cache
+
+
+def _ringify(cfg: ModelConfig, kind: str, k, v, p, enc_out, cache_len: int):
+    """Convert prefill K/V into the ring-buffer decode cache.
+
+    ``cache_len`` is the total capacity (prefill length + decode headroom);
+    windowed layers clamp it to the window so the ring rotates.
+    """
+    spec = _attn_spec(cfg, kind)
+    b, s = k.shape[0], k.shape[1]
+    L = min(cache_len, spec.window) if spec.window is not None else cache_len
+    if s >= L:
+        # keep the last L entries; their slots are pos % L (ring semantics)
+        k_tail, v_tail = k[:, -L:], v[:, -L:]
+        tail_pos = jnp.arange(s - L, s, dtype=jnp.int32)
+        slots = jnp.mod(tail_pos, L)
+        order = jnp.argsort(slots)
+        kk = jnp.take(k_tail, order, axis=1)
+        vv = jnp.take(v_tail, order, axis=1)
+        pos = jnp.broadcast_to(jnp.take(tail_pos, order)[None], (b, L))
+    else:
+        pad = L - s
+        kk = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        vv = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        pos = jnp.concatenate(
+            [jnp.arange(s, dtype=jnp.int32), jnp.full((pad,), -1, jnp.int32)]
+        )
+        pos = jnp.broadcast_to(pos[None], (b, L))
+    cache = {"k": kk, "v": vv, "pos": pos}
+    if "xattn" in p:
+        xs = _attn_spec(cfg, "attn", causal=False)
+        # static encoder K/V for cross attention
+        kx = jnp.einsum("btd,dhk->bthk", enc_out, p["xattn"]["wk"])
+        vx = jnp.einsum("btd,dhk->bthk", enc_out, p["xattn"]["wv"])
+        cache = {"self": cache, "cross_k": kx, "cross_v": vx}
+    return cache
+
+
+# --------------------------------------------------------------------------
+# full-sequence forward (train / prefill)
+# --------------------------------------------------------------------------
+
+def _embed_inputs(params, cfg: ModelConfig, batch):
+    tokens = batch["tokens"]
+    x = jnp.take(params["embed"], tokens, axis=0)
+    if cfg.embed_scale:
+        x = x * jnp.asarray(cfg.d_model**0.5, x.dtype)
+    if cfg.num_prefix_embeds and "prefix_embeds" in batch:
+        x = jnp.concatenate([batch["prefix_embeds"].astype(x.dtype), x], axis=1)
+    if cfg.pos_embed == "learned":
+        s = x.shape[1]
+        x = x + params["pos_embed"][:s][None]
+    return constrain(x, [(0, "batch")])
+
+
+def _run_encoder(params, cfg: ModelConfig, enc_embeds):
+    x = enc_embeds.astype(_dtype(cfg))
+    s = x.shape[1]
+    x = x + params["enc_pos"][:s][None]
+
+    def body(carry, gp):
+        h, _, _ = _block_fwd(cfg, "attn", gp["s0"], constrain(carry, [(0, "batch")]), None, False)
+        return constrain(h, [(0, "batch")]), None
+
+    if cfg.remat:
+        body = jax.checkpoint(body)
+    x, _ = jax.lax.scan(body, x, params["enc_blocks"])
+    return _apply_norm(cfg, params["enc_norm"], x)
+
+
+def _stack_fwd(params, cfg: ModelConfig, x, enc_out, collect_cache: bool,
+               cache_len: int = 0):
+    """Run all layers; returns (x, total_aux, caches dict)."""
+    g, rem = _split_layers(cfg)
+    caches: Dict[str, Any] = {}
+    aux_total = jnp.zeros((), jnp.float32)
+    if g > 0:
+        boundary = [(0, "batch"), (1, "model")] if cfg.seq_shard_activations else [(0, "batch")]
+
+        def body(carry, gp):
+            h, aux_acc = carry
+            h = constrain(h, boundary)
+            group_caches = {}
+            for j, kind in enumerate(cfg.block_pattern):
+                h, aux, cache = _block_fwd(cfg, kind, gp[f"s{j}"], h, enc_out, collect_cache, cache_len)
+                aux_acc = aux_acc + aux
+                if collect_cache:
+                    group_caches[f"s{j}"] = cache
+            h = constrain(h, boundary)
+            return (h, aux_acc), (group_caches if collect_cache else None)
+
+        if cfg.remat:
+            body = jax.checkpoint(body)
+        (x, aux_total), scan_caches = jax.lax.scan(body, (x, aux_total), params["blocks"])
+        if collect_cache:
+            caches["blocks"] = scan_caches
+    for i, kind in enumerate(rem):
+        fwd = _block_fwd
+        if cfg.remat and not collect_cache:
+            fwd = jax.checkpoint(_block_fwd, static_argnums=(0, 1, 5, 6))
+        x, aux, cache = fwd(cfg, kind, params["rem"][i], x, enc_out, collect_cache, cache_len)
+        aux_total = aux_total + aux
+        if collect_cache:
+            caches.setdefault("rem", []).append(cache)
+    return x, aux_total, caches
+
+
+def _logits(params, cfg: ModelConfig, x):
+    head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    logits = jnp.einsum("bsd,dv->bsv", constrain(x, [(0, "batch")]), head)
+    logits = constrain(logits, [(0, "batch"), (2, "model")])
+    logits = softcap(logits.astype(jnp.float32), cfg.final_softcap)
+    if cfg.vocab_size_real is not None and cfg.vocab_size_real < cfg.vocab_size:
+        # vocab was padded up for model-axis divisibility; mask the padding
+        mask = jnp.arange(cfg.vocab_size) >= cfg.vocab_size_real
+        logits = jnp.where(mask, jnp.float32(-1e30), logits)
+    return logits
+
+
+def forward(params, cfg: ModelConfig, batch) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Training forward. Returns (logits [b, s_text, V], aux_loss)."""
+    enc_out = None
+    if cfg.encoder_layers:
+        enc_out = _run_encoder(params, cfg, batch["enc_embeds"])
+    x = _embed_inputs(params, cfg, batch)
+    x, aux, _ = _stack_fwd(params, cfg, x, enc_out, collect_cache=False)
+    x = _apply_norm(cfg, params["final_norm"], x)
+    if cfg.num_prefix_embeds and "prefix_embeds" in batch:
+        x = x[:, batch["prefix_embeds"].shape[1] :]
+    return _logits(params, cfg, x), aux
+
+
+def lm_loss(params, cfg: ModelConfig, batch) -> jnp.ndarray:
+    """Next-token cross entropy (+ MoE aux). labels = tokens shifted left."""
+    logits, aux = forward(params, cfg, batch)
+    logits = logits[:, :-1]
+    labels = batch["tokens"][:, 1:]
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    # one-hot contraction instead of take_along_axis: a gather along the
+    # model-sharded vocab axis would force an all-gather of logp (16 GiB/dev
+    # at 92k vocab); the einsum partitions cleanly.
+    onehot = jax.nn.one_hot(labels, logits.shape[-1], dtype=logp.dtype)
+    ll = jnp.einsum("bsv,bsv->bs", logp, onehot)
+    mask = batch.get("loss_mask")
+    if mask is not None:
+        mask = mask[:, 1:]
+        ce = -(ll * mask).sum() / jnp.maximum(mask.sum(), 1.0)
+    else:
+        ce = -ll.mean()
+    return ce + aux
+
+
+# --------------------------------------------------------------------------
+# inference: prefill + single-token decode
+# --------------------------------------------------------------------------
+
+def prefill(params, cfg: ModelConfig, batch, max_len: int | None = None):
+    """Returns (last-position logits [b, V], decode state).
+
+    ``max_len``: total KV-cache capacity (prefill length + decode headroom);
+    defaults to 2x the prompt length.
+    """
+    enc_out = None
+    if cfg.encoder_layers:
+        enc_out = _run_encoder(params, cfg, batch["enc_embeds"])
+    x = _embed_inputs(params, cfg, batch)
+    s_total = x.shape[1]
+    if max_len is None:
+        max_len = 2 * s_total
+    x, _, caches = _stack_fwd(params, cfg, x, enc_out, collect_cache=True,
+                              cache_len=max_len)
+    x = _apply_norm(cfg, params["final_norm"], x)
+    logits = _logits(params, cfg, x[:, -1:])[:, 0]
+    state = {"caches": caches, "pos": jnp.asarray(s_total, jnp.int32)}
+    return logits, state
+
+
+def _init_block_cache(cfg: ModelConfig, kind: str, batch: int, cache_len: int, dtype, enc_len: int):
+    if kind in ("attn", "local", "moe", "moe_local"):
+        spec = _attn_spec(cfg, kind)
+        c = attn_mod.init_cache(spec, batch, cache_len, dtype)
+        if cfg.encoder_layers:
+            KV, hd = spec.num_kv_heads, spec.head_dim
+            c = {
+                "self": c,
+                "cross_k": jnp.zeros((batch, enc_len, KV, hd), dtype),
+                "cross_v": jnp.zeros((batch, enc_len, KV, hd), dtype),
+            }
+        return c
+    if kind == "rglru":
+        return rglru_mod.init_rglru_state(_rglru_spec(cfg), batch, dtype)
+    if kind == "mlstm":
+        return xlstm_mod.init_mlstm_state(_xlstm_spec(cfg), batch)
+    if kind == "slstm":
+        return xlstm_mod.init_slstm_state(_xlstm_spec(cfg), batch)
+    raise ValueError(kind)
+
+
+def init_decode_state(cfg: ModelConfig, batch: int, cache_len: int, enc_len: int = 0):
+    dtype = _dtype(cfg)
+    g, rem = _split_layers(cfg)
+    caches: Dict[str, Any] = {}
+    if g > 0:
+        def one(kind):
+            return _init_block_cache(cfg, kind, batch, cache_len, dtype, enc_len)
+        group = {f"s{j}": one(kind) for j, kind in enumerate(cfg.block_pattern)}
+        caches["blocks"] = jax.tree.map(
+            lambda x: jnp.broadcast_to(x[None], (g, *x.shape)).copy() if g else x, group
+        )
+    if rem:
+        caches["rem"] = [
+            _init_block_cache(cfg, kind, batch, cache_len, dtype, enc_len) for kind in rem
+        ]
+    return {"caches": caches, "pos": jnp.asarray(0, jnp.int32)}
+
+
+def _block_decode(cfg: ModelConfig, kind: str, p, x, cache, position):
+    if kind in ("attn", "local", "moe", "moe_local"):
+        spec = _attn_spec(cfg, kind)
+        inner = cache["self"] if "cross_k" in cache else cache
+        h, new_inner = attn_mod.attention_decode(
+            p["attn"], spec, _apply_norm(cfg, p["ln1"], x), inner, position
+        )
+        x = x + h
+        if "cross_k" in cache:
+            xh = attn_mod.cross_attention_decode(
+                p["xattn"], _attn_spec(cfg, "attn", causal=False),
+                _apply_norm(cfg, p["lnx"], x), cache["cross_k"], cache["cross_v"],
+            )
+            x = x + xh
+            new_cache = {"self": new_inner, "cross_k": cache["cross_k"], "cross_v": cache["cross_v"]}
+        else:
+            new_cache = new_inner
+        if kind in ("moe", "moe_local"):
+            h, _ = moe_mod.moe_fwd(p["moe"], _moe_spec(cfg), _apply_norm(cfg, p["ln2"], x))
+        else:
+            h = ffn_mod.ffn_fwd(p["ffn"], _ffn_spec(cfg), _apply_norm(cfg, p["ln2"], x))
+        return x + h, new_cache
+    if kind == "rglru":
+        h, state = rglru_mod.rglru_decode(p["rglru"], _rglru_spec(cfg), _apply_norm(cfg, p["ln1"], x), cache)
+        x = x + h
+        h = ffn_mod.ffn_fwd(p["ffn"], _ffn_spec(cfg), _apply_norm(cfg, p["ln2"], x))
+        return x + h, state
+    if kind == "mlstm":
+        h, state = xlstm_mod.mlstm_decode(p["cell"], _xlstm_spec(cfg), _apply_norm(cfg, p["ln"], x), cache)
+        return x + h, state
+    if kind == "slstm":
+        h, state = xlstm_mod.slstm_decode(p["cell"], _xlstm_spec(cfg), _apply_norm(cfg, p["ln"], x), cache)
+        return x + h, state
+    raise ValueError(kind)
+
+
+def decode_step(params, cfg: ModelConfig, state, token: jnp.ndarray):
+    """One decode step. token: [b] int32. Returns (logits [b,V], new state)."""
+    position = state["pos"]
+    x = jnp.take(params["embed"], token[:, None], axis=0)
+    if cfg.embed_scale:
+        x = x * jnp.asarray(cfg.d_model**0.5, x.dtype)
+    if cfg.pos_embed == "learned":
+        x = x + jax.lax.dynamic_slice_in_dim(params["pos_embed"], position, 1)[None]
+    g, rem = _split_layers(cfg)
+    caches = state["caches"]
+    new_caches: Dict[str, Any] = {}
+    if g > 0:
+        def body(carry, xs):
+            h = constrain(carry, [(0, "batch")])
+            gp, gc = xs
+            new_gc = {}
+            for j, kind in enumerate(cfg.block_pattern):
+                h, new_gc[f"s{j}"] = _block_decode(cfg, kind, gp[f"s{j}"], h, gc[f"s{j}"], position)
+            return h, new_gc
+
+        x, nb = jax.lax.scan(body, x, (params["blocks"], caches["blocks"]))
+        new_caches["blocks"] = nb
+    if rem:
+        new_caches["rem"] = []
+        for i, kind in enumerate(rem):
+            x, nc = _block_decode(cfg, kind, params["rem"][i], x, caches["rem"][i], position)
+            new_caches["rem"].append(nc)
+    x = _apply_norm(cfg, params["final_norm"], x)
+    logits = _logits(params, cfg, x)[:, 0]
+    return logits, {"caches": new_caches, "pos": position + 1}

@@ -1,0 +1,227 @@
+"""xLSTM blocks (arXiv:2405.04517): mLSTM (matrix memory) and sLSTM variant.
+
+mLSTM: trained/prefilled in its *parallel form* (decay-masked attention-like
+quadratic form, the form the official implementation uses for moderate
+sequence lengths), decoded in its *recurrent form* with O(1) state
+``(C [dk,dv], n [dk], m [])`` per head — which is what makes `long_500k`
+decode sub-quadratic for this architecture.
+
+sLSTM: implemented in its gate-input-only (associative) variant so the whole
+model lowers without sequential while-loops (roofline accounting, see
+DESIGN.md); the original's hidden-to-gate recurrent connections are a
+documented deviation (DESIGN.md §8).
+
+Prunable units: heads (all projections are head-partitioned).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .layers import dense_init
+
+__all__ = [
+    "XLSTMSpec",
+    "init_mlstm", "mlstm_fwd", "mlstm_decode", "init_mlstm_state",
+    "init_slstm", "slstm_fwd", "slstm_decode", "init_slstm_state",
+]
+
+_NEG = -1e30
+
+
+@dataclasses.dataclass(frozen=True)
+class XLSTMSpec:
+    d_model: int
+    num_heads: int
+    proj_factor: float = 2.0     # up-projection factor (mLSTM block)
+    t_block: "int | None" = None  # row-block size for the parallel form
+
+    @property
+    def d_inner(self) -> int:
+        return int(self.d_model * self.proj_factor)
+
+    @property
+    def head_dim(self) -> int:
+        return self.d_inner // self.num_heads
+
+
+# --------------------------- mLSTM ------------------------------------------
+
+def init_mlstm(key, spec: XLSTMSpec, dtype=jnp.float32):
+    ku, kq, kk, kv, ki, kf, ko, kd, kg = jax.random.split(key, 9)
+    D, DI, H, hd = spec.d_model, spec.d_inner, spec.num_heads, spec.head_dim
+    return {
+        "w_up": dense_init(ku, D, DI, dtype=dtype),
+        "w_gate": dense_init(kg, D, DI, dtype=dtype),
+        "wq": dense_init(kq, DI, (H, hd), dtype=dtype),
+        "wk": dense_init(kk, DI, (H, hd), dtype=dtype),
+        "wv": dense_init(kv, DI, (H, hd), dtype=dtype),
+        "w_i": dense_init(ki, DI, H, dtype=jnp.float32),
+        "w_f": dense_init(kf, DI, H, dtype=jnp.float32),
+        "b_f": jnp.full((H,), 3.0, jnp.float32),   # open forget gates at init
+        "b_i": jnp.zeros((H,), jnp.float32),
+        "w_down": dense_init(kd, DI, D, dtype=dtype),
+    }
+
+
+def _mlstm_qkvg(params, x):
+    up = jnp.einsum("bsd,de->bse", x, params["w_up"])
+    gate = jax.nn.silu(jnp.einsum("bsd,de->bse", x, params["w_gate"]))
+    q = jnp.einsum("bse,ehk->bshk", up, params["wq"])
+    k = jnp.einsum("bse,ehk->bshk", up, params["wk"])
+    v = jnp.einsum("bse,ehk->bshk", up, params["wv"])
+    i_pre = jnp.einsum("bse,eh->bsh", up.astype(jnp.float32), params["w_i"]) + params["b_i"]
+    f_pre = jnp.einsum("bse,eh->bsh", up.astype(jnp.float32), params["w_f"]) + params["b_f"]
+    return up, gate, q, k, v, i_pre, f_pre
+
+
+def mlstm_fwd(params, spec: XLSTMSpec, x: jnp.ndarray):
+    """Parallel (quadratic) form, optionally row-blocked.
+
+    The naive form materializes [b, s, s, h] decay/score tensors (53 GiB/dev
+    at 1M tokens — EXPERIMENTS.md §Perf); with ``spec.t_block`` rows are
+    processed in blocks of tb so peak temp is [b, tb, s, h].
+    """
+    b, s, _ = x.shape
+    H, hd = spec.num_heads, spec.head_dim
+    up, gate, q, k, v, i_pre, f_pre = _mlstm_qkvg(params, x)
+    logf = jax.nn.log_sigmoid(f_pre)                       # [b,s,h]
+    F = jnp.cumsum(logf, axis=1)                           # inclusive
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    j_pos = jnp.arange(s)
+
+    def rows(q_t, F_t, pos_t):
+        """q_t [b,tb,h,hd], F_t [b,tb,h], pos_t [tb] -> h rows [b,tb,h,hd]."""
+        Dm = F_t[:, :, None, :] - F[:, None, :, :] + i_pre[:, None, :, :]
+        causal = pos_t[:, None] >= j_pos[None, :]
+        Dm = jnp.where(causal[None, :, :, None], Dm, _NEG)
+        m = jnp.max(Dm, axis=2)
+        W = jnp.exp(Dm - m[:, :, None, :])
+        qk = jnp.einsum("bthk,bjhk->btjh", q_t.astype(jnp.float32), kf)
+        S = (qk / math.sqrt(hd)) * W
+        denom = jnp.maximum(jnp.abs(S.sum(axis=2)), jnp.exp(-m))
+        return jnp.einsum("btjh,bjhk->bthk", S, vf) / denom[..., None]
+
+    tb = spec.t_block
+    if tb and s > tb and s % tb == 0:
+        nb = s // tb
+        qb = jnp.moveaxis(q.reshape(b, nb, tb, H, hd), 1, 0)
+        Fb = jnp.moveaxis(F.reshape(b, nb, tb, H), 1, 0)
+        pb = j_pos.reshape(nb, tb)
+
+        def body(_, xs):
+            return None, rows(*xs)
+
+        _, hb = jax.lax.scan(body, None, (qb, Fb, pb))
+        h = jnp.moveaxis(hb, 0, 1).reshape(b, s, H, hd)
+    else:
+        h = rows(q, F, j_pos)
+    h = h.reshape(b, s, H * hd).astype(x.dtype) * gate
+    out = jnp.einsum("bse,ed->bsd", h, params["w_down"])
+
+    # final recurrent state for decode handoff
+    FL = F[:, -1, :]                                       # [b,h]
+    scale_j = FL[:, None, :] - F + i_pre                   # [b,s,h]
+    m_state = jnp.maximum(jnp.max(scale_j, axis=1), 0.0)   # [b,h]
+    w_j = jnp.exp(scale_j - m_state[:, None, :])
+    C = jnp.einsum("bjh,bjhk,bjhl->bhkl", w_j, k.astype(jnp.float32), v.astype(jnp.float32))
+    n = jnp.einsum("bjh,bjhk->bhk", w_j, k.astype(jnp.float32))
+    return out, {"C": C, "n": n, "m": m_state}
+
+
+def init_mlstm_state(spec: XLSTMSpec, batch: int):
+    H, hd = spec.num_heads, spec.head_dim
+    return {
+        "C": jnp.zeros((batch, H, hd, hd), jnp.float32),
+        "n": jnp.zeros((batch, H, hd), jnp.float32),
+        "m": jnp.zeros((batch, H), jnp.float32),
+    }
+
+
+def mlstm_decode(params, spec: XLSTMSpec, x: jnp.ndarray, state):
+    """Recurrent form, one token. x [b,1,d]."""
+    b = x.shape[0]
+    H, hd = spec.num_heads, spec.head_dim
+    up, gate, q, k, v, i_pre, f_pre = _mlstm_qkvg(params, x)
+    q, k, v = q[:, 0], k[:, 0], v[:, 0]                    # [b,h,hd]
+    i_pre, f_pre = i_pre[:, 0], f_pre[:, 0]                # [b,h]
+    logf = jax.nn.log_sigmoid(f_pre)
+    m_new = jnp.maximum(logf + state["m"], i_pre)
+    f_s = jnp.exp(logf + state["m"] - m_new)[..., None]
+    i_s = jnp.exp(i_pre - m_new)[..., None]
+    kf, vf = k.astype(jnp.float32), v.astype(jnp.float32)
+    C = f_s[..., None] * state["C"] + i_s[..., None] * (kf[..., :, None] * vf[..., None, :])
+    n = f_s * state["n"] + i_s * kf
+    qf = q.astype(jnp.float32) / math.sqrt(hd)
+    num = jnp.einsum("bhk,bhkl->bhl", qf, C)
+    den = jnp.maximum(jnp.abs(jnp.einsum("bhk,bhk->bh", qf, n)), jnp.exp(-m_new))
+    h = (num / den[..., None]).reshape(b, 1, H * hd).astype(x.dtype) * gate
+    out = jnp.einsum("bse,ed->bsd", h, params["w_down"])
+    return out, {"C": C, "n": n, "m": m_new}
+
+
+# --------------------------- sLSTM ------------------------------------------
+
+def init_slstm(key, spec: XLSTMSpec, dtype=jnp.float32):
+    ku, kz, ki, kf, ko, kd = jax.random.split(key, 6)
+    D, DI = spec.d_model, spec.d_inner
+    return {
+        "w_up": dense_init(ku, D, DI, dtype=dtype),
+        "w_z": dense_init(kz, DI, DI, dtype=dtype),
+        "w_i": dense_init(ki, DI, DI, dtype=jnp.float32),
+        "w_f": dense_init(kf, DI, DI, dtype=jnp.float32),
+        "w_o": dense_init(ko, DI, DI, dtype=dtype),
+        "b_f": jnp.full((DI,), 3.0, jnp.float32),
+        "w_down": dense_init(kd, DI, D, dtype=dtype),
+    }
+
+
+def _slstm_pre(params, x):
+    up = jnp.einsum("bsd,de->bse", x, params["w_up"])
+    z = jnp.tanh(jnp.einsum("bse,ef->bsf", up, params["w_z"]))
+    i_pre = jnp.einsum("bse,ef->bsf", up.astype(jnp.float32), params["w_i"])
+    f_pre = jnp.einsum("bse,ef->bsf", up.astype(jnp.float32), params["w_f"]) + params["b_f"]
+    o = jax.nn.sigmoid(jnp.einsum("bse,ef->bsf", up, params["w_o"]))
+    return z, i_pre, f_pre, o
+
+
+def slstm_fwd(params, spec: XLSTMSpec, x: jnp.ndarray):
+    """Associative (gate-input-only) sLSTM. x [b,s,d]."""
+    z, i_pre, f_pre, o = _slstm_pre(params, x)
+    logf = jax.nn.log_sigmoid(f_pre)
+    i = jnp.exp(jnp.minimum(i_pre, 10.0))
+    f = jnp.exp(logf)
+
+    def combine(c1, c2):
+        (f1, c1v, n1), (f2, c2v, n2) = c1, c2
+        return f1 * f2, f2 * c1v + c2v, f2 * n1 + n2
+
+    zf = z.astype(jnp.float32)
+    _, c, n = jax.lax.associative_scan(
+        combine, (f, i * zf, i), axis=1
+    )
+    h = o.astype(jnp.float32) * c / jnp.maximum(jnp.abs(n), 1.0)
+    out = jnp.einsum("bse,ed->bsd", h.astype(x.dtype), params["w_down"])
+    state = {"c": c[:, -1], "n": n[:, -1]}
+    return out, state
+
+
+def init_slstm_state(spec: XLSTMSpec, batch: int):
+    DI = spec.d_inner
+    return {"c": jnp.zeros((batch, DI), jnp.float32), "n": jnp.zeros((batch, DI), jnp.float32)}
+
+
+def slstm_decode(params, spec: XLSTMSpec, x: jnp.ndarray, state):
+    z, i_pre, f_pre, o = _slstm_pre(params, x)
+    f = jnp.exp(jax.nn.log_sigmoid(f_pre[:, 0]))
+    i = jnp.exp(jnp.minimum(i_pre[:, 0], 10.0))
+    c = f * state["c"] + i * z[:, 0].astype(jnp.float32)
+    n = f * state["n"] + i
+    h = o[:, 0].astype(jnp.float32) * c / jnp.maximum(jnp.abs(n), 1.0)
+    out = jnp.einsum("be,ed->bd", h.astype(x.dtype), params["w_down"])[:, None, :]
+    return out, {"c": c, "n": n}

@@ -1,0 +1,54 @@
+"""Sparse training: group-lasso regularization (AdaptCL Eq. 1, after [22]).
+
+The loss is  CE + lambda * sum_g sqrt(|g|) * ||theta_g||_2  where each group g
+is the parameter slice owned by one prunable unit (a conv filter's kernel
+column + BN gamma/beta + consumer input slice; an FFN column; ...).  Shrinking
+whole groups toward zero is what makes later structural pruning cheap in
+accuracy — the "-S" (sparse) variants of every baseline use this same term.
+
+Groups are derived from the same ``unit_map`` used for pruning/aggregation,
+so the regularizer automatically follows the reconfigured sub-model.
+"""
+from __future__ import annotations
+
+from typing import Dict, Mapping, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["group_lasso_penalty", "unit_group_norms"]
+
+
+def _axes_except(arr, axis):
+    return tuple(i for i in range(arr.ndim) if i != axis)
+
+
+def unit_group_norms(
+    params: Mapping[str, jnp.ndarray], unit_map: Mapping[str, Sequence[Tuple[str, int]]]
+) -> Dict[str, jnp.ndarray]:
+    """Per-unit L2 norm (and the group sizes) aggregated across all arrays a
+    unit touches.  Returns {unit_layer: [num_units] norms}."""
+    sq: Dict[str, jnp.ndarray] = {}
+    size: Dict[str, int] = {}
+    for path, entries in unit_map.items():
+        arr = params.get(path)
+        if arr is None:
+            continue
+        for lname, axis in entries:
+            s = jnp.sum(jnp.square(arr.astype(jnp.float32)), axis=_axes_except(arr, axis))
+            sq[lname] = sq.get(lname, 0.0) + s
+            size[lname] = size.get(lname, 0) + int(arr.size // arr.shape[axis])
+    return {k: jnp.sqrt(jnp.maximum(v, 1e-12)) for k, v in sq.items()}, size  # type: ignore[return-value]
+
+
+def group_lasso_penalty(
+    params: Mapping[str, jnp.ndarray],
+    unit_map: Mapping[str, Sequence[Tuple[str, int]]],
+    lam: float,
+) -> jnp.ndarray:
+    """lambda * sum_g sqrt(|g|) ||theta_g||_2 over prunable units."""
+    norms, sizes = unit_group_norms(params, unit_map)
+    total = jnp.zeros((), jnp.float32)
+    for lname, n in norms.items():
+        total = total + jnp.sqrt(jnp.asarray(float(sizes[lname]))) * jnp.sum(n)
+    return lam * total

@@ -1,0 +1,231 @@
+"""Sharding rules: parameter / optimizer / batch / decode-state partitioning.
+
+Scheme ("FSDP + TP", MaxText-style):
+  * ``model`` axis — tensor parallelism: attention heads (KV groups), FFN
+    columns, experts, recurrent channels, vocab.
+  * ``data`` axis — batch parallelism for activations AND fully-sharded
+    parameters/optimizer state over d_model-like dims (ZeRO-3), so nothing is
+    replicated 16x.
+  * ``pod`` axis (multi-pod) — pure data parallelism across pods: batch
+    shards over (pod, data); parameters are replicated across pods (gradient
+    all-reduce crosses the inter-pod links — visible in the HLO).
+
+Every rule is divisibility-checked with fallbacks (e.g. kv_heads=8 cannot
+split 16-way -> shard head_dim instead; odd vocab -> shard d_model).  AdaptCL
+interaction: reconfigured sub-models shrink unit dims; `apply_retention`
+snaps dims to sharding-friendly multiples so the same rules keep applying.
+"""
+from __future__ import annotations
+
+import re
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+__all__ = [
+    "param_pspec",
+    "shard_tree",
+    "batch_pspecs",
+    "decode_state_pspecs",
+    "tree_pspecs",
+    "constrain",
+    "current_mesh",
+]
+
+
+def current_mesh():
+    """Mesh from the active `with mesh:` context, or None (smoke tests)."""
+    try:
+        from jax._src import mesh as mesh_lib
+
+        m = mesh_lib.thread_resources.env.physical_mesh
+        return None if m.empty else m
+    except Exception:
+        return None
+
+
+def constrain(x, prefs):
+    """with_sharding_constraint via role prefs [(dim, "batch"|"model")].
+
+    No-op outside a mesh context; divisibility-checked per dim (e.g. 4 heads
+    never constrain onto a 16-way model axis).  This is what pins activations
+    to batch sharding so GSPMD gathers FSDP weights instead of resharding
+    activations (see EXPERIMENTS.md §Perf iteration 1).
+    """
+    mesh = current_mesh()
+    if mesh is None or "data" not in mesh.shape or "model" not in mesh.shape:
+        return x
+    ba = _batch_axes(mesh)
+    resolved = [(d, ba if a == "batch" else a) for d, a in prefs]
+    spec = _assign(x.shape, mesh, resolved)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+
+
+def _axis_size(mesh: Mesh, name) -> int:
+    if isinstance(name, tuple):
+        out = 1
+        for n in name:
+            out *= mesh.shape[n]
+        return out
+    return mesh.shape[name]
+
+
+def _fits(shape, dim: int, mesh: Mesh, axis) -> bool:
+    return dim < len(shape) and shape[dim] % _axis_size(mesh, axis) == 0
+
+
+def _assign(shape, mesh: Mesh, prefs) -> P:
+    """prefs: list of (dim, mesh_axis) tried in order; one mesh axis used once."""
+    spec = [None] * len(shape)
+    used = set()
+    for dim, axis in prefs:
+        if dim < 0:
+            dim = len(shape) + dim
+        key = axis if not isinstance(axis, tuple) else axis
+        flat = axis if isinstance(axis, tuple) else (axis,)
+        if any(a in used for a in flat):
+            continue
+        if dim >= len(shape) or spec[dim] is not None:
+            continue
+        if _fits(shape, dim, mesh, axis):
+            spec[dim] = axis
+            used.update(flat)
+    return P(*spec)
+
+
+# rules keyed by the last path component (parameter leaf name); `stk` = True
+# when the leaf has a leading stacked-layers axis (blocks/...), shifting dims.
+def param_pspec(path: str, shape: Tuple[int, ...], mesh: Mesh) -> P:
+    has_model = "model" in mesh.shape
+    has_data = "data" in mesh.shape
+    if not (has_model and has_data):
+        return P()
+    name = path.split("/")[-1]
+    stk = 1 if (("blocks" in path or "enc_blocks" in path) and len(shape) > 0) else 0
+    if FULL_DP:
+        # pure-DP: ZeRO-3 over the combined (data, model) axes, largest dim
+        fsdp = tuple(a for a in ("data", "model") if a in mesh.shape)
+        dims = sorted(range(stk, len(shape)), key=lambda d: -shape[d])
+        return _assign(shape, mesh, [(d, fsdp) for d in dims])
+
+    def A(*prefs):
+        return _assign(shape, mesh, [(d + stk if d >= 0 else d, a) for d, a in prefs])
+
+    if name in ("wq",):          # [D, H, hd]
+        return A((1, "model"), (2, "model"), (0, "data"))
+    if name in ("wk", "wv"):     # [D, KV, hd] — never split hd (rope splits
+        # it in half); replicate KV over model when kv doesn't divide.
+        return A((1, "model"), (0, "data"))
+    if name == "wo":             # [H, hd, D]
+        return A((0, "model"), (1, "model"), (2, "data"))
+    if name == "bq":             # [H, hd]
+        return A((0, "model"))
+    if name in ("bk", "bv"):
+        return A((0, "model"))
+    if name in ("w_up", "w_gate", "ws_up", "ws_gate"):
+        if len(shape) - stk == 3:   # moe [E, D, F]
+            return A((0, "model"), (1, "data"))
+        return A((1, "model"), (0, "data"))      # [D, F]
+    if name in ("w_down", "ws_down"):
+        if len(shape) - stk == 3:   # moe [E, F, D]
+            return A((0, "model"), (1, "data"))
+        return A((0, "model"), (1, "data"))      # [F, D]
+    if name == "w_router":       # [D, E]
+        return A((1, "model"), (0, "data"))
+    if name in ("w_y", "w_x"):   # rglru [D, R]
+        return A((1, "model"), (0, "data"))
+    if name == "w_out":          # rglru [R, D]
+        return A((0, "model"), (1, "data"))
+    if name == "conv":           # [w, R]
+        return A((1, "model"))
+    if name in ("gate_a", "gate_x"):  # [H, hw, hw]
+        return A((0, "model"))
+    if name == "lam":            # [R]
+        return A((0, "model"))
+    if name in ("w_z", "w_i", "w_f", "w_o"):  # xlstm [DI, DI] or [DI, H]
+        return A((1, "model"), (0, "data"))
+    if name == "embed":          # [V, D]
+        return A((0, "model"), (1, "data"))
+    if name == "lm_head":        # [D, V]
+        return A((1, "model"), (0, "data"))
+    if name in ("pos_embed", "enc_pos"):  # [T, D]
+        return A((0, "model"), (1, "data"))
+    # norms scale/bias, b_f, b_i and anything tiny: replicate
+    return P()
+
+
+def tree_pspecs(tree, mesh: Mesh, pspec_fn) -> Any:
+    def walk(path_parts, node):
+        if isinstance(node, dict):
+            return {k: walk(path_parts + [str(k)], v) for k, v in node.items()}
+        if isinstance(node, (list, tuple)):
+            t = [walk(path_parts + [str(i)], v) for i, v in enumerate(node)]
+            return type(node)(t) if isinstance(node, tuple) else t
+        path = "/".join(path_parts)
+        return pspec_fn(path, tuple(np.shape(node) if hasattr(node, "shape") else ()), mesh)
+
+    return walk([], tree)
+
+
+def shard_tree(tree, mesh: Mesh, pspec_fn=param_pspec):
+    """SDS tree -> SDS tree with NamedShardings attached."""
+    specs = tree_pspecs(tree, mesh, pspec_fn)
+    return jax.tree.map(
+        lambda x, s: jax.ShapeDtypeStruct(x.shape, x.dtype, sharding=NamedSharding(mesh, s)),
+        tree, specs,
+    )
+
+
+# Full-DP mode: small models whose head layout defeats tensor parallelism
+# (e.g. xlstm-1.3b: 4 heads vs a 16-way model axis) run pure data parallelism:
+# batch shards over BOTH axes and params are FSDP over the combined axes.
+FULL_DP = False
+
+
+def _batch_axes(mesh: Mesh):
+    if FULL_DP:
+        return tuple(a for a in ("pod", "data", "model") if a in mesh.shape)
+    return ("pod", "data") if "pod" in mesh.shape else ("data",)
+
+
+def batch_pspecs(path: str, shape, mesh: Mesh) -> P:
+    """Inputs: tokens/labels [B, S]; prefix/enc embeds [B, N, D]."""
+    ba = _batch_axes(mesh)
+    if not shape:
+        return P()
+    if shape[0] % _axis_size(mesh, ba) == 0:
+        return P(ba, *([None] * (len(shape) - 1)))
+    # batch too small (long_500k b=1): shard sequence instead where possible
+    if len(shape) >= 2 and shape[1] % _axis_size(mesh, ba) == 0:
+        return P(None, ba, *([None] * (len(shape) - 2)))
+    return P()
+
+
+def decode_state_pspecs(path: str, shape, mesh: Mesh) -> P:
+    """KV caches [G, B, L, KV, hd]; recurrent states [G, B, ...]."""
+    ba = _batch_axes(mesh)
+    name = path.split("/")[-1]
+    stk = 1 if "blocks" in path else 0
+
+    def A(*prefs):
+        return _assign(shape, mesh, [(d + stk, a) for d, a in prefs])
+
+    if name in ("k", "v"):        # [B, L, KV, hd]
+        return A((0, ba), (2, "model"), (3, "model"), (1, ba))
+    if name in ("cross_k", "cross_v"):
+        return A((0, ba), (2, "model"), (3, "model"))
+    if name == "pos":             # [B, L]
+        return A((0, ba), (1, ba))
+    if name == "h":               # rglru [B, R]
+        return A((0, ba), (1, "model"))
+    if name == "conv":            # [B, w-1, R]
+        return A((0, ba), (2, "model"))
+    if name == "C":               # mlstm [B, H, hd, hd]
+        return A((0, ba), (1, "model"), (2, "model"))
+    if name in ("n", "m"):        # [B, H, hd] / [B, H]
+        return A((0, ba), (1, "model"), (2, "model"))
+    if name in ("c",):            # slstm [B, DI]
+        return A((0, ba), (1, "model"))
+    return P()

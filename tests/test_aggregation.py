@@ -1,0 +1,69 @@
+"""By-worker vs By-unit aggregation (paper §III-B, Appendix A Fig. 6)."""
+import numpy as np
+
+from repro.core.aggregation import (
+    aggregate_by_unit,
+    aggregate_by_worker,
+    coordinate_mask,
+    embed_params,
+    extract_subparams,
+)
+
+# One weight matrix [2 in, 3 out-units]; unit layer "u" governs axis 1.
+UNIT_MAP = {"w": [("u", 1)]}
+BASE_SHAPES = {"w": (2, 3)}
+
+
+def _sub(vals, idx):
+    return ({"w": np.asarray(vals, np.float64)}, {"u": np.asarray(idx)})
+
+
+def test_fig6_by_worker_vs_by_unit():
+    """3 workers; the first pruned unit 2 (W=3, w'=2 for that column)."""
+    s1 = _sub([[1, 1], [1, 1]], [0, 1])          # retains units 0,1
+    s2 = _sub([[2, 2, 2], [2, 2, 2]], [0, 1, 2])
+    s3 = _sub([[4, 4, 4], [4, 4, 4]], [0, 1, 2])
+    bw = aggregate_by_worker([s1, s2, s3], UNIT_MAP, BASE_SHAPES)
+    bu = aggregate_by_unit([s1, s2, s3], UNIT_MAP, BASE_SHAPES)
+    # by-worker: pruned coordinate counted as 0 -> (0+2+4)/3 = 2
+    assert np.allclose(bw["w"][:, 2], 2.0)
+    assert np.allclose(bw["w"][:, 0], (1 + 2 + 4) / 3)
+    # by-unit: only the 2 holders average -> (2+4)/2 = 3
+    assert np.allclose(bu["w"][:, 2], 3.0)
+    assert np.allclose(bu["w"][:, 0], (1 + 2 + 4) / 3)
+
+
+def test_extract_embed_roundtrip():
+    rng = np.random.default_rng(0)
+    full = {"w": rng.normal(size=(2, 3))}
+    idx = {"u": np.array([0, 2])}
+    sub = extract_subparams(full, idx, UNIT_MAP)
+    assert sub["w"].shape == (2, 2)
+    emb = embed_params(sub, idx, UNIT_MAP, BASE_SHAPES)
+    assert np.allclose(emb["w"][:, [0, 2]], full["w"][:, [0, 2]])
+    assert np.allclose(emb["w"][:, 1], 0.0)
+
+
+def test_aggregation_fixed_point():
+    """All workers submitting the identical full model leaves it unchanged."""
+    rng = np.random.default_rng(1)
+    full = {"w": rng.normal(size=(2, 3))}
+    idx = {"u": np.arange(3)}
+    subs = [({"w": full["w"].copy()}, idx) for _ in range(5)]
+    for agg in (aggregate_by_worker, aggregate_by_unit):
+        out = agg(subs, UNIT_MAP, BASE_SHAPES)
+        assert np.allclose(out["w"], full["w"])
+
+
+def test_data_weighted_by_worker():
+    s1 = _sub([[1, 1, 1], [1, 1, 1]], [0, 1, 2])
+    s2 = _sub([[3, 3, 3], [3, 3, 3]], [0, 1, 2])
+    out = aggregate_by_worker([s1, s2], UNIT_MAP, BASE_SHAPES, data_weights=[3, 1])
+    assert np.allclose(out["w"], 1 * 0.75 + 3 * 0.25)
+
+
+def test_coordinate_mask_two_axis():
+    umap = {"w": [("u", 1), ("r", 0)]}
+    shapes = {"w": (2, 3)}
+    m = coordinate_mask("w", {"u": np.array([0]), "r": np.array([1])}, umap, shapes)
+    assert m.sum() == 1.0 and m[1, 0] == 1.0

@@ -1,0 +1,68 @@
+"""Mesh-level collaborative round (core.collab): By-worker psum semantics
+must match the host-level aggregation exactly."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.aggregation import aggregate_by_worker, extract_subparams
+from repro.core.collab import collab_round, make_worker_masks
+from repro.core.masks import UnitLayer, UnitSpace, full_index, prune_to_budget
+
+SPACE = UnitSpace(layers=(UnitLayer("u", 8, 4),), fixed_params=6)
+UNIT_MAP = {"w": [("u", 1)]}
+
+
+def _loss(params, x, y):
+    logits = x @ params["w"] + params["b"]
+    logp = jax.nn.log_softmax(logits)
+    return -jnp.take_along_axis(logp, y[:, None], axis=1).mean()
+
+
+def test_collab_round_matches_host_aggregation():
+    mesh = jax.make_mesh((1,), ("data",))  # 1 CPU device = 1 worker slice
+    rng = np.random.default_rng(0)
+    base = {"w": jnp.asarray(rng.normal(size=(4, 8)), jnp.float32),
+            "b": jnp.zeros((8,), jnp.float32)}
+    base_shapes = {k: v.shape for k, v in base.items()}
+    scores = {"u": np.arange(8, dtype=np.float64)}
+    idx = prune_to_budget(full_index(SPACE), scores, 0.4, SPACE)
+    masks = make_worker_masks([idx], {"w": [("u", 1)], "b": [("u", 0)]}, base_shapes)
+
+    x = jnp.asarray(rng.normal(size=(64, 4)), jnp.float32)
+    y = jnp.asarray(rng.integers(0, 8, 64), jnp.int32)
+
+    out = collab_round(_loss, base, masks, x, y, mesh, lr=0.1, steps=2, batch_size=32)
+
+    # host-level reference: same masked SGD then By-worker aggregation
+    from repro.core.collab import local_sgd_steps
+
+    m = jax.tree.map(lambda a: a[0], masks)
+    theta = jax.tree.map(lambda g, mm: g * mm, base, m)
+
+    def masked_loss(p, xb, yb):
+        return _loss(jax.tree.map(lambda w, mm: w * mm, p, m), xb, yb)
+
+    theta = local_sgd_steps(masked_loss, theta, x, y, lr=0.1, steps=2, batch_size=32)
+    theta = jax.tree.map(lambda w, mm: w * mm, theta, m)
+    for k in base:
+        np.testing.assert_allclose(np.asarray(out[k]), np.asarray(theta[k]), atol=1e-6)
+    # pruned coordinates are exact zeros after aggregation (By-worker)
+    pruned_cols = np.setdiff1d(np.arange(8), np.asarray(idx["u"]))
+    assert np.abs(np.asarray(out["w"])[:, pruned_cols]).max() == 0.0
+
+
+def test_collab_round_traces_with_collective():
+    """The aggregation psum must appear in the traced jaxpr (on a 1-device
+    CPU mesh the lowered HLO legally elides it — num_partitions=1)."""
+    mesh = jax.make_mesh((1,), ("data",))
+    base = {"w": jnp.ones((4, 8), jnp.float32), "b": jnp.zeros((8,), jnp.float32)}
+    masks = make_worker_masks(
+        [full_index(SPACE)], {"w": [("u", 1)], "b": [("u", 0)]},
+        {k: v.shape for k, v in base.items()},
+    )
+    x = jnp.ones((32, 4), jnp.float32)
+    y = jnp.zeros((32,), jnp.int32)
+    jaxpr = jax.make_jaxpr(
+        lambda g, m, xx, yy: collab_round(_loss, g, m, xx, yy, mesh, steps=1)
+    )(base, masks, x, y)
+    assert "psum" in str(jaxpr)

@@ -1,0 +1,60 @@
+"""Data partition (Non-IID, §IV-A) + channel model (Eq. 6/7) tests."""
+import numpy as np
+
+from repro.core.timing import HeterogeneityConfig, make_bandwidths
+from repro.data.synthetic import SyntheticImageTask, batch_iterator, partition_noniid
+
+
+def test_noniid_partition_equal_sizes_and_coverage():
+    y = np.random.default_rng(0).integers(0, 10, 1000)
+    for s in (0.0, 50.0, 80.0):
+        shards = partition_noniid(y, 10, s, seed=1)
+        sizes = [len(sh) for sh in shards]
+        assert max(sizes) - min(sizes) <= 10           # equal data per worker
+        allidx = np.concatenate(shards)
+        assert len(np.unique(allidx)) == len(allidx) == 1000  # exact cover
+
+
+def test_noniid_skew_increases_with_s():
+    """Higher s% -> more label-concentrated workers (paper's Non-IID knob)."""
+    y = np.random.default_rng(0).integers(0, 10, 2000)
+
+    def skew(s):
+        shards = partition_noniid(y, 10, s, seed=1)
+        # mean max-class fraction per worker
+        fracs = []
+        for sh in shards:
+            counts = np.bincount(y[sh], minlength=10)
+            fracs.append(counts.max() / counts.sum())
+        return float(np.mean(fracs))
+
+    assert skew(0.0) < skew(50.0) < skew(95.0)
+
+
+def test_batch_iterator_fractional_epochs():
+    x = np.arange(100)[:, None].astype(np.float32)
+    y = np.arange(100).astype(np.int32)
+    rng = np.random.default_rng(0)
+    seen = sum(len(xb) for xb, _ in batch_iterator(x, y, 32, 0.5, rng))
+    assert 32 <= seen <= 64  # ~half an epoch (DC-ASGD's E=0.5)
+
+
+def test_synthetic_task_learnable_structure():
+    t = SyntheticImageTask(num_classes=4, image_size=8, train_size=200, test_size=50, noise=0.1)
+    # with low noise, nearest-prototype classification should beat chance by a lot
+    protos = t.prototypes.reshape(4, -1)
+    x = t.x_test.reshape(len(t.x_test), -1)
+    pred = np.argmin(((x[:, None, :] - protos[None]) ** 2).sum(-1), axis=1)
+    assert (pred == t.y_test).mean() > 0.9
+
+
+def test_eq6_eq7_bandwidths_roundtrip():
+    """Bandwidths from Eq. 7 must reproduce the Eq. 6 update-time spread."""
+    cfg = HeterogeneityConfig(num_workers=10, sigma=5.0, bandwidth_max=5e6)
+    model_bytes, t_train = 2.0e6, 1.0
+    bws = make_bandwidths(cfg, model_bytes, t_train)
+    phis = [2.0 * model_bytes / b + t_train for b in bws]
+    assert abs(max(phis) / min(phis) - 5.0) < 1e-6     # sigma recovered
+    assert np.argmin(phis) == len(phis) - 1            # worker W fastest
+    diffs = np.diff(sorted(phis))
+    assert np.allclose(diffs, diffs[0], rtol=1e-6)     # uniform spread (Eq. 6)

@@ -1,0 +1,97 @@
+"""Distributed-pruning principles: CIG nesting, similarity, budgets (§III-D)."""
+import numpy as np
+import pytest
+
+from repro.core.importance import CIG_METHODS, METHODS, ImportanceContext
+from repro.core.masks import (
+    UnitLayer,
+    UnitSpace,
+    full_index,
+    is_nested,
+    payload_bytes,
+    prune_to_budget,
+    retention,
+    similarity,
+)
+
+SPACE = UnitSpace(
+    layers=(
+        UnitLayer("a", 32, 100),
+        UnitLayer("b", 64, 50),
+        UnitLayer("c", 16, 200),
+    ),
+    fixed_params=1000,
+)
+
+
+def _ctx(worker=0, rnd=0, seed=7):
+    rng = np.random.default_rng(3)
+    return ImportanceContext(
+        unit_counts=SPACE.unit_counts,
+        scales={k: rng.random(n) for k, n in SPACE.unit_counts.items()},
+        weight_norms={k: rng.random(n) for k, n in SPACE.unit_counts.items()},
+        worker=worker,
+        round=rnd,
+        seed=seed,
+    )
+
+
+def test_budget_accuracy():
+    idx = full_index(SPACE)
+    scores = METHODS["index"](_ctx())
+    for rate in (0.1, 0.3, 0.5, 0.7):
+        out = prune_to_budget(idx, scores, rate, SPACE)
+        achieved = 1.0 - retention(out, SPACE) / retention(idx, SPACE)
+        # greedy block cutting overshoots by at most one max-cost unit
+        assert rate - 1e-9 <= achieved <= rate + 200 / SPACE.total_params + 1e-9
+
+
+def test_cig_methods_nest_across_workers_and_rounds():
+    """Identical+Constant criteria guarantee I_small ⊂ I_big (paper's key)."""
+    for name in CIG_METHODS:
+        indices = []
+        for worker, rate_seq in enumerate([(0.2, 0.3), (0.5,), (0.1, 0.2, 0.4)]):
+            idx = full_index(SPACE)
+            for rnd, rate in enumerate(rate_seq):
+                scores = METHODS[name](_ctx(worker, rnd))
+                idx = prune_to_budget(idx, scores, rate, SPACE)
+            indices.append(idx)
+        # sort by retention; every smaller sub-model must nest in every bigger
+        indices.sort(key=lambda i: retention(i, SPACE))
+        for small, big in zip(indices, indices[1:]):
+            assert is_nested(small, big), f"{name} violated nesting"
+
+
+def test_no_identical_breaks_nesting():
+    ia = prune_to_budget(full_index(SPACE), METHODS["no_identical"](_ctx(worker=0)), 0.5, SPACE)
+    ib = prune_to_budget(full_index(SPACE), METHODS["no_identical"](_ctx(worker=1)), 0.2, SPACE)
+    assert not is_nested(ia, ib)
+    assert similarity(ia, ib) < 0.9
+
+
+def test_no_constant_changes_over_rounds():
+    s0 = METHODS["no_constant"](_ctx(rnd=0))
+    s1 = METHODS["no_constant"](_ctx(rnd=1))
+    assert any(not np.array_equal(s0[k], s1[k]) for k in s0)
+
+
+def test_similarity_eq3():
+    i1 = {"a": np.array([0, 1, 2, 3]), "b": np.array([0, 1])}
+    i2 = {"a": np.array([2, 3, 4, 5]), "b": np.array([0, 1])}
+    # layer a: |{2,3}|/|{0..5}| = 2/6; layer b: 2/2
+    assert abs(similarity(i1, i2) - (2 / 6 + 1.0) / 2) < 1e-12
+    assert similarity(i1, i1) == 1.0
+
+
+def test_min_units_respected():
+    idx = full_index(SPACE)
+    scores = METHODS["index"](_ctx())
+    out = prune_to_budget(idx, scores, 0.7, SPACE)
+    for l in SPACE.layers:
+        assert len(out[l.name]) >= l.min_units
+
+
+def test_payload_counts_index_overhead():
+    idx = full_index(SPACE)
+    base = payload_bytes(idx, SPACE)
+    assert base > SPACE.total_params * 4  # params + index ids

