@@ -41,9 +41,15 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None)
     ap.add_argument("--quick", action="store_true")
+    ap.add_argument(
+        "--engine", default="sequential",
+        choices=("sequential", "bucketed", "masked"),
+        help="fleet engine for simulator local training (core.fleet)",
+    )
     args = ap.parse_args()
     if args.quick:
         os.environ["BENCH_QUICK"] = "1"
+    os.environ["BENCH_ENGINE"] = args.engine
 
     from benchmarks import tables  # import after BENCH_QUICK is set
 
@@ -56,6 +62,7 @@ def main() -> None:
         ("table14_interval", tables.table14_interval),
         ("table17_dgc", tables.table17_dgc),
         ("overhead", tables.overhead),
+        ("engines", tables.engines),
         ("roofline_table", roofline_table),
     ]
     print("name,value,derived")

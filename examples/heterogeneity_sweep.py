@@ -12,12 +12,15 @@ def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--rounds", type=int, default=16)
     ap.add_argument("--sigmas", type=float, nargs="+", default=[2.0, 5.0, 10.0, 20.0])
+    ap.add_argument("--engine", default="masked",
+                    choices=("sequential", "bucketed", "masked"),
+                    help="fleet engine; masked batches the sweep's local training")
     args = ap.parse_args()
     print(f"{'H(sigma)':>10s} {'speedup':>8s} {'dAcc':>8s} {'param_red':>10s}")
     for sigma in args.sigmas:
-        fed = run_simulation(SimConfig(method="fedavg_s", rounds=args.rounds,
+        fed = run_simulation(SimConfig(method="fedavg_s", rounds=args.rounds, engine=args.engine,
                                        noniid_s=80.0, het=HeterogeneityConfig(sigma=sigma)))
-        ada = run_simulation(SimConfig(method="adaptcl", rounds=args.rounds, prune_interval=4,
+        ada = run_simulation(SimConfig(method="adaptcl", rounds=args.rounds, prune_interval=4, engine=args.engine,
                                        noniid_s=80.0, het=HeterogeneityConfig(sigma=sigma)))
         h = heterogeneity_closed_form(10, sigma)
         print(f"{h:6.2f}({sigma:>4.0f}) {fed.total_time/ada.total_time:7.2f}x "

@@ -1,0 +1,170 @@
+"""Fleet engine: shape-bucketed / masked vmapped local training (DESIGN §IV).
+
+The simulator's cost model is the paper's; its *host* cost used to be W
+sequential ``LocalTrainer.train`` calls per round, with one fresh jit per
+distinct pruned shape — wall-clock linear in workers, recompiles linear in
+pruning diversity.  This module batches the fleet:
+
+* ``sequential`` — reference engine: one scan-train call per worker, in
+  worker order.  Numerically the baseline the other engines are tested
+  against.
+* ``bucketed``   — workers whose sub-models share a parameter-shape
+  signature (and shard/plan shapes) are stacked and trained in ONE jitted
+  ``vmap``-of-``scan`` program (stacked params, stacked shards, stacked
+  optimizer state, per-worker batch plans).  W homogeneous workers → one
+  compile, one device program.
+* ``masked``     — every worker stays at BASE shape; its sub-model is a 0/1
+  coordinate mask (same masking idiom as ``kernels/pruned_matmul``: prune =
+  multiply by zero, never reshape), so *all* workers bucket together and
+  pruning events trigger **zero** reconfigure-recompiles (compiles happen
+  only per distinct fleet-stack shape — e.g. a different number of phase-B
+  pruners — never because a sub-model changed shape).  Masked training
+  is numerically equivalent to reconfigured training for the CNN family
+  here: a fully-masked filter produces exactly-zero activations, BN of an
+  all-zero channel is ``(0)*rsqrt(eps)*0+0 = 0``, and masked-loss gradients
+  vanish on pruned coordinates, so retained coordinates see the same
+  function as the physically-small model.
+
+Every engine consumes identical pre-drawn batch plans (``make_batch_plan``),
+which is what the equivalence tests pin down.  Compiles are counted in the
+underlying ``LocalTrainer.compile_count`` and surfaced as
+``SimResult.recompiles``.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Mapping, Optional, Sequence
+
+import numpy as np
+
+from repro.optim.group_lasso import group_size_sqrt
+
+from .aggregation import UnitMap, coordinate_mask, embed_params, extract_subparams
+from .masks import GlobalIndex
+from .worker import LocalTrainer, Params
+
+__all__ = ["ENGINES", "FleetJob", "FleetEngine"]
+
+ENGINES = ("sequential", "bucketed", "masked")
+
+
+@dataclasses.dataclass
+class FleetJob:
+    """One worker's local-training work item for a round phase."""
+
+    worker: int
+    params: Params            # reconfigured (physically small) sub-model
+    index: GlobalIndex        # its global index I_w (base coordinates)
+    x: np.ndarray             # this worker's data shard
+    y: np.ndarray
+    plan: np.ndarray          # [steps, batch] make_batch_plan output
+
+
+class FleetEngine:
+    """Dispatches a list of FleetJobs to one of the three training engines."""
+
+    def __init__(
+        self,
+        trainer: LocalTrainer,
+        unit_map: UnitMap,
+        base_shapes: Mapping[str, tuple],
+        engine: str = "sequential",
+    ):
+        if engine not in ENGINES:
+            raise ValueError(f"unknown engine {engine!r}; choose from {ENGINES}")
+        self.trainer = trainer
+        self.unit_map = unit_map
+        self.base_shapes = base_shapes
+        self.engine = engine
+        self.batched_calls = 0    # device programs launched for batched phases
+        self._mask_cache: Dict[tuple, Params] = {}
+
+    # ------------------------------------------------------------------
+    def train_all(self, jobs: Sequence[FleetJob], lam: float = 0.0) -> List[Params]:
+        """Train every job; returns reconfigured params aligned with ``jobs``."""
+        results: List[Optional[Params]] = [None] * len(jobs)
+        live = [i for i, j in enumerate(jobs) if j.plan.shape[0] > 0]
+        for i, j in enumerate(jobs):
+            if i not in live:   # empty plan: nothing to train
+                results[i] = {k: np.asarray(v) for k, v in j.params.items()}
+        if not live:
+            return results  # type: ignore[return-value]
+        if self.engine == "sequential":
+            for i in live:
+                j = jobs[i]
+                results[i], _ = self.trainer.train_plan(
+                    j.params, self.unit_map, j.x, j.y, j.plan, lam
+                )
+        elif self.engine == "bucketed":
+            self._run_bucketed(jobs, live, results, lam)
+        else:
+            self._run_masked(jobs, live, results, lam)
+        return results  # type: ignore[return-value]
+
+    # ------------------------------------------------------------------
+    @staticmethod
+    def _shape_sig(params: Params) -> tuple:
+        return tuple(sorted((k, v.shape) for k, v in params.items()))
+
+    def _run_bucketed(self, jobs, live, results, lam):
+        buckets: Dict[tuple, List[int]] = {}
+        for i in live:
+            j = jobs[i]
+            key = (self._shape_sig(j.params), j.x.shape, j.plan.shape)
+            buckets.setdefault(key, []).append(i)
+        for key, members in buckets.items():
+            js = [jobs[i] for i in members]
+            trained, _ = self.trainer.train_many(
+                [j.params for j in js],
+                self.unit_map,
+                np.stack([j.x for j in js]),
+                np.stack([j.y for j in js]),
+                np.stack([j.plan for j in js]),
+                lam,
+            )
+            self.batched_calls += 1
+            for i, p in zip(members, trained):
+                results[i] = p
+
+    def _mask_for(self, index: GlobalIndex) -> Params:
+        key = tuple(sorted((k, tuple(map(int, v))) for k, v in index.items()))
+        m = self._mask_cache.get(key)
+        if m is None:
+            m = {
+                path: coordinate_mask(path, index, self.unit_map, self.base_shapes)
+                .astype(np.float32)
+                for path in self.base_shapes
+            }
+            self._mask_cache[key] = m
+        return m
+
+    def _run_masked(self, jobs, live, results, lam):
+        # all workers share the base shape -> bucket only by shard/plan shape
+        buckets: Dict[tuple, List[int]] = {}
+        for i in live:
+            j = jobs[i]
+            buckets.setdefault((j.x.shape, j.plan.shape), []).append(i)
+        for key, members in buckets.items():
+            js = [jobs[i] for i in members]
+            embedded = [
+                embed_params(j.params, j.index, self.unit_map, self.base_shapes)
+                for j in js
+            ]
+            masks = [self._mask_for(j.index) for j in js]
+            # group-lasso sqrt|g| factors from the RECONFIGURED shapes, so the
+            # penalty matches the physically small model, not the base shapes
+            gl_sizes = [group_size_sqrt(j.params, self.unit_map) for j in js]
+            trained, _ = self.trainer.train_many(
+                embedded,
+                self.unit_map,
+                np.stack([j.x for j in js]),
+                np.stack([j.y for j in js]),
+                np.stack([j.plan for j in js]),
+                lam,
+                masks=masks,
+                gl_sizes=gl_sizes,
+            )
+            self.batched_calls += 1
+            for i, base_p in zip(members, trained):
+                # hand back the reconfigured view the rest of the pipeline uses
+                results[i] = extract_subparams(base_p, jobs[i].index, self.unit_map)

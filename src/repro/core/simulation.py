@@ -14,6 +14,23 @@ All methods share the same bandwidth assignment, data partition, and model
 init, as in the paper.  Update times are simulated through the channel model
 (training-time sensitivity to pruning is configurable, Appendix E); virtual
 time is what produces the paper's Time columns.
+
+Local training is dispatched through the **fleet engine** (``core.fleet``),
+selected by ``SimConfig.engine``:
+
+  * ``"sequential"`` — one scan-train call per worker (reference engine);
+  * ``"bucketed"``   — workers sharing a parameter-shape signature are
+    stacked and trained in one jitted ``vmap`` call;
+  * ``"masked"``     — all workers stay at base shape behind 0/1 unit masks
+    (the ``kernels/pruned_matmul`` idiom), so the whole fleet batches into a
+    single program and pruning causes zero reconfigure-recompiles.
+
+Minibatch plans are pre-drawn per worker in a fixed order, so all three
+engines consume identical batch sequences and produce numerically equivalent
+trained models (``tests/test_fleet_equivalence.py``).  ``SimResult`` reports
+``recompiles`` (jit shape-signatures compiled), ``batched_calls`` (device
+programs launched by the batched engines), and ``walltime_s`` (host
+wall-clock) so the engines' host-cost can be compared directly.
 """
 from __future__ import annotations
 
@@ -38,11 +55,12 @@ from repro.models.cnn import (
 )
 
 from .aggregation import aggregate_by_unit, aggregate_by_worker, extract_subparams
+from .fleet import FleetEngine, FleetJob
 from .importance import CIG_METHODS, METHODS, ImportanceContext
 from .masks import full_index, is_nested, payload_bytes, retention, similarity
 from .pruned_rate import PrunedRateConfig, WorkerHistory, learn_pruned_rates
 from .timing import HeterogeneityConfig, heterogeneity_from_times, make_bandwidths
-from .worker import LocalTrainer, local_unit_stats
+from .worker import LocalTrainer, local_unit_stats, make_batch_plan
 
 __all__ = ["SimConfig", "SimResult", "run_simulation", "default_cnn"]
 
@@ -80,6 +98,8 @@ class SimConfig:
     # (1-sparsity) fraction of each weight delta; the rest accumulates
     # locally until it crosses the threshold (momentum-factor-masking lite).
     dgc_sparsity: float = 0.0
+    # local-training engine: "sequential" | "bucketed" | "masked" (core.fleet)
+    engine: str = "sequential"
     cnn: CNNConfig = dataclasses.field(default_factory=default_cnn)
     task: Optional[SyntheticImageTask] = None
     eval_every: int = 1
@@ -103,6 +123,9 @@ class SimResult:
     recompiles: int
     similarity_traj: List[Tuple[int, float]]     # Eq. 3 between two workers
     update_times: List[List[float]]              # per round, per worker
+    engine: str = "sequential"                   # fleet engine that ran it
+    batched_calls: int = 0                       # vmapped device programs
+    walltime_s: float = 0.0                      # host wall-clock of the run
 
 
 def _accuracy(params, cfg, x, y, batch=256) -> float:
@@ -133,6 +156,9 @@ class _Env:
         self.full_flops = cnn_flops(self.base_params, sim.cnn)
         self.bandwidths = make_bandwidths(sim.het, self.full_bytes, sim.t_train_full)
         self.trainer = LocalTrainer(sim.cnn, lr=sim.lr)
+        self.fleet = FleetEngine(
+            self.trainer, self.unit_map, self.base_shapes, engine=sim.engine
+        )
         self.rng = np.random.default_rng(sim.seed + 17)
 
     def phi(self, worker: int, params, payload_factor: float = 1.0) -> float:
@@ -209,6 +235,12 @@ def _run_sync(sim: SimConfig, env: _Env) -> SimResult:
     for t in range(1, sim.rounds + 1):
         submissions = []
         phis = []
+        # --- phase A: every worker's pre-prune local training, one fleet
+        # call.  Batch plans are drawn in worker order up front so the batch
+        # sequences (and therefore the trained models) are identical across
+        # engines.
+        jobs_a: List[FleetJob] = []
+        plans_b: List[np.ndarray] = []
         for w in range(W):
             # server sends theta_g ⊙ I_w  (Alg. 1 line 9)
             params_w = extract_subparams(global_params, indices[w], env.unit_map)
@@ -216,17 +248,40 @@ def _run_sync(sim: SimConfig, env: _Env) -> SimResult:
             rate = pending_rates[w] if adapt else 0.0
             if adapt and rate > 0.0:
                 e1, e2 = sim.beta * sim.local_epochs, (1 - sim.beta) * sim.local_epochs
-                params_w, _ = env.trainer.train(params_w, env.unit_map, x, y, e1, sim.batch_size, env.rng, lam)
-                scores = _scores_for(sim, env, w, prune_round_count, params_w, indices[w], cig_scores)
-                params_w, indices[w] = env.trainer.prune_and_reconfigure(
-                    params_w, indices[w], scores, rate, env.space, env.unit_map
-                )
-                if e2 > 0:
-                    params_w, _ = env.trainer.train(params_w, env.unit_map, x, y, e2, sim.batch_size, env.rng, lam)
             else:
-                params_w, _ = env.trainer.train(
-                    params_w, env.unit_map, x, y, sim.local_epochs, sim.batch_size, env.rng, lam
+                e1, e2 = sim.local_epochs, 0.0
+            jobs_a.append(FleetJob(
+                worker=w, params=params_w, index=indices[w], x=x, y=y,
+                plan=make_batch_plan(len(x), sim.batch_size, e1, env.rng),
+            ))
+            plans_b.append(make_batch_plan(len(x), sim.batch_size, e2, env.rng))
+        trained_a = env.fleet.train_all(jobs_a, lam)
+
+        # --- phase B: pruning workers prune/reconfigure at position beta,
+        # then finish their remaining epochs (second fleet call).
+        worker_params: List[Dict[str, np.ndarray]] = list(trained_a)
+        jobs_b: List[FleetJob] = []
+        for w in range(W):
+            rate = pending_rates[w] if adapt else 0.0
+            if adapt and rate > 0.0:
+                scores = _scores_for(sim, env, w, prune_round_count,
+                                     worker_params[w], indices[w], cig_scores)
+                worker_params[w], indices[w] = env.trainer.prune_and_reconfigure(
+                    worker_params[w], indices[w], scores, rate, env.space, env.unit_map
                 )
+                if plans_b[w].shape[0] > 0:
+                    x, y = env.shard_xy(w)
+                    jobs_b.append(FleetJob(
+                        worker=w, params=worker_params[w], index=indices[w],
+                        x=x, y=y, plan=plans_b[w],
+                    ))
+        if jobs_b:
+            for job, trained in zip(jobs_b, env.fleet.train_all(jobs_b, lam)):
+                worker_params[job.worker] = trained
+
+        # --- submission: channel model + (optional) DGC delta compression.
+        for w in range(W):
+            params_w = worker_params[w]
             payload_factor = 1.0
             if sim.dgc_sparsity > 0.0:
                 received = extract_subparams(global_params, indices[w], env.unit_map)
@@ -342,9 +397,13 @@ def _run_async(sim: SimConfig, env: _Env) -> SimResult:
         finish, w = heapq.heappop(heap)
         clock = max(clock, finish)
         x, y = env.shard_xy(w)
-        trained, _ = env.trainer.train(
-            fetched[w], env.unit_map, x, y, sim.local_epochs, sim.batch_size, env.rng, lam
-        )
+        # async commits are one-at-a-time by construction, but they still pull
+        # trained results from the fleet so all engines share one train path
+        # (masked/bucketed amortize to a single jitted program here too).
+        [trained] = env.fleet.train_all([FleetJob(
+            worker=w, params=fetched[w], index=idx, x=x, y=y,
+            plan=make_batch_plan(len(x), sim.batch_size, sim.local_epochs, env.rng),
+        )], lam)
         staleness = version - fetched_ver[w]
         if method == "fedasync_s":
             a = sim.fedasync_a * (staleness + 1.0) ** -0.5
@@ -415,13 +474,19 @@ def _finalize(sim, env, acc_time, het_traj, sim_traj, upd_times, retentions,
         recompiles=env.trainer.compile_count,
         similarity_traj=sim_traj,
         update_times=upd_times,
+        engine=sim.engine,
+        batched_calls=env.fleet.batched_calls,
     )
 
 
 def run_simulation(sim: SimConfig) -> SimResult:
+    t0 = _time.perf_counter()
     env = _Env(sim)
     if sim.method in ("adaptcl", "fedavg", "fedavg_s"):
-        return _run_sync(sim, env)
-    if sim.method in ("fedasync_s", "ssp_s", "dcasgd_s"):
-        return _run_async(sim, env)
-    raise ValueError(f"unknown method {sim.method}")
+        result = _run_sync(sim, env)
+    elif sim.method in ("fedasync_s", "ssp_s", "dcasgd_s"):
+        result = _run_async(sim, env)
+    else:
+        raise ValueError(f"unknown method {sim.method}")
+    result.walltime_s = _time.perf_counter() - t0
+    return result

@@ -5,6 +5,19 @@ SparseTrain -> NetworkPrune -> NetworkReconfigure.  A worker holds a
 Training steps are jitted per parameter-shape signature; a reconfiguration
 triggers one recompilation (counted in the overhead benchmark — this is the
 JAX analogue of PruneTrain's model rebuild).
+
+Two training entry points:
+
+* ``train`` / ``train_plan`` — one worker per call (the sequential engine);
+* ``train_many`` — a *stack* of same-shaped workers trained in one jitted
+  ``vmap``-of-``scan`` call (stacked params, stacked shards, stacked batch
+  plans, stacked optimizer state), optionally with per-worker 0/1 parameter
+  masks so heterogeneous sub-models can share the base shape (the fleet
+  engine's bucketed/masked modes, see ``core.fleet``).
+
+Batch order is decoupled from the training loop via ``make_batch_plan`` so
+every engine consumes the *same* minibatch sequence from the same RNG —
+that is what makes the engines numerically equivalent.
 """
 from __future__ import annotations
 
@@ -16,14 +29,43 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.models.cnn import CNNConfig, cnn_apply
-from repro.optim.group_lasso import group_lasso_penalty
+from repro.optim.group_lasso import group_lasso_penalty, group_size_sqrt
 from repro.optim.optimizers import apply_updates, momentum
 
 from .masks import GlobalIndex, prune_to_budget
 
-__all__ = ["LocalTrainer", "reslice_subparams", "local_unit_stats"]
+__all__ = ["LocalTrainer", "make_batch_plan", "reslice_subparams", "local_unit_stats"]
 
 Params = Dict[str, np.ndarray]
+
+
+def make_batch_plan(
+    n: int, batch_size: int, epochs: float, rng: np.random.Generator
+) -> np.ndarray:
+    """Pre-draw the minibatch index sequence for one local training phase.
+
+    Returns ``[steps, batch_size]`` int64 indices into the worker's shard,
+    replicating ``LocalTrainer.train``'s batching exactly (fresh permutation
+    per epoch, short final batch padded from the epoch's head, fractional
+    epochs honoured).  ``epochs <= 0`` returns an empty ``[0, batch_size]``
+    plan without consuming RNG state.
+    """
+    if epochs <= 0 or n <= 0:
+        return np.zeros((0, batch_size), dtype=np.int64)
+    total = max(1, int(round(epochs * n)))
+    sels = []
+    done = 0
+    while done < total:
+        order = rng.permutation(n)
+        for i in range(0, n, batch_size):
+            if done >= total:
+                break
+            sel = order[i : i + batch_size]
+            if len(sel) < batch_size:  # keep shapes static for the jit cache
+                sel = np.concatenate([sel, order[: batch_size - len(sel)]])
+            sels.append(sel.astype(np.int64))
+            done += batch_size
+    return np.stack(sels)
 
 
 def reslice_subparams(
@@ -52,12 +94,8 @@ class LocalTrainer:
         self._step_cache: Dict = {}
         self.compile_count = 0  # reconfigure-induced recompiles (overhead bench)
 
-    def _get_step(self, params: Params, unit_map, lam: float):
-        sig = (tuple(sorted((k, v.shape) for k, v in params.items())), lam > 0.0)
-        if sig in self._step_cache:
-            return self._step_cache[sig]
-        cfg, lr, beta = self.cfg, self.lr, self.beta
-        opt = momentum(lr, beta)
+    def _make_loss(self, unit_map, lam: float):
+        cfg = self.cfg
         frozen_map = {k: tuple(v) for k, v in unit_map.items()}
 
         def loss_fn(p, x, y):
@@ -68,20 +106,16 @@ class LocalTrainer:
                 ce = ce + group_lasso_penalty(p, frozen_map, lam)
             return ce
 
-        @jax.jit
-        def step(p, opt_state, x, y):
-            loss, grads = jax.value_and_grad(loss_fn)(p, x, y)
-            updates, opt_state = opt.update(grads, opt_state, p)
-            return apply_updates(p, updates), opt_state, loss
+        return loss_fn
 
-        @jax.jit
-        def grad_fn(p, x, y):
-            return jax.grad(loss_fn)(p, x, y)
-
-        entry = (step, opt.init, grad_fn)
-        self._step_cache[sig] = entry
-        self.compile_count += 1
-        return entry
+    def _get_grad(self, params: Params, unit_map, lam: float):
+        sig = self._plan_sig(params, "grad", lam)
+        fn = self._step_cache.get(sig)
+        if fn is None:
+            fn = jax.jit(jax.grad(self._make_loss(unit_map, lam)))
+            self._step_cache[sig] = fn
+            self.compile_count += 1
+        return fn
 
     def train(
         self,
@@ -94,32 +128,143 @@ class LocalTrainer:
         rng: np.random.Generator,
         lam: float = 0.0,
     ) -> Tuple[Params, float]:
-        """Returns (new params, mean loss)."""
-        if epochs <= 0:
-            return params, float("nan")
-        step, opt_init, _ = self._get_step(params, unit_map, lam)
-        p = {k: jnp.asarray(v) for k, v in params.items()}
-        opt_state = opt_init(p)
-        losses = []
-        n = len(x)
-        total = max(1, int(round(epochs * n)))
-        done = 0
-        while done < total:
-            order = rng.permutation(n)
-            for i in range(0, n, batch_size):
-                if done >= total:
-                    break
-                sel = order[i : i + batch_size]
-                if len(sel) < batch_size:  # keep shapes static for the jit cache
-                    sel = np.concatenate([sel, order[: batch_size - len(sel)]])
-                p, opt_state, loss = step(p, opt_state, jnp.asarray(x[sel]), jnp.asarray(y[sel]))
-                losses.append(float(loss))
-                done += batch_size
-        return {k: np.asarray(v) for k, v in p.items()}, float(np.mean(losses))
+        """Returns (new params, mean loss) — make_batch_plan + train_plan."""
+        plan = make_batch_plan(len(x), batch_size, epochs, rng)
+        return self.train_plan(params, unit_map, x, y, plan, lam)
+
+    # ---- plan-based training (fleet engine paths) ------------------------
+
+    def _make_plan_train(self, unit_map, lam: float, masked: bool):
+        """scan-over-plan trainer for ONE worker; vmap-able across a stack.
+
+        The masked variant takes the worker's 0/1 parameter mask plus its
+        sqrt-group-size factors (``group_size_sqrt`` of the *reconfigured*
+        sub-model) so the group-lasso penalty matches the physically small
+        model exactly, not the base shapes the masked program runs at.
+        """
+        cfg, opt = self.cfg, momentum(self.lr, self.beta)
+        frozen_map = {k: tuple(v) for k, v in unit_map.items()}
+
+        def ce(p, xb, yb):
+            logits = cnn_apply(p, cfg, xb)
+            logp = jax.nn.log_softmax(logits)
+            return -jnp.take_along_axis(logp, yb[:, None], axis=1).mean()
+
+        def scan_train(loss_fn, p, x, y, plan):
+            opt_state = opt.init(p)
+
+            def body(carry, sel):
+                q, st = carry
+                loss, grads = jax.value_and_grad(loss_fn)(q, x[sel], y[sel])
+                updates, st = opt.update(grads, st, q)
+                return (apply_updates(q, updates), st), loss
+
+            (p, _), losses = jax.lax.scan(body, (p, opt_state), plan)
+            return p, jnp.mean(losses)
+
+        if not masked:
+
+            def train_one(p, x, y, plan):
+                def loss_fn(q, xb, yb):
+                    l = ce(q, xb, yb)
+                    if lam > 0.0:
+                        l = l + group_lasso_penalty(q, frozen_map, lam)
+                    return l
+
+                return scan_train(loss_fn, p, x, y, plan)
+
+        else:
+
+            def train_one(p, x, y, plan, mask, gl_size):
+                def loss_fn(q, xb, yb):
+                    qm = jax.tree.map(lambda w, m: w * m, q, mask)
+                    l = ce(qm, xb, yb)
+                    if lam > 0.0:
+                        l = l + group_lasso_penalty(qm, frozen_map, lam, size_sqrt=gl_size)
+                    return l
+
+                p, loss = scan_train(loss_fn, p, x, y, plan)
+                return jax.tree.map(lambda w, m: w * m, p, mask), loss
+
+        return train_one
+
+    def _plan_sig(self, params: Params, extra, lam: float) -> tuple:
+        # lam is baked into the compiled closure, so it must key the cache
+        return (tuple(sorted((k, v.shape) for k, v in params.items())), extra, float(lam))
+
+    def train_plan(
+        self, params: Params, unit_map, x: np.ndarray, y: np.ndarray,
+        plan: np.ndarray, lam: float = 0.0,
+    ) -> Tuple[Params, float]:
+        """Train one worker through a pre-drawn ``make_batch_plan`` plan."""
+        if plan.shape[0] == 0:
+            return {k: np.asarray(v) for k, v in params.items()}, float("nan")
+        sig = self._plan_sig(params, ("plan", x.shape, plan.shape), lam)
+        fn = self._step_cache.get(sig)
+        if fn is None:
+            fn = jax.jit(self._make_plan_train(unit_map, lam, masked=False))
+            self._step_cache[sig] = fn
+            self.compile_count += 1
+        p, loss = fn(
+            {k: jnp.asarray(v) for k, v in params.items()},
+            jnp.asarray(x), jnp.asarray(y), jnp.asarray(plan),
+        )
+        return {k: np.asarray(v) for k, v in p.items()}, float(loss)
+
+    def train_many(
+        self,
+        params_list: Sequence[Params],
+        unit_map,
+        xs: np.ndarray,           # [B, n, ...] stacked shards
+        ys: np.ndarray,           # [B, n]
+        plans: np.ndarray,        # [B, steps, batch]
+        lam: float = 0.0,
+        masks: Optional[Sequence[Params]] = None,   # per-worker 0/1, same shapes
+        gl_sizes: Optional[Sequence[Dict[str, float]]] = None,  # sqrt|g| per layer
+    ) -> Tuple[List[Params], List[float]]:
+        """Train a stack of same-shaped workers in ONE jitted vmapped call.
+
+        All workers must share a parameter-shape signature (the fleet engine
+        buckets by it); ``masks`` turns on the masked mode where heterogeneous
+        sub-models ride the base shape as 0/1 unit masks, so gradients (and
+        the stacked momentum state) are exactly zero on pruned coordinates.
+        """
+        B = len(params_list)
+        assert xs.shape[0] == ys.shape[0] == plans.shape[0] == B
+        stacked = {
+            k: jnp.stack([jnp.asarray(p[k]) for p in params_list])
+            for k in params_list[0]
+        }
+        masked = masks is not None
+        sig = self._plan_sig(
+            params_list[0], ("many", B, xs.shape[1:], plans.shape[1:], masked), lam
+        )
+        fn = self._step_cache.get(sig)
+        if fn is None:
+            fn = jax.jit(jax.vmap(self._make_plan_train(unit_map, lam, masked=masked)))
+            self._step_cache[sig] = fn
+            self.compile_count += 1
+        args = [stacked, jnp.asarray(xs), jnp.asarray(ys), jnp.asarray(plans)]
+        if masked:
+            args.append({
+                k: jnp.stack([jnp.asarray(m[k]) for m in masks])
+                for k in params_list[0]
+            })
+            if gl_sizes is None:  # fall back to the shapes the stack runs at
+                gl_sizes = [group_size_sqrt(p, unit_map) for p in params_list]
+            args.append({
+                lname: jnp.asarray([s[lname] for s in gl_sizes], jnp.float32)
+                for lname in gl_sizes[0]
+            })
+        out, losses = fn(*args)
+        return (
+            [{k: np.asarray(v[i]) for k, v in out.items()} for i in range(B)],
+            [float(l) for l in losses],
+        )
 
     def gradient(self, params: Params, unit_map, x, y, lam: float = 0.0) -> Params:
         """One-batch gradient (DC-ASGD commits gradients, not models)."""
-        _, _, grad_fn = self._get_step(params, unit_map, lam)
+        grad_fn = self._get_grad(params, unit_map, lam)
         g = grad_fn({k: jnp.asarray(v) for k, v in params.items()}, jnp.asarray(x), jnp.asarray(y))
         return {k: np.asarray(v) for k, v in g.items()}
 

@@ -15,8 +15,9 @@ from typing import Dict, Mapping, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
-__all__ = ["group_lasso_penalty", "unit_group_norms"]
+__all__ = ["group_lasso_penalty", "unit_group_norms", "group_size_sqrt"]
 
 
 def _axes_except(arr, axis):
@@ -41,14 +42,42 @@ def unit_group_norms(
     return {k: jnp.sqrt(jnp.maximum(v, 1e-12)) for k, v in sq.items()}, size  # type: ignore[return-value]
 
 
+def group_size_sqrt(params, unit_map) -> Dict[str, float]:
+    """sqrt(|g|) per unit layer, from the (possibly reconfigured) shapes.
+
+    Masked-mode training keeps every worker at base shape, where the group
+    sizes read off the arrays would be the *base* model's; computing them
+    from the worker's reconfigured sub-params and feeding them to
+    ``group_lasso_penalty`` keeps the penalty identical to the physically
+    reconfigured model's."""
+    size: Dict[str, int] = {}
+    for path, entries in unit_map.items():
+        arr = params.get(path)
+        if arr is None:
+            continue
+        for lname, axis in entries:
+            size[lname] = size.get(lname, 0) + int(arr.size // arr.shape[axis])
+    return {k: float(np.sqrt(v)) for k, v in size.items()}
+
+
 def group_lasso_penalty(
     params: Mapping[str, jnp.ndarray],
     unit_map: Mapping[str, Sequence[Tuple[str, int]]],
     lam: float,
+    size_sqrt: Mapping[str, jnp.ndarray] | None = None,
 ) -> jnp.ndarray:
-    """lambda * sum_g sqrt(|g|) ||theta_g||_2 over prunable units."""
+    """lambda * sum_g sqrt(|g|) ||theta_g||_2 over prunable units.
+
+    ``size_sqrt`` overrides the shape-derived sqrt(|g|) factor per unit layer
+    (see ``group_size_sqrt``); groups whose norm is exactly zero contribute a
+    constant and zero gradient, so masked sub-models are penalized like their
+    reconfigured twins."""
     norms, sizes = unit_group_norms(params, unit_map)
     total = jnp.zeros((), jnp.float32)
     for lname, n in norms.items():
-        total = total + jnp.sqrt(jnp.asarray(float(sizes[lname]))) * jnp.sum(n)
+        if size_sqrt is not None:
+            factor = size_sqrt[lname]
+        else:
+            factor = jnp.sqrt(jnp.asarray(float(sizes[lname])))
+        total = total + factor * jnp.sum(n)
     return lam * total

@@ -1,0 +1,12 @@
+"""Shared fixtures: every test starts from the same global RNG state, so
+stochastic helpers that fall back to the global generators are repeatable."""
+import random
+
+import numpy as np
+import pytest
+
+
+@pytest.fixture(autouse=True)
+def _seed_global_rngs():
+    random.seed(0)
+    np.random.seed(0)

@@ -1,0 +1,56 @@
+"""Unit tests for the DGC delta compressor (`simulation._dgc_compress`)."""
+import numpy as np
+import pytest
+
+from repro.core.simulation import _dgc_compress
+
+
+def _delta(rng, shapes):
+    return {k: rng.normal(size=s).astype(np.float32) for k, s in shapes.items()}
+
+
+SHAPES = {"a/w": (3, 3, 2, 4), "b/w": (8,)}
+
+
+def test_committed_plus_residual_is_accumulated_delta():
+    rng = np.random.default_rng(0)
+    delta = _delta(rng, SHAPES)
+    residual = _delta(rng, SHAPES)
+    committed, new_res, _ = _dgc_compress(delta, residual, 0.7)
+    for k in delta:
+        acc = delta[k] + residual[k]
+        np.testing.assert_allclose(committed[k] + new_res[k], acc, atol=1e-6)
+        # committed entries are exactly the largest-|.| entries of acc
+        assert np.count_nonzero(new_res[k] * committed[k]) == 0
+
+
+def test_payload_factor_bounds():
+    rng = np.random.default_rng(1)
+    delta = _delta(rng, SHAPES)
+    for sparsity in (0.0, 0.5, 0.9, 0.999):
+        _, _, factor = _dgc_compress(delta, {}, sparsity)
+        assert 0.0 < factor <= 1.25
+    # denser commits cost more
+    f_low = _dgc_compress(delta, {}, 0.9)[2]
+    f_high = _dgc_compress(delta, {}, 0.5)[2]
+    assert f_low < f_high
+
+
+def test_shape_change_drops_residual():
+    rng = np.random.default_rng(2)
+    delta = _delta(rng, SHAPES)
+    # a reconfiguration shrank "b/w": stale residual must be ignored
+    residual = {"b/w": rng.normal(size=(16,)).astype(np.float32)}
+    committed, new_res, _ = _dgc_compress(delta, residual, 0.5)
+    for k in delta:
+        np.testing.assert_allclose(committed[k] + new_res[k], delta[k], atol=1e-6)
+
+
+def test_zero_sparsity_commits_everything():
+    rng = np.random.default_rng(3)
+    delta = _delta(rng, SHAPES)
+    committed, new_res, factor = _dgc_compress(delta, {}, 0.0)
+    for k in delta:
+        np.testing.assert_allclose(committed[k], delta[k])
+        assert not new_res[k].any()
+    assert factor == pytest.approx(1.25)

@@ -1,0 +1,126 @@
+"""Fleet-engine equivalence: bucketed and masked training must reproduce the
+sequential `LocalTrainer` reference — per-worker params at the fleet level,
+and end-to-end `SimResult` metrics through the simulator."""
+import numpy as np
+import pytest
+
+from repro.core.fleet import FleetEngine, FleetJob
+from repro.core.masks import full_index, prune_to_budget
+from repro.core.simulation import SimConfig, run_simulation
+from repro.core.timing import HeterogeneityConfig
+from repro.core.worker import LocalTrainer, make_batch_plan
+from repro.models.cnn import build_unit_space, init_cnn, vgg_config
+
+TINY = vgg_config("vgg_tiny_eqv", [8, "M", 16], num_classes=4, image_size=8)
+
+
+def _sim(method, engine, **kw):
+    base = dict(
+        method=method,
+        engine=engine,
+        rounds=3,
+        prune_interval=2,
+        num_workers=4,
+        cnn=TINY,
+        het=HeterogeneityConfig(num_workers=4, sigma=3.0),
+        eval_every=1,
+        seed=5,
+    )
+    base.update(kw)
+    return run_simulation(SimConfig(**base))
+
+
+def _fleet_fixture():
+    """4 workers: two at full shape, two pruned to different sub-models."""
+    import jax
+
+    params = {k: np.asarray(v) for k, v in init_cnn(jax.random.PRNGKey(0), TINY).items()}
+    space, unit_map = build_unit_space(TINY, params)
+    base_shapes = {k: v.shape for k, v in params.items()}
+    rng = np.random.default_rng(0)
+    scores = {l.name: rng.normal(size=l.num_units) for l in space.layers}
+    full = full_index(space)
+    idx_a = prune_to_budget(full, scores, 0.3, space)
+    idx_b = prune_to_budget(full, scores, 0.5, space)
+
+    from repro.core.aggregation import extract_subparams
+
+    indices = [full, full, idx_a, idx_b]
+    worker_params = [extract_subparams(params, idx, unit_map) for idx in indices]
+    xs = [rng.normal(size=(64, 8, 8, 3)).astype(np.float32) for _ in range(4)]
+    ys = [rng.integers(0, 4, 64).astype(np.int32) for _ in range(4)]
+    return unit_map, base_shapes, indices, worker_params, xs, ys
+
+
+def _train_all(engine, unit_map, base_shapes, indices, worker_params, xs, ys, lam):
+    trainer = LocalTrainer(TINY, lr=0.05)
+    fleet = FleetEngine(trainer, unit_map, base_shapes, engine=engine)
+    rng = np.random.default_rng(7)  # same plan stream for every engine
+    jobs = [
+        FleetJob(worker=w, params=worker_params[w], index=indices[w],
+                 x=xs[w], y=ys[w], plan=make_batch_plan(64, 16, 1.0, rng))
+        for w in range(4)
+    ]
+    return fleet.train_all(jobs, lam), trainer.compile_count
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("lam", [0.0, 1e-3, 1e-2])
+def test_per_worker_params_match_sequential(lam):
+    fixture = _fleet_fixture()
+    ref, _ = _train_all("sequential", *fixture, lam)
+    for engine in ("bucketed", "masked"):
+        out, _ = _train_all(engine, *fixture, lam)
+        for w in range(4):
+            for k in ref[w]:
+                np.testing.assert_allclose(
+                    out[w][k], ref[w][k], atol=1e-3,
+                    err_msg=f"{engine} worker {w} param {k}",
+                )
+
+
+def test_bucketed_groups_same_shapes_into_one_program():
+    fixture = _fleet_fixture()
+    _, compiles = _train_all("bucketed", *fixture, 0.0)
+    # 4 workers but only 3 distinct shape signatures -> 3 compiled programs
+    assert compiles == 3
+
+
+def test_masked_engine_single_program():
+    fixture = _fleet_fixture()
+    _, compiles = _train_all("masked", *fixture, 0.0)
+    assert compiles == 1
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("method", ["adaptcl", "fedavg_s"])
+def test_sim_results_equivalent_across_engines(method):
+    seq = _sim(method, "sequential")
+    for engine in ("bucketed", "masked"):
+        alt = _sim(method, engine)
+        assert alt.final_acc == pytest.approx(seq.final_acc, abs=1e-3)
+        assert alt.best_acc == pytest.approx(seq.best_acc, abs=1e-3)
+        # virtual time / retention depend on shapes and shared RNG draws only
+        assert alt.total_time == pytest.approx(seq.total_time, rel=1e-9)
+        assert alt.retentions == pytest.approx(seq.retentions)
+        assert alt.engine == engine
+
+
+@pytest.mark.slow
+def test_recompiles_sublinear_in_pruning_events():
+    """10 heterogeneous workers, 3 prune events: batched engines must compile
+    fewer programs than the workers x prune-events recompile model."""
+    rounds, pi, workers = 6, 2, 10
+    events = rounds // pi
+    kw = dict(rounds=rounds, prune_interval=pi, num_workers=workers,
+              het=HeterogeneityConfig(num_workers=workers, sigma=5.0), eval_every=3)
+    seq = _sim("adaptcl", "sequential", **kw)
+    buck = _sim("adaptcl", "bucketed", **kw)
+    mask = _sim("adaptcl", "masked", **kw)
+    assert buck.recompiles < workers * events
+    assert mask.recompiles < workers * events
+    # masked mode never reconfigures: one program for the whole run
+    assert mask.recompiles <= 2
+    assert mask.batched_calls == rounds
+    for alt in (buck, mask):
+        assert alt.final_acc == pytest.approx(seq.final_acc, abs=1e-3)

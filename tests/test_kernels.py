@@ -89,6 +89,7 @@ def test_rg_lru_scan(blocks):
     np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=2e-4, rtol=2e-4)
 
 
+@pytest.mark.slow
 def test_rg_lru_matches_model_recurrence():
     """The kernel computes the same recurrence the RG-LRU block uses."""
     from repro.models.rglru import RGLRUSpec, init_rglru, rglru_fwd

@@ -11,6 +11,8 @@ from repro.models import transformer as T
 from repro.models.config import apply_retention, param_count
 from repro.optim.optimizers import adamw, apply_updates
 
+pytestmark = pytest.mark.slow  # one jit per arch x test; quick pass skips
+
 ARCHS = list_archs()
 
 

@@ -1,5 +1,13 @@
-"""Hypothesis property tests on system invariants."""
+"""Hypothesis property tests on system invariants.
+
+``hypothesis`` is an *optional* test dependency (see tests/requirements-test.txt);
+the module skips cleanly when it is not installed.
+"""
 import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis")
+
 from hypothesis import given, settings, strategies as st
 
 from repro.core.importance import METHODS, ImportanceContext

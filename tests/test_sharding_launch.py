@@ -77,6 +77,7 @@ def test_input_specs_cover_all_shapes():
                 assert specs["token"].shape == (shp.global_batch,)
 
 
+@pytest.mark.slow
 def test_make_step_lowers_on_local_mesh():
     """End-to-end lowering of train + decode steps on a trivial mesh."""
     from repro.launch import dryrun as D

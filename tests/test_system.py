@@ -2,6 +2,8 @@
 import numpy as np
 import pytest
 
+pytestmark = pytest.mark.slow  # full simulator runs; quick pass: -m "not slow"
+
 from repro.core.pruned_rate import PrunedRateConfig
 from repro.core.simulation import SimConfig, run_simulation
 from repro.core.timing import HeterogeneityConfig
