@@ -1,6 +1,12 @@
 """Benchmark harness: one function per paper table (``name,value,derived`` CSV).
 
     PYTHONPATH=src python -m benchmarks.run [--only table2_main] [--quick]
+    PYTHONPATH=src python -m benchmarks.run scale [--quick] [--out BENCH_scale.json]
+
+``scale`` is the fleet-scaling bench: W in {10, 50, 200} x engine x scenario,
+tracking host walltime / recompiles / host round-trips of the resident masked
+engine against the sequential reference.  Results land in ``BENCH_scale.json``
+so the perf trajectory is tracked across PRs.
 
 Roofline rows are read from ``results/roofline_single.jsonl`` if the dry-run
 sweep has been run (``python -m repro.launch.roofline --out ...``); the
@@ -37,10 +43,73 @@ def roofline_table(path="results/roofline_single.jsonl"):
         )
 
 
+def scale(out_path: str = "BENCH_scale.json", quick: bool = False) -> None:
+    """Fleet-scaling bench: W x engine x scenario host-cost grid.
+
+    The resident masked engine's host cost per round is ~flat in W (one
+    device program + stacked aggregation), so W=200 stays within a small
+    factor of W=10 — while the sequential reference pays W jit dispatches and
+    2W extract/embed round-trips per round."""
+    from repro.core.scenario import ScenarioConfig
+    from repro.core.simulation import SimConfig, run_simulation
+    from repro.core.timing import HeterogeneityConfig
+    from repro.models.cnn import vgg_config
+
+    cnn = vgg_config("vgg_scale", [16, "M", 32], num_classes=10, image_size=8)
+    worker_counts = (4, 12) if quick else (10, 50, 200)
+    rounds = 2 if quick else 3
+    scenarios = {
+        "full": None,
+        "flaky": ScenarioConfig(
+            participation=0.5, dropout=0.1, churn=0.02, seed=1
+        ),
+    }
+    rows = []
+    print("name,value,derived")
+    for W in worker_counts:
+        for engine in ("sequential", "masked"):
+            for scen_name, scen in scenarios.items():
+                r = run_simulation(SimConfig(
+                    method="adaptcl", engine=engine, scenario=scen,
+                    rounds=rounds, prune_interval=2, num_workers=W,
+                    batch_size=8, cnn=cnn, eval_every=rounds,
+                    het=HeterogeneityConfig(num_workers=W, sigma=5.0),
+                    seed=7,
+                ))
+                rows.append(dict(
+                    workers=W, engine=engine, scenario=scen_name,
+                    rounds=rounds, walltime_s=r.walltime_s,
+                    recompiles=r.recompiles, batched_calls=r.batched_calls,
+                    host_roundtrips=r.host_roundtrips,
+                    final_acc=r.final_acc, total_time=r.total_time,
+                ))
+                print(
+                    f"scale/W{W}/{engine}/{scen_name},{r.walltime_s:.2f}s,"
+                    f"recompiles={r.recompiles};roundtrips={r.host_roundtrips};"
+                    f"batched={r.batched_calls};acc={r.final_acc:.3f}"
+                )
+    by = {(row["workers"], row["engine"], row["scenario"]): row for row in rows}
+    lo, hi = worker_counts[0], worker_counts[-1]
+    for scen_name in scenarios:
+        ratio = (by[(hi, "masked", scen_name)]["walltime_s"]
+                 / max(by[(lo, "masked", scen_name)]["walltime_s"], 1e-9))
+        print(f"scale/masked_W{hi}_over_W{lo}/{scen_name},{ratio:.2f}x,"
+              f"resident host cost ~flat in W (target < 3x)")
+    with open(out_path, "w") as f:
+        json.dump({"rows": rows, "worker_counts": list(worker_counts)}, f, indent=2)
+    print(f"scale/json,{out_path},")
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
+    ap.add_argument(
+        "command", nargs="?", default="tables", choices=("tables", "scale"),
+        help="'tables' (default) = paper-table benches; 'scale' = fleet-scaling grid",
+    )
     ap.add_argument("--only", default=None)
     ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--out", default="BENCH_scale.json",
+                    help="output JSON for the 'scale' command")
     ap.add_argument(
         "--engine", default="sequential",
         choices=("sequential", "bucketed", "masked"),
@@ -50,6 +119,10 @@ def main() -> None:
     if args.quick:
         os.environ["BENCH_QUICK"] = "1"
     os.environ["BENCH_ENGINE"] = args.engine
+
+    if args.command == "scale":
+        scale(args.out, quick=args.quick)
+        return
 
     from benchmarks import tables  # import after BENCH_QUICK is set
 

@@ -162,6 +162,7 @@ def engines():
         _row(
             f"engines/{engine}/walltime_s", f"{r.walltime_s:.2f}",
             f"recompiles={r.recompiles};batched_calls={r.batched_calls};"
+            f"roundtrips={r.host_roundtrips};"
             f"speedup_vs_seq={base.walltime_s / max(r.walltime_s, 1e-9):.2f}x;"
             f"final_acc={r.final_acc:.4f}",
         )

@@ -6,16 +6,20 @@ By-worker aggregation — against the FedAVG-S baseline, and prints the
 Table II-style comparison.
 
     PYTHONPATH=src python examples/adaptcl_sim.py [--rounds 30] [--sigma 2] \
-        [--engine masked]
+        [--workers 10] [--engine masked] [--scenario 0.5,0.1,0.02]
 
-``--engine masked`` (or ``bucketed``) batches all workers' local training
-into vmapped device programs (core.fleet) — same results, much faster host
-wall-clock at high worker counts.
+``--engine masked`` runs the resident fleet engine (core.fleet.FleetState):
+all workers live as [W, ...] base-shape stacks on device, so host wall-clock
+is ~flat in worker count — try ``--workers 200 --engine masked``.
+
+``--scenario C,dropout,churn`` turns on the flaky-fleet scenario layer
+(per-round client sampling with fraction C, straggler dropout, slot churn).
 """
 import argparse
 
 import numpy as np
 
+from repro.core.scenario import ScenarioConfig
 from repro.core.simulation import SimConfig, run_simulation
 from repro.core.timing import HeterogeneityConfig
 
@@ -25,9 +29,17 @@ def main():
     ap.add_argument("--rounds", type=int, default=30)
     ap.add_argument("--sigma", type=float, default=2.0)
     ap.add_argument("--noniid", type=float, default=80.0)
+    ap.add_argument("--workers", type=int, default=10)
     ap.add_argument("--engine", default="sequential",
                     choices=("sequential", "bucketed", "masked"))
+    ap.add_argument("--scenario", default=None, metavar="C,DROPOUT,CHURN",
+                    help="client sampling fraction, dropout prob, churn prob")
     args = ap.parse_args()
+
+    scenario = None
+    if args.scenario:
+        c, drop, churn = (float(v) for v in args.scenario.split(","))
+        scenario = ScenarioConfig(participation=c, dropout=drop, churn=churn)
 
     results = {}
     for method in ("fedavg_s", "adaptcl"):
@@ -35,15 +47,18 @@ def main():
             method=method,
             rounds=args.rounds,
             prune_interval=5,
+            num_workers=args.workers,
             noniid_s=args.noniid,
-            het=HeterogeneityConfig(sigma=args.sigma),
+            het=HeterogeneityConfig(num_workers=args.workers, sigma=args.sigma),
             engine=args.engine,
+            scenario=scenario,
         )
         r = run_simulation(sim)
         results[method] = r
         print(f"[{method:9s}] best_acc={r.best_acc:.3f} time={r.total_time:.0f}s "
               f"param_red={r.param_reduction:.1%} "
-              f"(host: {r.walltime_s:.1f}s, {r.recompiles} compiles, engine={r.engine})")
+              f"(host: {r.walltime_s:.1f}s, {r.recompiles} compiles, "
+              f"{r.host_roundtrips} roundtrips, engine={r.engine})")
         if method == "adaptcl":
             print(f"            retentions={[round(g, 2) for g in r.retentions]}")
             hs = [f"{h:.2f}" for _, h in r.het_traj[:: max(1, args.rounds // 8)]]

@@ -14,6 +14,20 @@ Parameters are flat ``{path: array}`` dicts in base coordinates; ``unit_map``
 says which prunable unit layer governs which axis of which param:
 ``unit_map[path] = [(layer_name, axis), ...]`` (a 2-D weight can be governed
 on both axes by different unit layers).
+
+Two aggregation representations are supported:
+
+* **per-worker lists** (``aggregate_by_worker`` / ``aggregate_by_unit``):
+  reconfigured submissions + indices, embedded one at a time — the
+  submission-boundary path;
+* **resident stacks** (``aggregate_by_worker_stacked`` /
+  ``aggregate_by_unit_stacked``): ``[W, ...]`` base-coordinate param/mask
+  stacks consumed directly (masked mean), with a per-worker weight vector —
+  the resident fleet engine's path, no per-worker embed calls.
+
+``extract_subparams`` and ``embed_params`` count their invocations in
+``ROUNDTRIP_COUNTS`` so the simulator can assert that the resident engine
+performs zero host round-trips inside the round loop.
 """
 from __future__ import annotations
 
@@ -28,12 +42,30 @@ __all__ = [
     "embed_params",
     "coordinate_mask",
     "extract_subparams",
+    "subparam_shapes",
     "aggregate_by_worker",
     "aggregate_by_unit",
+    "aggregate_by_worker_stacked",
+    "aggregate_by_unit_stacked",
+    "ROUNDTRIP_COUNTS",
+    "roundtrip_total",
+    "reset_roundtrip_counts",
 ]
 
 UnitMap = Mapping[str, Sequence[Tuple[str, int]]]
 Params = Dict[str, np.ndarray]
+
+# host extract/embed round-trip counters (see module docstring)
+ROUNDTRIP_COUNTS: Dict[str, int] = {"extract_subparams": 0, "embed_params": 0}
+
+
+def roundtrip_total() -> int:
+    return sum(ROUNDTRIP_COUNTS.values())
+
+
+def reset_roundtrip_counts() -> None:
+    for k in ROUNDTRIP_COUNTS:
+        ROUNDTRIP_COUNTS[k] = 0
 
 
 def _full_dims(base_shapes: Mapping[str, tuple], path: str, axis: int) -> int:
@@ -45,6 +77,7 @@ def extract_subparams(
 ) -> Params:
     """theta_g ⊙ I_w (Alg. 1 server line 9): slice the sub-model out of the
     global model along every governed axis."""
+    ROUNDTRIP_COUNTS["extract_subparams"] += 1
     out: Params = {}
     for path, arr in global_params.items():
         for lname, axis in unit_map.get(path, ()):  # successive axis slices
@@ -60,6 +93,7 @@ def embed_params(
     base_shapes: Mapping[str, tuple],
 ) -> Params:
     """Zero-fill sub-model params into base coordinates."""
+    ROUNDTRIP_COUNTS["embed_params"] += 1
     out: Params = {}
     for path, arr in sub_params.items():
         for lname, axis in unit_map.get(path, ()):
@@ -128,3 +162,52 @@ def aggregate_by_unit(
             num[path] = num.get(path, 0.0) + arr.astype(np.float64)
             den[path] = den.get(path, 0.0) + m
     return {p: num[p] / np.maximum(den[p], 1.0) for p in num}
+
+
+# --- resident-stack representation ----------------------------------------
+
+def subparam_shapes(
+    index: GlobalIndex, unit_map: UnitMap, base_shapes: Mapping[str, tuple]
+) -> Dict[str, tuple]:
+    """Reconfigured array shapes for a sub-model, without materializing it.
+
+    This is what lets the resident engine compute payload bytes / FLOPs for
+    the channel model with zero ``extract_subparams`` calls."""
+    out: Dict[str, tuple] = {}
+    for path, shape in base_shapes.items():
+        s = list(shape)
+        for lname, axis in unit_map.get(path, ()):
+            s[axis] = len(index[lname])
+        out[path] = tuple(s)
+    return out
+
+
+def aggregate_by_worker_stacked(
+    param_stacks: Mapping[str, np.ndarray],   # {path: [W, ...]} masked stacks
+    weights: np.ndarray,                      # [W]; 0 for non-submitters
+) -> Params:
+    """By-worker aggregation straight off the resident ``[W, ...]`` stacks.
+
+    Rows are already masked (pruned coordinates exactly 0), so the embed step
+    of the per-worker path is a no-op here: theta_g = sum_w c_w * stack_w."""
+    weights = np.asarray(weights, dtype=np.float64)
+    out: Params = {}
+    for path, stack in param_stacks.items():
+        arr = np.asarray(stack, dtype=np.float64)
+        out[path] = np.tensordot(weights, arr, axes=1)
+    return out
+
+
+def aggregate_by_unit_stacked(
+    param_stacks: Mapping[str, np.ndarray],   # {path: [W, ...]} masked stacks
+    mask_stacks: Mapping[str, np.ndarray],    # {path: [W, ...]} 0/1 stacks
+    submitters: np.ndarray,                   # [W] 0/1
+) -> Params:
+    """Per-coordinate 1/w' masked mean over the submitting rows of the stack."""
+    sub = np.asarray(submitters, dtype=np.float64)
+    out: Params = {}
+    for path, stack in param_stacks.items():
+        num = np.tensordot(sub, np.asarray(stack, np.float64), axes=1)
+        den = np.tensordot(sub, np.asarray(mask_stacks[path], np.float64), axes=1)
+        out[path] = num / np.maximum(den, 1.0)
+    return out

@@ -25,6 +25,24 @@ pruning diversity.  This module batches the fleet:
   vanish on pruned coordinates, so retained coordinates see the same
   function as the physically-small model.
 
+On top of the masked idiom sits the **resident fleet state** (``FleetState``):
+stacked ``[W, ...]`` base-shape param / mask / momentum arrays that live on
+device across rounds.  Sub-model identity is carried ONLY by the 0/1 mask
+stack — the synchronous simulator never calls ``extract_subparams`` /
+``embed_params`` inside its round loop (assertable via
+``aggregation.ROUNDTRIP_COUNTS``):
+
+* ``scatter_global``  — broadcast-back is a masked scatter,
+  ``P = theta_g[None] * M``;
+* ``train_rounds``    — one jitted vmap-of-scan over the whole stack, with a
+  per-step validity mask so ragged plans and per-round participation
+  (scenario sampling / dropout) never change device shapes: the one-compile
+  guarantee survives hundreds of partially-participating workers;
+* ``refresh_masks``   — a pruning event only rewrites mask rows (and
+  re-masks the param stack); shapes never change, so zero recompiles;
+* aggregation consumes the stacks directly
+  (``aggregation.aggregate_by_worker_stacked`` / ``_by_unit_stacked``).
+
 Every engine consumes identical pre-drawn batch plans (``make_batch_plan``),
 which is what the equivalence tests pin down.  Compiles are counted in the
 underlying ``LocalTrainer.compile_count`` and surfaced as
@@ -35,15 +53,22 @@ from __future__ import annotations
 import dataclasses
 from typing import Dict, List, Mapping, Optional, Sequence
 
+import jax.numpy as jnp
 import numpy as np
 
-from repro.optim.group_lasso import group_size_sqrt
+from repro.optim.group_lasso import group_size_sqrt, group_size_sqrt_from_shapes
 
-from .aggregation import UnitMap, coordinate_mask, embed_params, extract_subparams
+from .aggregation import (
+    UnitMap,
+    coordinate_mask,
+    embed_params,
+    extract_subparams,
+    subparam_shapes,
+)
 from .masks import GlobalIndex
 from .worker import LocalTrainer, Params
 
-__all__ = ["ENGINES", "FleetJob", "FleetEngine"]
+__all__ = ["ENGINES", "FleetJob", "FleetEngine", "FleetState"]
 
 ENGINES = ("sequential", "bucketed", "masked")
 
@@ -168,3 +193,160 @@ class FleetEngine:
             for i, base_p in zip(members, trained):
                 # hand back the reconfigured view the rest of the pipeline uses
                 results[i] = extract_subparams(base_p, jobs[i].index, self.unit_map)
+
+    # ------------------------------------------------------------------
+    # resident fleet state: [W, ...] stacks that live on device
+    # ------------------------------------------------------------------
+
+    def init_state(
+        self,
+        base_params: Params,
+        shards_x: Sequence[np.ndarray],
+        shards_y: Sequence[np.ndarray],
+    ) -> "FleetState":
+        """Stack W full-model replicas + their data shards on device.
+
+        Shards are padded to the longest shard; batch plans only ever index
+        below each worker's true length, so the padding is never read."""
+        W = len(shards_x)
+        sizes = np.array([len(x) for x in shards_x], dtype=np.int64)
+        n_max = int(sizes.max())
+        xs = np.zeros((W, n_max) + shards_x[0].shape[1:], shards_x[0].dtype)
+        ys = np.zeros((W, n_max), shards_y[0].dtype)
+        for w in range(W):
+            xs[w, : sizes[w]] = shards_x[w]
+            ys[w, : sizes[w]] = shards_y[w]
+        params = {
+            k: jnp.broadcast_to(jnp.asarray(v)[None], (W,) + tuple(v.shape))
+            for k, v in base_params.items()
+        }
+        masks = {k: jnp.ones((W,) + tuple(v.shape), jnp.float32)
+                 for k, v in base_params.items()}
+        state = FleetState(
+            params=params, masks=masks, momentum=None,
+            xs=jnp.asarray(xs), ys=jnp.asarray(ys),
+            shard_sizes=sizes, num_workers=W,
+            gl_sizes={
+                lname: np.full((W,), s, np.float32)
+                for lname, s in group_size_sqrt_from_shapes(
+                    self.base_shapes, self.unit_map
+                ).items()
+            },
+        )
+        return state
+
+    def update_shard(self, state: "FleetState", w: int, x: np.ndarray, y: np.ndarray):
+        """Swap one worker's data shard in place (scenario churn join)."""
+        n_max = state.xs.shape[1]
+        if len(x) > n_max:
+            raise ValueError(f"churn shard ({len(x)}) exceeds resident pad ({n_max})")
+        xr = np.zeros((n_max,) + x.shape[1:], x.dtype)
+        yr = np.zeros((n_max,), y.dtype)
+        xr[: len(x)], yr[: len(y)] = x, y
+        state.xs = state.xs.at[w].set(jnp.asarray(xr))
+        state.ys = state.ys.at[w].set(jnp.asarray(yr))
+        state.shard_sizes[w] = len(x)
+
+    def refresh_masks(self, state: "FleetState", indices: Sequence[GlobalIndex]):
+        """Rewrite the mask stack from the workers' global indices and re-mask
+        the param stack.  This is the ONLY thing a pruning event does to the
+        resident state — shapes never change, so nothing recompiles."""
+        W = state.num_workers
+        presence: Dict[str, np.ndarray] = {}
+        for lname, dim in self._unit_dims().items():
+            p = np.zeros((W, dim), np.float32)
+            for w in range(W):
+                p[w, np.asarray(indices[w][lname], np.int64)] = 1.0
+            presence[lname] = p
+        for path, shape in self.base_shapes.items():
+            m = np.ones((W,) + tuple(shape), np.float32)
+            for lname, axis in self.unit_map.get(path, ()):
+                bshape = [W] + [1] * len(shape)
+                bshape[1 + axis] = shape[axis]
+                m = m * presence[lname].reshape(bshape)
+            state.masks[path] = jnp.asarray(m)
+            state.params[path] = state.params[path] * state.masks[path]
+        for w in range(W):
+            shapes = subparam_shapes(indices[w], self.unit_map, self.base_shapes)
+            for lname, s in group_size_sqrt_from_shapes(shapes, self.unit_map).items():
+                state.gl_sizes[lname][w] = s
+
+    def _unit_dims(self) -> Dict[str, int]:
+        dims: Dict[str, int] = {}
+        for path, entries in self.unit_map.items():
+            for lname, axis in entries:
+                dims[lname] = self.base_shapes[path][axis]
+        return dims
+
+    def scatter_global(self, state: "FleetState", global_params: Params):
+        """Broadcast-back (Alg. 1 server line 9) as a masked scatter:
+        ``P = theta_g[None] * M`` — extract/embed never run."""
+        for path, g in global_params.items():
+            state.params[path] = jnp.asarray(g)[None] * state.masks[path]
+
+    def stack_plans(self, plans: Sequence[Optional[np.ndarray]]):
+        """Pad per-worker batch plans into ``[W, S, batch]`` + a ``[W, S]``
+        validity mask (``None``/empty plan = fully invalid row).  Returns
+        ``None`` when no worker has a real step this phase."""
+        steps = [0 if p is None else p.shape[0] for p in plans]
+        S = max(steps)
+        if S == 0:
+            return None
+        batch = next(p.shape[1] for p in plans if p is not None and p.shape[0] > 0)
+        stack = np.zeros((len(plans), S, batch), np.int64)
+        valid = np.zeros((len(plans), S), np.float32)
+        for w, p in enumerate(plans):
+            if steps[w]:
+                stack[w, : steps[w]] = p
+                valid[w, : steps[w]] = 1.0
+        return jnp.asarray(stack), jnp.asarray(valid)
+
+    def train_rounds(
+        self,
+        state: "FleetState",
+        plans: Sequence[Optional[np.ndarray]],
+        lam: float = 0.0,
+    ) -> Optional[np.ndarray]:
+        """One resident device program for a whole round phase.
+
+        Returns per-worker mean losses (NaN-free; invalid rows report 0), or
+        ``None`` if no worker had work this phase."""
+        stacked = self.stack_plans(plans)
+        if stacked is None:
+            return None
+        plan_stack, valid = stacked
+        gl = {k: jnp.asarray(v) for k, v in state.gl_sizes.items()}
+        state.params, state.momentum, losses = self.trainer.train_resident(
+            state.params, state.masks, self.unit_map,
+            state.xs, state.ys, plan_stack, valid, lam, gl,
+        )
+        self.batched_calls += 1
+        return np.asarray(losses)
+
+    def params_host(self, state: "FleetState") -> Dict[str, np.ndarray]:
+        """Host view of the resident param stack (submission boundary only)."""
+        return {k: np.asarray(v) for k, v in state.params.items()}
+
+    def masks_host(self, state: "FleetState") -> Dict[str, np.ndarray]:
+        return {k: np.asarray(v) for k, v in state.masks.items()}
+
+
+@dataclasses.dataclass
+class FleetState:
+    """Resident multi-worker state: everything is a ``[W, ...]`` stack.
+
+    ``params`` rows are always masked (pruned coordinates exactly 0), so
+    stacked aggregation can consume them directly; ``momentum`` holds the
+    last phase's optimizer stack (momentum restarts per phase, matching the
+    per-worker engines).  ``shard_sizes`` records true (pre-padding) shard
+    lengths; ``gl_sizes`` the per-worker sqrt-group-size factors that keep
+    the group-lasso penalty equal to each physically-reconfigured twin."""
+
+    params: Dict[str, jnp.ndarray]
+    masks: Dict[str, jnp.ndarray]
+    momentum: Optional[Dict[str, jnp.ndarray]]
+    xs: jnp.ndarray
+    ys: jnp.ndarray
+    shard_sizes: np.ndarray
+    num_workers: int
+    gl_sizes: Dict[str, np.ndarray]

@@ -1,0 +1,132 @@
+"""Scenario layer: client sampling, dropout, churn (FedPrune/FedMP regimes).
+
+The interesting collaborative-learning regimes are hundreds of *partially
+participating, flaky* clients — FedAvg-style client sampling (fraction ``C``
+per round), stragglers that miss the round deadline (dropout with
+straggler-timeout semantics), and device churn (a worker leaves and is
+replaced by a fresh one with a fresh data shard).
+
+All three are expressed as a per-round :class:`RoundEvents` record — boolean
+masks over a FIXED worker slot space — so the resident fleet engine
+(``core.fleet.FleetState``) applies them as participation masks over its
+``[W, ...]`` stacks: device shapes never change, and the masked engine keeps
+its one-compile guarantee no matter how flaky the fleet is.
+
+Semantics (documented here, implemented by ``core.simulation._run_sync``):
+
+* **sampling** — ``max(min_participants, round(participation * W))`` workers
+  drawn uniformly without replacement train and (attempt to) submit each
+  round; everyone else idles and keeps their sub-model identity.
+* **dropout** — each sampled worker independently fails to report with
+  probability ``dropout`` (at least one submitter always survives).  The
+  server applies a straggler timeout: if anyone dropped, the round costs
+  ``timeout_factor`` x the slowest *received* update.  Dropped updates are
+  discarded (the worker re-fetches the global model like everyone else).
+* **churn** — each worker slot is replaced with probability ``churn`` at
+  round start: full (unpruned) sub-model, fresh data shard, fresh
+  pruned-rate history / DGC residuals.  Replacement keeps ``W`` constant —
+  the fleet is a slot pool, as in semi-async FL systems.
+
+Scenarios currently apply to the synchronous methods (``fedavg``,
+``fedavg_s``, ``adaptcl``); the async schedulers model client pacing through
+the event queue already.
+
+``ScenarioConfig.schedule`` takes explicit per-round events for tests and
+reproducible sweeps; rounds beyond the schedule fall back to full
+participation.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Optional, Sequence
+
+import numpy as np
+
+__all__ = ["ScenarioConfig", "RoundEvents", "ScenarioEngine", "full_participation"]
+
+
+@dataclasses.dataclass
+class RoundEvents:
+    """One round's participation outcome over the fixed worker slots."""
+
+    active: np.ndarray    # bool [W]: sampled to train this round
+    dropped: np.ndarray   # bool [W]: subset of active that never reports
+    joined: np.ndarray    # bool [W]: slot churned at round start (fresh worker)
+
+    @property
+    def submitters(self) -> np.ndarray:
+        return self.active & ~self.dropped
+
+
+def full_participation(num_workers: int) -> RoundEvents:
+    on = np.ones(num_workers, dtype=bool)
+    off = np.zeros(num_workers, dtype=bool)
+    return RoundEvents(active=on, dropped=off.copy(), joined=off.copy())
+
+
+@dataclasses.dataclass
+class ScenarioConfig:
+    participation: float = 1.0      # C: fraction of workers sampled per round
+    dropout: float = 0.0            # P(sampled worker misses the deadline)
+    churn: float = 0.0              # P(slot replaced at round start)
+    min_participants: int = 1
+    timeout_factor: float = 1.5     # straggler deadline multiplier on drop
+    seed: int = 0
+    # explicit per-round events (tests / reproducible sweeps); overrides draws
+    schedule: Optional[Sequence[RoundEvents]] = None
+
+
+class ScenarioEngine:
+    """Draws per-round :class:`RoundEvents` from a dedicated RNG stream.
+
+    The stream is independent of the simulator's data/jitter RNG, so the same
+    scenario unfolds identically under every fleet engine — which is what the
+    cross-engine scenario-equivalence tests pin down."""
+
+    def __init__(self, cfg: ScenarioConfig, num_workers: int):
+        if not (0.0 < cfg.participation <= 1.0):
+            raise ValueError(f"participation {cfg.participation} outside (0, 1]")
+        if not (0.0 <= cfg.dropout < 1.0):
+            raise ValueError(f"dropout {cfg.dropout} outside [0, 1)")
+        if not (0.0 <= cfg.churn < 1.0):
+            raise ValueError(f"churn {cfg.churn} outside [0, 1)")
+        if cfg.min_participants < 1:
+            raise ValueError(f"min_participants {cfg.min_participants} must be >= 1")
+        self.cfg = cfg
+        self.W = num_workers
+        self.rng = np.random.default_rng(cfg.seed + 9173)
+
+    def draw(self, round_t: int) -> RoundEvents:
+        """Events for 1-based round ``round_t``."""
+        cfg, W = self.cfg, self.W
+        if cfg.schedule is not None:
+            if round_t - 1 < len(cfg.schedule):
+                ev = cfg.schedule[round_t - 1]
+                ev = RoundEvents(
+                    active=np.asarray(ev.active, bool).copy(),
+                    dropped=np.asarray(ev.dropped, bool).copy(),
+                    joined=np.asarray(ev.joined, bool).copy(),
+                )
+                if not ev.active.any():
+                    raise ValueError(
+                        f"schedule round {round_t} samples no workers"
+                    )
+                if not ev.submitters.any():
+                    # same invariant as the random path: the timeout never
+                    # starves the round of all submitters
+                    ev.dropped[np.flatnonzero(ev.active)[0]] = False
+                return ev
+            return full_participation(W)
+        joined = self.rng.random(W) < cfg.churn
+        k = int(np.clip(round(cfg.participation * W), cfg.min_participants, W))
+        active = np.zeros(W, dtype=bool)
+        active[self.rng.choice(W, size=k, replace=False)] = True
+        dropped = active & (self.rng.random(W) < cfg.dropout)
+        if dropped.all() or not (active & ~dropped).any():
+            # straggler timeout never starves the round: keep one submitter
+            dropped[np.flatnonzero(active)[0]] = False
+        return RoundEvents(active=active, dropped=dropped, joined=joined)
+
+    def fresh_shard(self, size: int, train_len: int) -> np.ndarray:
+        """Index set for a churned-in worker (uniform over the task's pool)."""
+        return self.rng.choice(train_len, size=size, replace=False).astype(np.int64)

@@ -21,16 +21,39 @@ selected by ``SimConfig.engine``:
   * ``"sequential"`` — one scan-train call per worker (reference engine);
   * ``"bucketed"``   — workers sharing a parameter-shape signature are
     stacked and trained in one jitted ``vmap`` call;
-  * ``"masked"``     — all workers stay at base shape behind 0/1 unit masks
-    (the ``kernels/pruned_matmul`` idiom), so the whole fleet batches into a
-    single program and pruning causes zero reconfigure-recompiles.
+  * ``"masked"``     — the **resident** engine: stacked ``[W, ...]``
+    base-shape param/mask/momentum arrays live on device across rounds
+    (``core.fleet.FleetState``), sub-model identity is carried only by the
+    0/1 mask stack, and the synchronous round loop performs ZERO
+    ``extract_subparams``/``embed_params`` host round-trips — broadcast-back
+    is a masked scatter, training is one vmapped program over the whole
+    stack, and aggregation consumes the stacks directly
+    (``aggregation.aggregate_by_worker_stacked``).  Extraction happens only
+    at the submission/reporting boundary (``SimResult``, data-dependent
+    importance scores).  Host cost per round is therefore ~flat in W, which
+    is what makes hundreds-of-worker fleets simulable.
 
 Minibatch plans are pre-drawn per worker in a fixed order, so all three
 engines consume identical batch sequences and produce numerically equivalent
-trained models (``tests/test_fleet_equivalence.py``).  ``SimResult`` reports
-``recompiles`` (jit shape-signatures compiled), ``batched_calls`` (device
-programs launched by the batched engines), and ``walltime_s`` (host
-wall-clock) so the engines' host-cost can be compared directly.
+trained models (``tests/test_fleet_equivalence.py``).
+
+**Scenarios** (``SimConfig.scenario``, ``core.scenario``): per-round client
+sampling (fraction C), straggler dropout (timeout semantics), and churn
+(slot replacement with fresh shards) apply to the synchronous methods as a
+per-round participation mask over the fixed worker slots — under the
+resident engine, device shapes never change, so flaky fleets keep the
+one-compile guarantee.
+
+The async schedulers batch event-queue commits that land within one virtual
+window (``SimConfig.async_window``, default 0 = fully serial) into a single
+fleet call, so ``fedasync_s``/``ssp_s``/``dcasgd_s`` stop issuing W-sized
+streams of single-job fleet calls.
+
+``SimResult`` reports ``recompiles`` (jit shape-signatures compiled),
+``batched_calls`` (device programs launched by the batched engines),
+``walltime_s`` (host wall-clock), and ``host_roundtrips`` (extract/embed
+calls inside the round loop — 0 for the resident engine) so the engines'
+host cost can be compared directly.
 """
 from __future__ import annotations
 
@@ -49,20 +72,32 @@ from repro.models.cnn import (
     build_unit_space,
     cnn_apply,
     cnn_flops,
+    cnn_flops_from_shapes,
     extract_bn_scales,
     init_cnn,
     vgg_config,
 )
 
-from .aggregation import aggregate_by_unit, aggregate_by_worker, extract_subparams
+from .aggregation import (
+    aggregate_by_unit,
+    aggregate_by_unit_stacked,
+    aggregate_by_worker,
+    aggregate_by_worker_stacked,
+    extract_subparams,
+    roundtrip_total,
+    subparam_shapes,
+)
 from .fleet import FleetEngine, FleetJob
 from .importance import CIG_METHODS, METHODS, ImportanceContext
-from .masks import full_index, is_nested, payload_bytes, retention, similarity
+from .masks import full_index, is_nested, payload_bytes, prune_to_budget, retention, similarity
 from .pruned_rate import PrunedRateConfig, WorkerHistory, learn_pruned_rates
+from .scenario import ScenarioConfig, ScenarioEngine, full_participation
 from .timing import HeterogeneityConfig, heterogeneity_from_times, make_bandwidths
 from .worker import LocalTrainer, local_unit_stats, make_batch_plan
 
 __all__ = ["SimConfig", "SimResult", "run_simulation", "default_cnn"]
+
+_DATA_DEP_IMPORTANCE = ("l1", "taylor", "fpgm", "hrank")
 
 
 def default_cnn() -> CNNConfig:
@@ -100,6 +135,11 @@ class SimConfig:
     dgc_sparsity: float = 0.0
     # local-training engine: "sequential" | "bucketed" | "masked" (core.fleet)
     engine: str = "sequential"
+    # client sampling / dropout / churn (sync methods only, core.scenario)
+    scenario: Optional[ScenarioConfig] = None
+    # async engines: event-queue commits landing within this virtual window
+    # batch into ONE fleet call (0.0 = serial, exactly the legacy behavior)
+    async_window: float = 0.0
     cnn: CNNConfig = dataclasses.field(default_factory=default_cnn)
     task: Optional[SyntheticImageTask] = None
     eval_every: int = 1
@@ -126,6 +166,13 @@ class SimResult:
     engine: str = "sequential"                   # fleet engine that ran it
     batched_calls: int = 0                       # vmapped device programs
     walltime_s: float = 0.0                      # host wall-clock of the run
+    host_roundtrips: int = 0                     # extract/embed in round loop
+    # (round, n_active, n_dropped, n_joined) per round when a scenario ran
+    scenario_rounds: List[Tuple[int, int, int, int]] = dataclasses.field(
+        default_factory=list
+    )
+    # final global model (base coordinates) — test/analysis hook
+    global_params: Optional[Dict[str, np.ndarray]] = None
 
 
 def _accuracy(params, cfg, x, y, batch=256) -> float:
@@ -163,13 +210,31 @@ class _Env:
 
     def phi(self, worker: int, params, payload_factor: float = 1.0) -> float:
         """Channel-model update time for this worker's current sub-model."""
+        return self._phi_from_shapes(
+            worker, {k: v.shape for k, v in params.items()}, payload_factor
+        )
+
+    def phi_from_index(
+        self, worker: int, index, payload_factor: float = 1.0, jitter: bool = True
+    ) -> float:
+        """Channel-model time from the global index alone — the resident
+        engine's path: payload bytes and FLOPs derive from the reconfigured
+        SHAPES (``subparam_shapes``), no arrays are materialized."""
+        return self._phi_from_shapes(
+            worker,
+            subparam_shapes(index, self.unit_map, self.base_shapes),
+            payload_factor,
+            jitter,
+        )
+
+    def _phi_from_shapes(self, worker, shapes, payload_factor, jitter=True) -> float:
         sim = self.sim
-        bytes_w = payload_factor * sum(v.size * 4 for v in params.values())
-        flops_w = cnn_flops(params, sim.cnn)
+        bytes_w = payload_factor * sum(int(np.prod(s)) * 4 for s in shapes.values())
+        flops_w = cnn_flops_from_shapes(shapes, sim.cnn)
         rel = flops_w / self.full_flops
         t_train = sim.t_train_full * ((1 - sim.train_sens) + sim.train_sens * rel)
         t = 2.0 * bytes_w / self.bandwidths[worker] + t_train * sim.local_epochs
-        if sim.time_jitter > 0:
+        if jitter and sim.time_jitter > 0:
             t *= float(np.exp(self.rng.normal(0, sim.time_jitter)))
         return t
 
@@ -186,15 +251,26 @@ def _dgc_compress(delta: Dict[str, np.ndarray], residual: Dict[str, np.ndarray],
                   sparsity: float):
     """Top-|.| delta sparsification with local residual accumulation ([11]).
 
-    Returns (committed delta, new residual, kept-fraction payload factor)."""
+    Returns (committed delta, new residual, kept-fraction payload factor).
+
+    A reconfiguration that changed a tensor's shape restarts DGC's
+    accumulators for it (momentum-factor-masking semantics): the stale
+    residual is dropped AND the tensor commits densely this round, so the
+    kept-fraction accounting is reset too — the payload factor honestly
+    reflects the dense warm-up commit instead of silently reporting the
+    steady-state sparsity."""
     committed, new_res = {}, {}
     kept = total = 0
     for k, d in delta.items():
         r = residual.get(k)
-        if r is not None and r.shape == d.shape:
+        restarted = r is not None and r.shape != d.shape
+        if r is not None and not restarted:
             d = d + r
-        # (a reconfiguration changed this tensor's shape -> residual dropped;
-        # DGC's accumulators are restarted after each pruning, like momentum)
+        if restarted:
+            committed[k], new_res[k] = d, np.zeros_like(d)
+            kept += d.size
+            total += d.size
+            continue
         flat = np.abs(d).ravel()
         n_keep = max(1, int(round(flat.size * (1.0 - sparsity))))
         if n_keep >= flat.size:
@@ -210,12 +286,75 @@ def _dgc_compress(delta: Dict[str, np.ndarray], residual: Dict[str, np.ndarray],
     return committed, new_res, 1.25 * kept / max(total, 1)
 
 
+def _dgc_compress_stacked(
+    delta: Dict[str, np.ndarray],        # {path: [W, ...]} base-coord deltas
+    residual: Dict[str, np.ndarray],     # {path: [W, ...]} accumulators
+    sparsity: float,
+    masks: Optional[Dict[str, np.ndarray]] = None,   # {path: [W, ...]} 0/1
+    rows: Optional[np.ndarray] = None,               # bool [W]: rows to commit
+):
+    """Vectorized DGC over the resident ``[W, ...]`` delta stacks.
+
+    Per tensor, the top-|.| threshold is computed per worker row in one
+    ``np.sort`` over the flattened ``[W, N]`` view.  ``masks`` makes the
+    compressor mask-aware: each worker's keep budget is a fraction of its
+    RETAINED coordinate count (matching the per-worker compressor applied to
+    the reconfigured tensor), pruned coordinates are never committed, and the
+    residual is kept only on retained coordinates (pruning zeroes a worker's
+    residual on the units it lost — nothing else restarts, unlike the
+    shape-changing per-worker path, because resident shapes never change).
+    ``rows`` limits commits to the submitting workers; others keep their
+    residual untouched and report payload factor 1.0.
+
+    Returns (committed stacks, new residual stacks, factors ``[W]``)."""
+    W = next(iter(delta.values())).shape[0]
+    rows = np.ones(W, bool) if rows is None else np.asarray(rows, bool)
+    committed: Dict[str, np.ndarray] = {}
+    new_res: Dict[str, np.ndarray] = {}
+    kept = np.zeros(W)
+    total = np.zeros(W)
+    for k, d in delta.items():
+        r = residual.get(k)
+        acc = d if r is None else d + r
+        flat = acc.reshape(W, -1)
+        absf = np.abs(flat)
+        if masks is not None:
+            valid = masks[k].reshape(W, -1) > 0
+            sizes = valid.sum(axis=1)
+            absf = np.where(valid, absf, -1.0)
+        else:
+            valid = None
+            sizes = np.full(W, flat.shape[1])
+        n_keep = np.maximum(1, np.round(sizes * (1.0 - sparsity)).astype(np.int64))
+        n_keep = np.minimum(n_keep, np.maximum(sizes, 1))
+        order = np.sort(absf, axis=1)[:, ::-1]
+        thr = order[np.arange(W), n_keep - 1]
+        keep = absf >= thr[:, None]
+        if valid is not None:
+            keep &= valid
+        com = np.where(keep, flat, 0.0)
+        res = np.where(keep, 0.0, flat)
+        if valid is not None:
+            res = np.where(valid, res, 0.0)
+        old_res = np.zeros_like(flat) if r is None else r.reshape(W, -1)
+        rowsf = rows[:, None]
+        committed[k] = np.where(rowsf, com, 0.0).reshape(d.shape).astype(d.dtype)
+        new_res[k] = np.where(rowsf, res, old_res).reshape(d.shape).astype(d.dtype)
+        kept += np.where(rows, n_keep, 0)
+        total += np.where(rows, sizes, 0)
+    factors = np.where(rows, 1.25 * kept / np.maximum(total, 1), 1.0)
+    return committed, new_res, factors
+
+
 def _run_sync(sim: SimConfig, env: _Env) -> SimResult:
     W = sim.num_workers
     sparse = sim.method in ("fedavg_s", "adaptcl")
     adapt = sim.method == "adaptcl"
     lam = sim.lam if sparse else 0.0
+    resident = sim.engine == "masked"
+    scen = ScenarioEngine(sim.scenario, W) if sim.scenario is not None else None
     dgc_residuals: List[Dict[str, np.ndarray]] = [{} for _ in range(W)]
+    dgc_res_stack: Optional[Dict[str, np.ndarray]] = None
 
     global_params = dict(env.base_params)
     indices = [full_index(env.space) for _ in range(W)]
@@ -225,49 +364,108 @@ def _run_sync(sim: SimConfig, env: _Env) -> SimResult:
     interval_phis: List[List[float]] = [[] for _ in range(W)]
     prune_round_count = 0
 
+    state = None
+    if resident:
+        shard_x, shard_y = zip(*(env.shard_xy(w) for w in range(W)))
+        state = env.fleet.init_state(env.base_params, list(shard_x), list(shard_y))
+        if sim.dgc_sparsity > 0.0:
+            dgc_res_stack = {
+                k: np.zeros((W,) + tuple(s), np.float32)
+                for k, s in env.base_shapes.items()
+            }
+
     clock = 0.0
     comm_bytes = 0.0
     server_overhead = 0.0
     acc_time, het_traj, sim_traj, upd_times = [], [], [], []
+    scen_rows: List[Tuple[int, int, int, int]] = []
     acc0 = _accuracy(global_params, sim.cnn, env.task.x_test, env.task.y_test)
     acc_time.append((0.0, acc0))
+    rt_base = roundtrip_total()    # host extract/embed round-trips in the loop
 
     for t in range(1, sim.rounds + 1):
-        submissions = []
-        phis = []
-        # --- phase A: every worker's pre-prune local training, one fleet
-        # call.  Batch plans are drawn in worker order up front so the batch
+        events = scen.draw(t) if scen is not None else full_participation(W)
+        # --- churn: replaced slots restart as fresh full-model workers.
+        if events.joined.any():
+            for w in np.flatnonzero(events.joined):
+                indices[w] = full_index(env.space)
+                histories[w] = WorkerHistory()
+                pending_rates[w] = 0.0
+                dgc_residuals[w] = {}
+                interval_phis[w] = []
+                if dgc_res_stack is not None:
+                    for k in dgc_res_stack:
+                        dgc_res_stack[k][w] = 0.0
+                env.shards[w] = scen.fresh_shard(
+                    len(env.shards[w]), len(env.task.y_train)
+                )
+                if resident:
+                    env.fleet.update_shard(state, int(w), *env.shard_xy(int(w)))
+            if resident:
+                env.fleet.refresh_masks(state, indices)
+        active_ws = [int(w) for w in np.flatnonzero(events.active)]
+        if scen is not None:
+            scen_rows.append((
+                t, len(active_ws), int(events.dropped.sum()), int(events.joined.sum()),
+            ))
+
+        # --- batch plans, drawn in worker order up front so the batch
         # sequences (and therefore the trained models) are identical across
         # engines.
-        jobs_a: List[FleetJob] = []
-        plans_b: List[np.ndarray] = []
-        for w in range(W):
-            # server sends theta_g ⊙ I_w  (Alg. 1 line 9)
-            params_w = extract_subparams(global_params, indices[w], env.unit_map)
-            x, y = env.shard_xy(w)
+        plans_a: List[Optional[np.ndarray]] = [None] * W
+        plans_b: List[Optional[np.ndarray]] = [None] * W
+        prune_now = [False] * W
+        for w in active_ws:
             rate = pending_rates[w] if adapt else 0.0
             if adapt and rate > 0.0:
                 e1, e2 = sim.beta * sim.local_epochs, (1 - sim.beta) * sim.local_epochs
+                prune_now[w] = True
             else:
                 e1, e2 = sim.local_epochs, 0.0
-            jobs_a.append(FleetJob(
-                worker=w, params=params_w, index=indices[w], x=x, y=y,
-                plan=make_batch_plan(len(x), sim.batch_size, e1, env.rng),
-            ))
-            plans_b.append(make_batch_plan(len(x), sim.batch_size, e2, env.rng))
-        trained_a = env.fleet.train_all(jobs_a, lam)
+            n = len(env.shards[w])
+            plans_a[w] = make_batch_plan(n, sim.batch_size, e1, env.rng)
+            plans_b[w] = make_batch_plan(n, sim.batch_size, e2, env.rng)
+
+        # --- phase A: every participating worker's pre-prune local training,
+        # ONE fleet call.  Resident path: broadcast-back is a masked scatter
+        # into the [W, ...] stacks, then one vmapped program over the stack.
+        worker_params: Dict[int, Dict[str, np.ndarray]] = {}
+        if resident:
+            env.fleet.scatter_global(state, global_params)
+            env.fleet.train_rounds(state, plans_a, lam)
+        else:
+            jobs_a = []
+            for w in active_ws:
+                x, y = env.shard_xy(w)
+                jobs_a.append(FleetJob(
+                    worker=w,
+                    params=extract_subparams(global_params, indices[w], env.unit_map),
+                    index=indices[w], x=x, y=y, plan=plans_a[w],
+                ))
+            for w, p in zip(active_ws, env.fleet.train_all(jobs_a, lam)):
+                worker_params[w] = p
 
         # --- phase B: pruning workers prune/reconfigure at position beta,
-        # then finish their remaining epochs (second fleet call).
-        worker_params: List[Dict[str, np.ndarray]] = list(trained_a)
+        # then finish their remaining epochs (second fleet call).  Resident:
+        # pruning only rewrites mask rows — shapes never change.
         jobs_b: List[FleetJob] = []
-        for w in range(W):
-            rate = pending_rates[w] if adapt else 0.0
-            if adapt and rate > 0.0:
-                scores = _scores_for(sim, env, w, prune_round_count,
-                                     worker_params[w], indices[w], cig_scores)
+        pruned_any = False
+        for w in active_ws:
+            if not prune_now[w]:
+                continue
+            scores = _scores_for(
+                sim, env, w, prune_round_count,
+                worker_params.get(w), indices[w], cig_scores, state,
+            )
+            if resident:
+                indices[w] = prune_to_budget(
+                    indices[w], scores, pending_rates[w], env.space
+                )
+                pruned_any = True
+            else:
                 worker_params[w], indices[w] = env.trainer.prune_and_reconfigure(
-                    worker_params[w], indices[w], scores, rate, env.space, env.unit_map
+                    worker_params[w], indices[w], scores, pending_rates[w],
+                    env.space, env.unit_map,
                 )
                 if plans_b[w].shape[0] > 0:
                     x, y = env.shard_xy(w)
@@ -275,38 +473,98 @@ def _run_sync(sim: SimConfig, env: _Env) -> SimResult:
                         worker=w, params=worker_params[w], index=indices[w],
                         x=x, y=y, plan=plans_b[w],
                     ))
-        if jobs_b:
+        if resident:
+            if pruned_any:
+                env.fleet.refresh_masks(state, indices)
+                env.fleet.train_rounds(
+                    state, [plans_b[w] if prune_now[w] else None for w in range(W)], lam
+                )
+        elif jobs_b:
             for job, trained in zip(jobs_b, env.fleet.train_all(jobs_b, lam)):
                 worker_params[job.worker] = trained
 
-        # --- submission: channel model + (optional) DGC delta compression.
-        for w in range(W):
-            params_w = worker_params[w]
-            payload_factor = 1.0
+        # --- submission boundary: channel model + (optional) DGC delta
+        # compression + aggregation inputs.
+        submitters = events.submitters
+        payload = np.ones(W)
+        agg_stacks = None
+        if resident:
             if sim.dgc_sparsity > 0.0:
+                P = env.fleet.params_host(state)
+                M = env.fleet.masks_host(state)
+                deltas = {
+                    k: P[k] - np.asarray(global_params[k], np.float32)[None] * M[k]
+                    for k in P
+                }
+                committed, dgc_res_stack, payload = _dgc_compress_stacked(
+                    deltas, dgc_res_stack, sim.dgc_sparsity,
+                    masks=M, rows=submitters,
+                )
+                agg_stacks = {
+                    k: np.asarray(global_params[k], np.float32)[None] * M[k]
+                    + committed[k]
+                    for k in P
+                }
+        else:
+            for w in active_ws:
+                if not submitters[w] or sim.dgc_sparsity <= 0.0:
+                    continue
                 received = extract_subparams(global_params, indices[w], env.unit_map)
-                delta = {k: params_w[k] - received[k] for k in params_w}
-                committed, dgc_residuals[w], payload_factor = _dgc_compress(
+                delta = {k: worker_params[w][k] - received[k] for k in worker_params[w]}
+                committed_w, dgc_residuals[w], payload[w] = _dgc_compress(
                     delta, dgc_residuals[w], sim.dgc_sparsity
                 )
-                params_w = {k: received[k] + committed[k] for k in params_w}
-            phi_w = env.phi(w, params_w, payload_factor)
-            phis.append(phi_w)
-            interval_phis[w].append(phi_w)
-            comm_bytes += 2.0 * payload_factor * sum(v.size * 4 for v in params_w.values())
-            submissions.append((params_w, indices[w]))
-        pending_rates = [0.0] * W
+                worker_params[w] = {k: received[k] + committed_w[k] for k in delta}
 
-        clock += max(phis)                      # BSP: slowest worker gates
-        upd_times.append(phis)
-        het_traj.append((t, heterogeneity_from_times(phis)))
-        sim_traj.append((t, similarity(indices[1], indices[3])))
+        phis = np.full(W, np.nan)
+        for w in active_ws:
+            pf = float(payload[w]) if submitters[w] else 1.0
+            if resident:
+                shapes_w = subparam_shapes(indices[w], env.unit_map, env.base_shapes)
+            else:
+                shapes_w = {k: v.shape for k, v in worker_params[w].items()}
+            phi_w = env._phi_from_shapes(w, shapes_w, pf)
+            phis[w] = phi_w
+            interval_phis[w].append(phi_w)
+            if submitters[w]:
+                bytes_w = sum(int(np.prod(s)) * 4 for s in shapes_w.values())
+                comm_bytes += 2.0 * pf * bytes_w
+            pending_rates[w] = 0.0
+
+        sub_phis = phis[submitters]
+        round_time = float(sub_phis.max())
+        if events.dropped.any() and scen is not None:
+            # straggler timeout: the server waits out the deadline
+            round_time *= scen.cfg.timeout_factor
+        clock += round_time                     # BSP: slowest (received) gates
+        upd_times.append(list(phis))
+        het_traj.append((t, heterogeneity_from_times(sub_phis)))
+        if W > 3:
+            sim_traj.append((t, similarity(indices[1], indices[3])))
 
         t0 = _time.perf_counter()
-        if sim.aggregation == "by_unit":
-            global_params = aggregate_by_unit(submissions, env.unit_map, env.base_shapes)
+        if resident:
+            if agg_stacks is None:
+                agg_stacks = env.fleet.params_host(state)
+            if sim.aggregation == "by_unit":
+                global_params = aggregate_by_unit_stacked(
+                    agg_stacks, env.fleet.masks_host(state), submitters
+                )
+            else:
+                weights = submitters / submitters.sum()
+                global_params = aggregate_by_worker_stacked(agg_stacks, weights)
         else:
-            global_params = aggregate_by_worker(submissions, env.unit_map, env.base_shapes)
+            submissions = [
+                (worker_params[w], indices[w]) for w in active_ws if submitters[w]
+            ]
+            if sim.aggregation == "by_unit":
+                global_params = aggregate_by_unit(
+                    submissions, env.unit_map, env.base_shapes
+                )
+            else:
+                global_params = aggregate_by_worker(
+                    submissions, env.unit_map, env.base_shapes
+                )
         global_params = {k: v.astype(np.float32) for k, v in global_params.items()}
 
         if adapt and t % sim.prune_interval == 0:
@@ -317,7 +575,11 @@ def _run_sync(sim: SimConfig, env: _Env) -> SimResult:
                     scales=extract_bn_scales(global_params, sim.cnn),
                 ))
             gammas_now = [retention(indices[w], env.space) for w in range(W)]
-            phis_now = [float(np.mean(interval_phis[w])) for w in range(W)]
+            phis_now = [
+                float(np.mean(interval_phis[w])) if interval_phis[w]
+                else env.phi_from_index(w, indices[w], jitter=False)
+                for w in range(W)
+            ]
             for w in range(W):
                 histories[w].record(gammas_now[w], phis_now[w])
             if sim.fixed_pruned_rates is not None:
@@ -336,14 +598,21 @@ def _run_sync(sim: SimConfig, env: _Env) -> SimResult:
         if t % sim.eval_every == 0:
             acc_time.append((clock, _accuracy(global_params, sim.cnn, env.task.x_test, env.task.y_test)))
 
+    host_roundtrips = roundtrip_total() - rt_base
     return _finalize(sim, env, acc_time, het_traj, sim_traj, upd_times,
                      [retention(indices[w], env.space) for w in range(W)],
                      [extract_subparams(global_params, indices[w], env.unit_map) for w in range(W)],
-                     comm_bytes, server_overhead, clock)
+                     comm_bytes, server_overhead, clock,
+                     global_params=global_params, host_roundtrips=host_roundtrips,
+                     scenario_rounds=scen_rows)
 
 
-def _scores_for(sim: SimConfig, env: _Env, worker, prune_round, params_w, index_w, cig_scores):
-    """Importance scores in base coordinates for this worker/round."""
+def _scores_for(sim: SimConfig, env: _Env, worker, prune_round, params_w, index_w,
+                cig_scores, state=None):
+    """Importance scores in base coordinates for this worker/round.
+
+    ``params_w`` may be None under the resident engine; the data-dependent
+    criteria then extract the worker's row at this (scoring) boundary."""
     name = sim.importance
     if name == "cig_bnscalor":
         if cig_scores is None:
@@ -351,7 +620,11 @@ def _scores_for(sim: SimConfig, env: _Env, worker, prune_round, params_w, index_
         return cig_scores
     ctx_kw = dict(unit_counts=env.space.unit_counts, worker=worker,
                   round=prune_round, seed=sim.seed)
-    if name in ("l1", "taylor", "fpgm", "hrank"):
+    if name in _DATA_DEP_IMPORTANCE:
+        if params_w is None:
+            assert state is not None
+            row = {k: np.asarray(v[worker]) for k, v in state.params.items()}
+            params_w = extract_subparams(row, index_w, env.unit_map)
         x, y = env.shard_xy(worker)
         stats = local_unit_stats(env.trainer, params_w, index_w, env.space, env.unit_map, x, y)
         ctx_kw.update(weight_norms=stats["weight_norms"], grads=stats["grads"],
@@ -384,6 +657,7 @@ def _run_async(sim: SimConfig, env: _Env) -> SimResult:
     comm_bytes = 0.0
     acc_time = [(0.0, _accuracy(global_params, sim.cnn, env.task.x_test, env.task.y_test))]
     heap: List[Tuple[float, int]] = []
+    rt_base = roundtrip_total()
 
     def schedule(w, now):
         phi = env.phi(w, fetched[w])
@@ -393,65 +667,80 @@ def _run_async(sim: SimConfig, env: _Env) -> SimResult:
         schedule(w, 0.0)
 
     blocked: List[int] = []
+    window = sim.async_window
     while commits < total_commits and heap:
-        finish, w = heapq.heappop(heap)
-        clock = max(clock, finish)
-        x, y = env.shard_xy(w)
-        # async commits are one-at-a-time by construction, but they still pull
-        # trained results from the fleet so all engines share one train path
-        # (masked/bucketed amortize to a single jitted program here too).
-        [trained] = env.fleet.train_all([FleetJob(
-            worker=w, params=fetched[w], index=idx, x=x, y=y,
-            plan=make_batch_plan(len(x), sim.batch_size, sim.local_epochs, env.rng),
-        )], lam)
-        staleness = version - fetched_ver[w]
-        if method == "fedasync_s":
-            a = sim.fedasync_a * (staleness + 1.0) ** -0.5
-            global_params = {
-                k: (1 - a) * global_params[k] + a * trained[k] for k in global_params
-            }
-        elif method == "ssp_s":
-            delta = {k: trained[k] - fetched[w][k] for k in trained}
-            global_params = {k: global_params[k] + delta[k] / W for k in global_params}
-        elif method == "dcasgd_s":
-            # committed "gradient" = accumulated local update / lr
-            g = {k: (fetched[w][k] - trained[k]) / sim.lr for k in trained}
-            for k in g:
-                dc_m[k] = sim.dcasgd_m * dc_m[k] + (1 - sim.dcasgd_m) * g[k] * g[k]
-                lam_t = sim.dcasgd_lambda / np.sqrt(np.mean(dc_m[k]) + 1e-12)
-                comp = g[k] + lam_t * g[k] * g[k] * (global_params[k] - backup[w][k])
-                global_params[k] = global_params[k] - sim.lr * comp
-            backup[w] = dict(global_params)
-        version += 1
-        commits += 1
-        rounds_done[w] += 1
-        comm_bytes += 2.0 * sum(v.size * 4 for v in trained.values())
-        # refetch + maybe block (SSP)
-        fetched[w] = dict(global_params)
-        fetched_ver[w] = version
-        if method == "ssp_s" and rounds_done[w] >= min(rounds_done) + sim.ssp_threshold:
-            blocked.append(w)
-        elif rounds_done[w] < sim.rounds:
-            schedule(w, clock)
-        if method == "ssp_s" and blocked:
-            still = []
-            for bw in blocked:
-                if rounds_done[bw] < min(rounds_done) + sim.ssp_threshold and rounds_done[bw] < sim.rounds:
-                    fetched[bw] = dict(global_params)
-                    fetched_ver[bw] = version
-                    schedule(bw, clock)
-                else:
-                    still.append(bw)
-            blocked = [b for b in still if rounds_done[b] < sim.rounds]
-        if commits % W == 0:
-            acc_time.append((clock, _accuracy(global_params, sim.cnn, env.task.x_test, env.task.y_test)))
+        # pop every event landing within one virtual window: each popped
+        # worker's training input (its last fetch) is already fixed, so
+        # batching the training into ONE fleet call is exact — commits are
+        # then applied one at a time in finish order, like the serial path.
+        batch = [heapq.heappop(heap)]
+        while (window > 0.0 and heap
+               and len(batch) < total_commits - commits
+               and heap[0][0] <= batch[0][0] + window):
+            batch.append(heapq.heappop(heap))
+        jobs = []
+        for _, w in batch:
+            x, y = env.shard_xy(w)
+            jobs.append(FleetJob(
+                worker=w, params=fetched[w], index=idx, x=x, y=y,
+                plan=make_batch_plan(len(x), sim.batch_size, sim.local_epochs, env.rng),
+            ))
+        trained_batch = env.fleet.train_all(jobs, lam)
+        for (finish, w), trained in zip(batch, trained_batch):
+            clock = max(clock, finish)
+            staleness = version - fetched_ver[w]
+            if method == "fedasync_s":
+                a = sim.fedasync_a * (staleness + 1.0) ** -0.5
+                global_params = {
+                    k: (1 - a) * global_params[k] + a * trained[k] for k in global_params
+                }
+            elif method == "ssp_s":
+                delta = {k: trained[k] - fetched[w][k] for k in trained}
+                global_params = {k: global_params[k] + delta[k] / W for k in global_params}
+            elif method == "dcasgd_s":
+                # committed "gradient" = accumulated local update / lr
+                g = {k: (fetched[w][k] - trained[k]) / sim.lr for k in trained}
+                for k in g:
+                    dc_m[k] = sim.dcasgd_m * dc_m[k] + (1 - sim.dcasgd_m) * g[k] * g[k]
+                    lam_t = sim.dcasgd_lambda / np.sqrt(np.mean(dc_m[k]) + 1e-12)
+                    comp = g[k] + lam_t * g[k] * g[k] * (global_params[k] - backup[w][k])
+                    global_params[k] = global_params[k] - sim.lr * comp
+                backup[w] = dict(global_params)
+            version += 1
+            commits += 1
+            rounds_done[w] += 1
+            comm_bytes += 2.0 * sum(v.size * 4 for v in trained.values())
+            # refetch + maybe block (SSP)
+            fetched[w] = dict(global_params)
+            fetched_ver[w] = version
+            if method == "ssp_s" and rounds_done[w] >= min(rounds_done) + sim.ssp_threshold:
+                blocked.append(w)
+            elif rounds_done[w] < sim.rounds:
+                schedule(w, clock)
+            if method == "ssp_s" and blocked:
+                still = []
+                for bw in blocked:
+                    if rounds_done[bw] < min(rounds_done) + sim.ssp_threshold and rounds_done[bw] < sim.rounds:
+                        fetched[bw] = dict(global_params)
+                        fetched_ver[bw] = version
+                        schedule(bw, clock)
+                    else:
+                        still.append(bw)
+                blocked = [b for b in still if rounds_done[b] < sim.rounds]
+            if commits % W == 0:
+                acc_time.append((clock, _accuracy(global_params, sim.cnn, env.task.x_test, env.task.y_test)))
 
+    host_roundtrips = roundtrip_total() - rt_base
     return _finalize(sim, env, acc_time, [], [], [], [1.0] * W,
-                     [dict(global_params) for _ in range(W)], comm_bytes, 0.0, clock)
+                     [dict(global_params) for _ in range(W)], comm_bytes, 0.0, clock,
+                     global_params=dict(global_params),
+                     host_roundtrips=host_roundtrips)
 
 
 def _finalize(sim, env, acc_time, het_traj, sim_traj, upd_times, retentions,
-              worker_params, comm_bytes, server_overhead, clock) -> SimResult:
+              worker_params, comm_bytes, server_overhead, clock,
+              global_params=None, host_roundtrips=0,
+              scenario_rounds=None) -> SimResult:
     accs = np.array([a for _, a in acc_time])
     times = np.array([t for t, _ in acc_time])
     best = int(np.argmax(accs))
@@ -476,6 +765,10 @@ def _finalize(sim, env, acc_time, het_traj, sim_traj, upd_times, retentions,
         update_times=upd_times,
         engine=sim.engine,
         batched_calls=env.fleet.batched_calls,
+        host_roundtrips=host_roundtrips,
+        scenario_rounds=scenario_rounds or [],
+        global_params={k: np.asarray(v) for k, v in global_params.items()}
+        if global_params is not None else None,
     )
 
 
@@ -485,6 +778,12 @@ def run_simulation(sim: SimConfig) -> SimResult:
     if sim.method in ("adaptcl", "fedavg", "fedavg_s"):
         result = _run_sync(sim, env)
     elif sim.method in ("fedasync_s", "ssp_s", "dcasgd_s"):
+        if sim.scenario is not None:
+            raise ValueError(
+                "scenarios (sampling/dropout/churn) apply to the synchronous "
+                "methods; the async schedulers model client pacing through "
+                "their event queue"
+            )
         result = _run_async(sim, env)
     else:
         raise ValueError(f"unknown method {sim.method}")

@@ -6,14 +6,20 @@ Training steps are jitted per parameter-shape signature; a reconfiguration
 triggers one recompilation (counted in the overhead benchmark — this is the
 JAX analogue of PruneTrain's model rebuild).
 
-Two training entry points:
+Three training entry points:
 
 * ``train`` / ``train_plan`` — one worker per call (the sequential engine);
 * ``train_many`` — a *stack* of same-shaped workers trained in one jitted
   ``vmap``-of-``scan`` call (stacked params, stacked shards, stacked batch
   plans, stacked optimizer state), optionally with per-worker 0/1 parameter
   masks so heterogeneous sub-models can share the base shape (the fleet
-  engine's bucketed/masked modes, see ``core.fleet``).
+  engine's bucketed/masked modes, see ``core.fleet``);
+* ``train_resident`` — the resident fleet path: device-resident ``[W, ...]``
+  base-shape stacks in, stacks out, with a per-step validity mask so ragged
+  batch plans (and per-round participation) never change device shapes — an
+  invalidated step leaves the carry untouched, so a worker with ``k`` valid
+  steps trains exactly like a ``k``-step plan and a fully-invalid worker
+  passes through unchanged.
 
 Batch order is decoupled from the training loop via ``make_batch_plan`` so
 every engine consumes the *same* minibatch sequence from the same RNG —
@@ -261,6 +267,84 @@ class LocalTrainer:
             [{k: np.asarray(v[i]) for k, v in out.items()} for i in range(B)],
             [float(l) for l in losses],
         )
+
+    # ---- resident fleet path (core.fleet.FleetState) ---------------------
+
+    def _make_resident_train(self, unit_map, lam: float):
+        """One base-shape masked worker with step-validity gating; vmapped
+        across the whole resident ``[W, ...]`` stack by ``train_resident``.
+
+        Valid steps replicate the masked ``_make_plan_train`` step exactly;
+        an invalid step computes-and-discards (params, momentum and loss all
+        keep their carry), which is how ragged plans and non-participating
+        workers share one compiled program.
+        """
+        cfg, opt = self.cfg, momentum(self.lr, self.beta)
+        frozen_map = {k: tuple(v) for k, v in unit_map.items()}
+
+        def train_one(p, x, y, plan, valid, mask, gl_size):
+            def loss_fn(q, xb, yb):
+                qm = jax.tree.map(lambda w, m: w * m, q, mask)
+                logits = cnn_apply(qm, cfg, xb)
+                logp = jax.nn.log_softmax(logits)
+                l = -jnp.take_along_axis(logp, yb[:, None], axis=1).mean()
+                if lam > 0.0:
+                    l = l + group_lasso_penalty(qm, frozen_map, lam, size_sqrt=gl_size)
+                return l
+
+            opt_state = opt.init(p)
+
+            def body(carry, step):
+                sel, v = step
+                vb = v > 0
+                q, st = carry
+                loss, grads = jax.value_and_grad(loss_fn)(q, x[sel], y[sel])
+                updates, st2 = opt.update(grads, st, q)
+                q2 = apply_updates(q, updates)
+                q = jax.tree.map(lambda a, b: jnp.where(vb, a, b), q2, q)
+                st = jax.tree.map(lambda a, b: jnp.where(vb, a, b), st2, st)
+                return (q, st), jnp.where(vb, loss, 0.0)
+
+            (p, opt_state), losses = jax.lax.scan(body, (p, opt_state), (plan, valid))
+            p = jax.tree.map(lambda w, m: w * m, p, mask)
+            steps = jnp.maximum(valid.sum(), 1.0)
+            return p, opt_state, losses.sum() / steps
+
+        return train_one
+
+    def train_resident(
+        self,
+        params_stack: Dict[str, jnp.ndarray],   # [W, ...] base-shape stacks
+        masks_stack: Dict[str, jnp.ndarray],    # [W, ...] 0/1
+        unit_map,
+        xs: jnp.ndarray,                        # [W, n_max, ...] padded shards
+        ys: jnp.ndarray,                        # [W, n_max]
+        plans: jnp.ndarray,                     # [W, steps, batch]
+        valid: jnp.ndarray,                     # [W, steps] 1.0 = real step
+        lam: float = 0.0,
+        gl_sizes: Optional[Dict[str, jnp.ndarray]] = None,   # {lname: [W]}
+    ):
+        """One jitted program over the ENTIRE resident fleet stack.
+
+        Returns (params_stack, momentum_stack, losses[W]) — all stacks stay
+        jnp arrays, so nothing round-trips through the host.
+        """
+        shapes_sig = tuple(sorted((k, tuple(v.shape)) for k, v in params_stack.items()))
+        sig = (shapes_sig, ("resident", xs.shape, plans.shape), float(lam))
+        fn = self._step_cache.get(sig)
+        if fn is None:
+            fn = jax.jit(jax.vmap(self._make_resident_train(unit_map, lam)))
+            self._step_cache[sig] = fn
+            self.compile_count += 1
+        if gl_sizes is None:   # base-shape factors for every worker
+            W = plans.shape[0]
+            gl_sizes = {
+                lname: jnp.full((W,), s, jnp.float32)
+                for lname, s in group_size_sqrt(
+                    {k: v[0] for k, v in params_stack.items()}, unit_map
+                ).items()
+            }
+        return fn(params_stack, xs, ys, plans, valid, masks_stack, gl_sizes)
 
     def gradient(self, params: Params, unit_map, x, y, lam: float = 0.0) -> Params:
         """One-batch gradient (DC-ASGD commits gradients, not models)."""

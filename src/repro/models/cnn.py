@@ -24,6 +24,7 @@ from repro.core.masks import UnitLayer, UnitSpace
 __all__ = [
     "CNNConfig",
     "cnn_flops",
+    "cnn_flops_from_shapes",
     "vgg_config",
     "resnet_config",
     "VGG16_CIFAR",
@@ -211,6 +212,13 @@ def cnn_apply(
 
 def cnn_flops(params: Dict, cfg: CNNConfig) -> float:
     """Per-image forward FLOPs of the (possibly reconfigured) model."""
+    return cnn_flops_from_shapes({k: v.shape for k, v in params.items()}, cfg)
+
+
+def cnn_flops_from_shapes(shapes: Dict[str, tuple], cfg: CNNConfig) -> float:
+    """``cnn_flops`` from shape tuples alone (no arrays materialized) — the
+    resident fleet engine's channel model derives sub-model FLOPs from the
+    global index via ``core.aggregation.subparam_shapes``."""
     total = 0.0
     hw = cfg.image_size
     if cfg.kind == "vgg":
@@ -219,12 +227,10 @@ def cnn_flops(params: Dict, cfg: CNNConfig) -> float:
             if entry == "M":
                 hw //= 2
             else:
-                w = params[f"conv{i}/w"]
-                total += 2.0 * hw * hw * int(np.prod(w.shape))
+                total += 2.0 * hw * hw * int(np.prod(shapes[f"conv{i}/w"]))
                 i += 1
     else:
-        w = params["stem/w"]
-        total += 2.0 * hw * hw * int(np.prod(w.shape))
+        total += 2.0 * hw * hw * int(np.prod(shapes["stem/w"]))
         for si, (nblocks, _) in enumerate(cfg.stages):
             for bi in range(nblocks):
                 if bi == 0 and si > 0:
@@ -232,9 +238,9 @@ def cnn_flops(params: Dict, cfg: CNNConfig) -> float:
                 pre = f"s{si}b{bi}"
                 for c in ("c1", "c2", "c3", "sc"):
                     key = f"{pre}/{c}/w"
-                    if key in params:
-                        total += 2.0 * hw * hw * int(np.prod(params[key].shape))
-    total += 2.0 * int(np.prod(params["fc/w"].shape))
+                    if key in shapes:
+                        total += 2.0 * hw * hw * int(np.prod(shapes[key]))
+    total += 2.0 * int(np.prod(shapes["fc/w"]))
     return total
 
 

@@ -17,7 +17,12 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-__all__ = ["group_lasso_penalty", "unit_group_norms", "group_size_sqrt"]
+__all__ = [
+    "group_lasso_penalty",
+    "unit_group_norms",
+    "group_size_sqrt",
+    "group_size_sqrt_from_shapes",
+]
 
 
 def _axes_except(arr, axis):
@@ -42,6 +47,24 @@ def unit_group_norms(
     return {k: jnp.sqrt(jnp.maximum(v, 1e-12)) for k, v in sq.items()}, size  # type: ignore[return-value]
 
 
+def group_size_sqrt_from_shapes(
+    shapes: Mapping[str, Sequence[int]], unit_map
+) -> Dict[str, float]:
+    """sqrt(|g|) per unit layer from shape tuples alone.
+
+    The resident fleet engine never materializes reconfigured arrays, so it
+    derives the group-lasso size factors from ``subparam_shapes`` output."""
+    size: Dict[str, int] = {}
+    for path, entries in unit_map.items():
+        shape = shapes.get(path)
+        if shape is None:
+            continue
+        n = int(np.prod(shape))
+        for lname, axis in entries:
+            size[lname] = size.get(lname, 0) + n // int(shape[axis])
+    return {k: float(np.sqrt(v)) for k, v in size.items()}
+
+
 def group_size_sqrt(params, unit_map) -> Dict[str, float]:
     """sqrt(|g|) per unit layer, from the (possibly reconfigured) shapes.
 
@@ -50,14 +73,9 @@ def group_size_sqrt(params, unit_map) -> Dict[str, float]:
     from the worker's reconfigured sub-params and feeding them to
     ``group_lasso_penalty`` keeps the penalty identical to the physically
     reconfigured model's."""
-    size: Dict[str, int] = {}
-    for path, entries in unit_map.items():
-        arr = params.get(path)
-        if arr is None:
-            continue
-        for lname, axis in entries:
-            size[lname] = size.get(lname, 0) + int(arr.size // arr.shape[axis])
-    return {k: float(np.sqrt(v)) for k, v in size.items()}
+    return group_size_sqrt_from_shapes(
+        {path: arr.shape for path, arr in params.items()}, unit_map
+    )
 
 
 def group_lasso_penalty(

@@ -1,8 +1,9 @@
-"""Unit tests for the DGC delta compressor (`simulation._dgc_compress`)."""
+"""Unit tests for the DGC delta compressors (`simulation._dgc_compress` and
+the vectorized `_dgc_compress_stacked` the resident engine uses)."""
 import numpy as np
 import pytest
 
-from repro.core.simulation import _dgc_compress
+from repro.core.simulation import _dgc_compress, _dgc_compress_stacked
 
 
 def _delta(rng, shapes):
@@ -54,3 +55,85 @@ def test_zero_sparsity_commits_everything():
         np.testing.assert_allclose(committed[k], delta[k])
         assert not new_res[k].any()
     assert factor == pytest.approx(1.25)
+
+
+def test_shape_change_resets_kept_fraction_accounting():
+    """A reconfigured tensor restarts DGC: dense warm-up commit, and the
+    payload factor counts the WHOLE tensor as kept that round."""
+    rng = np.random.default_rng(4)
+    delta = _delta(rng, SHAPES)        # a/w: 72 entries, b/w: 8 entries
+    residual = {"b/w": rng.normal(size=(16,)).astype(np.float32)}   # stale shape
+    committed, new_res, factor = _dgc_compress(delta, residual, 0.5)
+    np.testing.assert_allclose(committed["b/w"], delta["b/w"])      # dense
+    assert not new_res["b/w"].any()
+    kept = round(72 * 0.5) + 8         # sparse a/w + dense-restarted b/w
+    assert factor == pytest.approx(1.25 * kept / 80)
+
+
+# ---------------------------------------------------------------------------
+# stacked (resident [W, ...]) path
+# ---------------------------------------------------------------------------
+
+def _stack(rng, W, shapes):
+    return {k: rng.normal(size=(W,) + s).astype(np.float32) for k, s in shapes.items()}
+
+
+@pytest.mark.parametrize("sparsity", [0.0, 0.5, 0.9])
+def test_stacked_matches_per_worker(sparsity):
+    rng = np.random.default_rng(5)
+    W = 4
+    delta = _stack(rng, W, SHAPES)
+    residual = _stack(rng, W, SHAPES)
+    committed, new_res, factors = _dgc_compress_stacked(delta, residual, sparsity)
+    for w in range(W):
+        c_ref, r_ref, f_ref = _dgc_compress(
+            {k: v[w] for k, v in delta.items()},
+            {k: v[w] for k, v in residual.items()},
+            sparsity,
+        )
+        for k in delta:
+            np.testing.assert_allclose(committed[k][w], c_ref[k], atol=1e-6)
+            np.testing.assert_allclose(new_res[k][w], r_ref[k], atol=1e-6)
+        assert factors[w] == pytest.approx(f_ref)
+
+
+def test_stacked_mask_awareness():
+    """With 0/1 masks, the keep budget is a fraction of each worker's RETAINED
+    coordinates (matching the per-worker compressor on the reconfigured
+    tensor); pruned coordinates are never committed nor kept as residual."""
+    rng = np.random.default_rng(6)
+    W = 3
+    shapes = {"w": (8,)}
+    delta = _stack(rng, W, shapes)
+    masks = {"w": np.ones((W, 8), np.float32)}
+    masks["w"][1, 4:] = 0.0                        # worker 1 retains 4 coords
+    delta["w"] *= masks["w"]
+    committed, new_res, factors = _dgc_compress_stacked(
+        delta, {k: np.zeros_like(v) for k, v in delta.items()}, 0.5, masks=masks
+    )
+    assert not (committed["w"][1, 4:]).any()
+    assert not (new_res["w"][1, 4:]).any()
+    np.testing.assert_allclose(
+        committed["w"][1] + new_res["w"][1], delta["w"][1], atol=1e-6
+    )
+    # worker 1's budget: round(4 * 0.5) = 2 of its 4 retained coordinates
+    assert np.count_nonzero(committed["w"][1]) == 2
+    assert factors[1] == pytest.approx(1.25 * 2 / 4)
+    # full-mask workers keep round(8 * 0.5) = 4
+    assert factors[0] == pytest.approx(1.25 * 4 / 8)
+
+
+def test_stacked_rows_gate_commits():
+    """Non-submitting rows commit nothing and keep their residual untouched."""
+    rng = np.random.default_rng(7)
+    W = 3
+    delta = _stack(rng, W, SHAPES)
+    residual = _stack(rng, W, SHAPES)
+    rows = np.array([True, False, True])
+    committed, new_res, factors = _dgc_compress_stacked(
+        delta, residual, 0.5, rows=rows
+    )
+    for k in SHAPES:
+        assert not committed[k][1].any()
+        np.testing.assert_allclose(new_res[k][1], residual[k][1])
+    assert factors[1] == pytest.approx(1.0)

@@ -1,0 +1,216 @@
+"""Resident fleet state + scenario layer (sampling / dropout / churn).
+
+Pins the PR-2 contract: the masked engine keeps all workers in base
+coordinates end-to-end (zero extract/embed host round-trips inside the round
+loop, one compile no matter what prunes or who participates), and scenarios
+unfold identically under every engine."""
+import numpy as np
+import pytest
+
+from repro.core.aggregation import aggregate_by_worker, extract_subparams
+from repro.core.masks import full_index
+from repro.core.scenario import (
+    RoundEvents,
+    ScenarioConfig,
+    ScenarioEngine,
+    full_participation,
+)
+from repro.core.simulation import SimConfig, _Env, run_simulation
+from repro.core.timing import HeterogeneityConfig
+from repro.core.worker import make_batch_plan
+from repro.models.cnn import vgg_config
+
+TINY = vgg_config("vgg_tiny_res", [8, "M", 16], num_classes=4, image_size=8)
+
+
+def _cfg(engine, **kw):
+    base = dict(
+        method="adaptcl",
+        engine=engine,
+        rounds=3,
+        prune_interval=2,
+        num_workers=4,
+        cnn=TINY,
+        het=HeterogeneityConfig(num_workers=4, sigma=3.0),
+        eval_every=1,
+        seed=5,
+    )
+    base.update(kw)
+    return SimConfig(**base)
+
+
+def _events(active, dropped=None, joined=None):
+    W = len(active)
+    return RoundEvents(
+        active=np.asarray(active, bool),
+        dropped=np.zeros(W, bool) if dropped is None else np.asarray(dropped, bool),
+        joined=np.zeros(W, bool) if joined is None else np.asarray(joined, bool),
+    )
+
+
+# ---------------------------------------------------------------------------
+# scenario engine (quick)
+# ---------------------------------------------------------------------------
+
+def test_scenario_engine_draw_properties():
+    cfg = ScenarioConfig(participation=0.5, dropout=0.9, churn=0.2, seed=1)
+    eng = ScenarioEngine(cfg, 10)
+    for t in range(1, 30):
+        ev = eng.draw(t)
+        assert ev.active.sum() == 5
+        assert ev.submitters.sum() >= 1        # timeout never starves a round
+        assert not (ev.dropped & ~ev.active).any()
+
+
+def test_scenario_schedule_passthrough_and_tail():
+    sched = [_events([1, 0, 1])]
+    eng = ScenarioEngine(ScenarioConfig(schedule=sched), 3)
+    ev = eng.draw(1)
+    assert list(ev.active) == [True, False, True]
+    tail = eng.draw(2)                          # beyond schedule: everyone in
+    assert tail.active.all() and not tail.dropped.any() and not tail.joined.any()
+
+
+def test_scenario_config_validation():
+    with pytest.raises(ValueError):
+        ScenarioEngine(ScenarioConfig(participation=0.0), 4)
+    with pytest.raises(ValueError):
+        ScenarioEngine(ScenarioConfig(dropout=1.0), 4)
+    with pytest.raises(ValueError):
+        ScenarioEngine(ScenarioConfig(min_participants=0), 4)
+    with pytest.raises(ValueError):
+        run_simulation(_cfg("masked", method="fedasync_s",
+                            scenario=ScenarioConfig(participation=0.5)))
+
+
+def test_schedule_rounds_are_normalized():
+    """Scheduled events obey the same invariants as random draws: at least
+    one submitter survives the timeout, and an empty round is rejected."""
+    eng = ScenarioEngine(
+        ScenarioConfig(schedule=[_events([1, 1, 0, 1], dropped=[1, 1, 0, 1])]), 4
+    )
+    ev = eng.draw(1)
+    assert ev.submitters.sum() == 1 and ev.submitters[0]
+    empty = ScenarioEngine(ScenarioConfig(schedule=[_events([0, 0, 0, 0])]), 4)
+    with pytest.raises(ValueError):
+        empty.draw(1)
+
+
+# ---------------------------------------------------------------------------
+# resident engine (simulator level)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.slow
+def test_resident_masked_matches_sequential_with_zero_roundtrips():
+    seq = run_simulation(_cfg("sequential"))
+    res = run_simulation(_cfg("masked"))
+    assert res.final_acc == pytest.approx(seq.final_acc, abs=1e-3)
+    assert res.total_time == pytest.approx(seq.total_time, rel=1e-9)
+    assert res.retentions == pytest.approx(seq.retentions)
+    for k in seq.global_params:
+        np.testing.assert_allclose(
+            res.global_params[k], seq.global_params[k], atol=1e-3, err_msg=k
+        )
+    # the resident contract: no extract/embed inside the round loop, and the
+    # whole run (pruning events included) compiles exactly one program
+    assert res.host_roundtrips == 0
+    assert res.recompiles == 1
+    assert seq.host_roundtrips > 0              # reference engine round-trips
+
+
+@pytest.mark.slow
+def test_participation_round_equals_sequential_over_sampled_workers():
+    """One sampled round (C<1, one dropout) == training only the sampled
+    workers sequentially and averaging the submitters."""
+    active, dropped = [1, 1, 0, 1], [0, 1, 0, 0]
+    scen = ScenarioConfig(schedule=[_events(active, dropped)])
+    sim = _cfg("masked", method="fedavg_s", rounds=1, scenario=scen)
+    res = run_simulation(sim)
+    assert res.host_roundtrips == 0
+    assert res.scenario_rounds == [(1, 3, 1, 0)]
+
+    # manual reference: same env fixture, same plan stream, sampled workers
+    # through the one-worker trainer, submitters averaged with 1/|S|
+    ref_env = _Env(_cfg("sequential", method="fedavg_s", rounds=1))
+    full = full_index(ref_env.space)
+    trained = {}
+    for w in [0, 1, 3]:                         # active workers, worker order
+        x, y = ref_env.shard_xy(w)
+        plan = make_batch_plan(len(x), sim.batch_size, sim.local_epochs, ref_env.rng)
+        make_batch_plan(len(x), sim.batch_size, 0.0, ref_env.rng)   # phase-B draw
+        params = extract_subparams(ref_env.base_params, full, ref_env.unit_map)
+        trained[w], _ = ref_env.trainer.train_plan(
+            params, ref_env.unit_map, x, y, plan, sim.lam
+        )
+    expected = aggregate_by_worker(
+        [(trained[w], full) for w in [0, 3]],    # submitters only
+        ref_env.unit_map, ref_env.base_shapes,
+    )
+    for k in expected:
+        np.testing.assert_allclose(
+            res.global_params[k], expected[k].astype(np.float32), atol=1e-4,
+            err_msg=k,
+        )
+
+
+@pytest.mark.slow
+def test_scenario_identical_across_engines():
+    scen = ScenarioConfig(participation=0.5, dropout=0.2, churn=0.1, seed=3)
+    kw = dict(rounds=4, num_workers=6,
+              het=HeterogeneityConfig(num_workers=6, sigma=3.0), scenario=scen)
+    seq = run_simulation(_cfg("sequential", **kw))
+    res = run_simulation(_cfg("masked", **kw))
+    assert res.scenario_rounds == seq.scenario_rounds
+    assert res.total_time == pytest.approx(seq.total_time, rel=1e-9)
+    assert res.retentions == pytest.approx(seq.retentions)
+    for k in seq.global_params:
+        np.testing.assert_allclose(
+            res.global_params[k], seq.global_params[k], atol=1e-3, err_msg=k
+        )
+
+
+@pytest.mark.slow
+def test_churn_keeps_retentions_and_shapes_consistent():
+    W = 4
+    sched = [
+        _events([1] * W),
+        _events([1] * W),
+        _events([1] * W),                        # worker 0 prunes here (PI=2)
+        _events([1] * W, joined=[1, 0, 0, 0]),   # ... then its slot churns
+    ]
+    r = run_simulation(_cfg("masked", rounds=4, scenario=ScenarioConfig(schedule=sched)))
+    assert len(r.retentions) == W
+    assert r.retentions[0] == pytest.approx(1.0)     # fresh worker: full model
+    assert all(0.0 < g <= 1.0 + 1e-9 for g in r.retentions)
+    base = _Env(_cfg("sequential")).base_shapes
+    assert {k: v.shape for k, v in r.global_params.items()} == base
+    assert r.host_roundtrips == 0
+
+
+@pytest.mark.slow
+def test_sampling_plus_pruning_keeps_single_compile():
+    scen = ScenarioConfig(participation=0.5, dropout=0.25, seed=11)
+    r = run_simulation(_cfg("masked", rounds=6, num_workers=8,
+                            het=HeterogeneityConfig(num_workers=8, sigma=4.0),
+                            scenario=scen))
+    assert r.recompiles == 1
+    assert r.host_roundtrips == 0
+    assert any(g < 1.0 for g in r.retentions)        # pruning really happened
+
+
+# ---------------------------------------------------------------------------
+# async window batching
+# ---------------------------------------------------------------------------
+
+@pytest.mark.slow
+@pytest.mark.parametrize("method", ["fedasync_s", "ssp_s"])
+def test_async_window_batches_fleet_calls(method):
+    kw = dict(method=method, rounds=3, num_workers=6,
+              het=HeterogeneityConfig(num_workers=6, sigma=3.0), eval_every=2)
+    serial = run_simulation(_cfg("masked", async_window=0.0, **kw))
+    windowed = run_simulation(_cfg("masked", async_window=50.0, **kw))
+    # same number of commits either way...
+    assert len(windowed.acc_time) == len(serial.acc_time)
+    # ...but the windowed run coalesces them into far fewer device programs
+    assert windowed.batched_calls < serial.batched_calls
+    assert 0.0 <= windowed.best_acc <= 1.0
