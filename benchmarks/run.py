@@ -2,11 +2,24 @@
 
     PYTHONPATH=src python -m benchmarks.run [--only table2_main] [--quick]
     PYTHONPATH=src python -m benchmarks.run scale [--quick] [--out BENCH_scale.json]
+    PYTHONPATH=src python -m benchmarks.run async_scale [--quick] [--out BENCH_async.json]
 
-``scale`` is the fleet-scaling bench: W in {10, 50, 200} x engine x scenario,
-tracking host walltime / recompiles / host round-trips of the resident masked
-engine against the sequential reference.  Results land in ``BENCH_scale.json``
-so the perf trajectory is tracked across PRs.
+``scale`` is the sync fleet-scaling bench: W in {10, 50, 200} x engine x
+scenario, tracking host walltime / recompiles / host round-trips of the
+resident masked engine against the sequential reference.  Results land in
+``BENCH_scale.json`` so the perf trajectory is tracked across PRs.
+
+``async_scale`` is the asynchronous analogue: W in {10, 50, 200} x scheduler
+(fedasync_s / ssp_s / dcasgd_s) x participation C, all on the resident masked
+engine with window batching.  It tracks walltime, recompiles vs the sub-stack
+bucket count, and zero host round-trips; at C=0.1 the W=200 walltime should
+stay within a small factor of W=50 because device compute is sized to the
+C*W participants, not the slot pool.  Results land in ``BENCH_async.json``.
+
+Engine x scheduler support matrix (see README.md): every method runs on
+``sequential``/``bucketed``/``masked``; the resident zero-round-trip path
+(and participation-sized sub-stacks) is the ``masked`` engine, for both the
+sync methods and the async schedulers.
 
 Roofline rows are read from ``results/roofline_single.jsonl`` if the dry-run
 sweep has been run (``python -m repro.launch.roofline --out ...``); the
@@ -100,16 +113,92 @@ def scale(out_path: str = "BENCH_scale.json", quick: bool = False) -> None:
     print(f"scale/json,{out_path},")
 
 
+def async_scale(out_path: str = "BENCH_async.json", quick: bool = False) -> None:
+    """Async fleet-scaling bench: W x scheduler x participation C, resident.
+
+    Every cell runs the resident masked engine with window batching: the
+    async loop is extract/embed-free (``host_roundtrips == 0``), merges
+    consume the stacked aggregate, and each window batch trains as ONE
+    bucket-sized sub-stack program — so at C < 1 device FLOPs (and walltime)
+    track the C*W participants instead of the W-slot pool, and recompiles
+    stay bounded by the bucket count."""
+    from repro.core.scenario import ScenarioConfig
+    from repro.core.simulation import SimConfig, run_simulation
+    from repro.core.timing import HeterogeneityConfig
+    from repro.models.cnn import vgg_config
+
+    cnn = vgg_config("vgg_ascale", [16, "M", 32], num_classes=10, image_size=8)
+    worker_counts = (4, 12) if quick else (10, 50, 200)
+    rounds = 2 if quick else 3
+    parts = (1.0, 0.5) if quick else (1.0, 0.1)
+    schedulers = ("fedasync_s", "ssp_s", "dcasgd_s")
+    rows = []
+    print("name,value,derived")
+    for W in worker_counts:
+        for method in schedulers:
+            for C in parts:
+                scen = None if C >= 1.0 else ScenarioConfig(
+                    participation=C, seed=1
+                )
+                r = run_simulation(SimConfig(
+                    method=method, engine="masked", scenario=scen,
+                    rounds=rounds, num_workers=W, batch_size=8, cnn=cnn,
+                    async_window=1000.0, eval_every=rounds,
+                    het=HeterogeneityConfig(num_workers=W, sigma=5.0),
+                    seed=7,
+                ))
+                assert r.host_roundtrips == 0, "resident async must not round-trip"
+                rows.append(dict(
+                    workers=W, scheduler=method, participation=C,
+                    rounds=rounds, walltime_s=r.walltime_s,
+                    recompiles=r.recompiles, batched_calls=r.batched_calls,
+                    bucket_sizes=r.bucket_sizes,
+                    host_roundtrips=r.host_roundtrips,
+                    final_acc=r.final_acc, total_time=r.total_time,
+                ))
+                print(
+                    f"async_scale/W{W}/{method}/C{C},{r.walltime_s:.2f}s,"
+                    f"recompiles={r.recompiles};buckets={r.bucket_sizes};"
+                    f"batched={r.batched_calls};acc={r.final_acc:.3f}"
+                )
+    by = {(row["workers"], row["scheduler"], row["participation"]): row
+          for row in rows}
+    lo, hi = worker_counts[-2], worker_counts[-1]
+    c_lo = min(parts)
+    ratios = {}
+    for method in schedulers:
+        ratio = (by[(hi, method, c_lo)]["walltime_s"]
+                 / max(by[(lo, method, c_lo)]["walltime_s"], 1e-9))
+        ratios[method] = ratio
+        print(f"async_scale/{method}_W{hi}_over_W{lo}/C{c_lo},{ratio:.2f}x,"
+              f"participation-sized compute (target ~<1.5x)")
+    with open(out_path, "w") as f:
+        json.dump({
+            "rows": rows,
+            "worker_counts": list(worker_counts),
+            "participations": list(parts),
+            "walltime_ratio_hi_over_lo_at_min_C": ratios,
+        }, f, indent=2)
+    print(f"async_scale/json,{out_path},")
+
+
 def main() -> None:
-    ap = argparse.ArgumentParser()
+    ap = argparse.ArgumentParser(
+        description=__doc__, formatter_class=argparse.RawDescriptionHelpFormatter
+    )
     ap.add_argument(
-        "command", nargs="?", default="tables", choices=("tables", "scale"),
-        help="'tables' (default) = paper-table benches; 'scale' = fleet-scaling grid",
+        "command", nargs="?", default="tables",
+        choices=("tables", "scale", "async_scale"),
+        help="'tables' (default) = paper-table benches; 'scale' = sync "
+             "fleet-scaling grid (W x engine x scenario -> BENCH_scale.json); "
+             "'async_scale' = resident async scheduler grid (W x scheduler x "
+             "participation C -> BENCH_async.json)",
     )
     ap.add_argument("--only", default=None)
     ap.add_argument("--quick", action="store_true")
-    ap.add_argument("--out", default="BENCH_scale.json",
-                    help="output JSON for the 'scale' command")
+    ap.add_argument("--out", default=None,
+                    help="output JSON for 'scale' (default BENCH_scale.json) "
+                         "/ 'async_scale' (default BENCH_async.json)")
     ap.add_argument(
         "--engine", default="sequential",
         choices=("sequential", "bucketed", "masked"),
@@ -121,7 +210,10 @@ def main() -> None:
     os.environ["BENCH_ENGINE"] = args.engine
 
     if args.command == "scale":
-        scale(args.out, quick=args.quick)
+        scale(args.out or "BENCH_scale.json", quick=args.quick)
+        return
+    if args.command == "async_scale":
+        async_scale(args.out or "BENCH_async.json", quick=args.quick)
         return
 
     from benchmarks import tables  # import after BENCH_QUICK is set

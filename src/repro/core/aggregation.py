@@ -25,13 +25,26 @@ Two aggregation representations are supported:
   stacks consumed directly (masked mean), with a per-worker weight vector —
   the resident fleet engine's path, no per-worker embed calls.
 
+The **async server merges** live here too (:class:`AsyncServer`): polynomial
+staleness weighting (fedasync), SSP delta averaging, and DC-ASGD delay
+compensation are one per-commit ``commit`` entry point shared by the
+per-worker and the resident scheduler paths, so the stacked rewrite cannot
+drift from the reference semantics (pinned by the golden staleness tests).
+The resident path feeds it rows of the ``[B, ...]`` trained sub-stack pulled
+once per fleet call (the "stacked aggregate out"); the per-worker path feeds
+it per-worker dicts.
+
 ``extract_subparams`` and ``embed_params`` count their invocations in
 ``ROUNDTRIP_COUNTS`` so the simulator can assert that the resident engine
-performs zero host round-trips inside the round loop.
+performs zero host round-trips inside the round loop.  The per-worker async
+path additionally tallies one ``async_merge`` per commit (each commit copies
+a full per-worker param dict across the host boundary), so
+``SimResult.host_roundtrips`` is honest for the baseline the resident
+equivalence tests compare against.
 """
 from __future__ import annotations
 
-from typing import Dict, List, Mapping, Sequence, Tuple
+from typing import Dict, List, Mapping, Optional, Sequence, Tuple
 
 import numpy as np
 
@@ -47,16 +60,24 @@ __all__ = [
     "aggregate_by_unit",
     "aggregate_by_worker_stacked",
     "aggregate_by_unit_stacked",
+    "fedasync_weight",
+    "AsyncServer",
     "ROUNDTRIP_COUNTS",
     "roundtrip_total",
     "reset_roundtrip_counts",
+    "tally_roundtrip",
 ]
 
 UnitMap = Mapping[str, Sequence[Tuple[str, int]]]
 Params = Dict[str, np.ndarray]
 
-# host extract/embed round-trip counters (see module docstring)
-ROUNDTRIP_COUNTS: Dict[str, int] = {"extract_subparams": 0, "embed_params": 0}
+# host round-trip counters (see module docstring): extract/embed crossings in
+# the sync loop, per-commit param-dict merges in the per-worker async loop
+ROUNDTRIP_COUNTS: Dict[str, int] = {
+    "extract_subparams": 0,
+    "embed_params": 0,
+    "async_merge": 0,
+}
 
 
 def roundtrip_total() -> int:
@@ -66,6 +87,12 @@ def roundtrip_total() -> int:
 def reset_roundtrip_counts() -> None:
     for k in ROUNDTRIP_COUNTS:
         ROUNDTRIP_COUNTS[k] = 0
+
+
+def tally_roundtrip(kind: str, n: int = 1) -> None:
+    """Record host round-trips that don't flow through extract/embed (the
+    per-worker async path's per-commit param-dict merges)."""
+    ROUNDTRIP_COUNTS[kind] = ROUNDTRIP_COUNTS.get(kind, 0) + n
 
 
 def _full_dims(base_shapes: Mapping[str, tuple], path: str, axis: int) -> int:
@@ -196,6 +223,101 @@ def aggregate_by_worker_stacked(
         arr = np.asarray(stack, dtype=np.float64)
         out[path] = np.tensordot(weights, arr, axes=1)
     return out
+
+
+# --- async server merges (fedasync_s / ssp_s / dcasgd_s) -------------------
+
+def fedasync_weight(a0: float, staleness: float) -> float:
+    """Xie et al. polynomial staleness weighting: ``a0 * (s + 1)^-0.5``."""
+    return float(a0 * (staleness + 1.0) ** -0.5)
+
+
+class AsyncServer:
+    """Per-commit server state for the asynchronous schedulers.
+
+    One ``commit`` entry point implements all three merge rules in base
+    coordinates, so the per-worker and resident scheduler paths share the
+    exact same staleness-weighting math:
+
+    * ``fedasync_s`` — ``theta <- (1-a) theta + a theta_w`` with the
+      polynomial staleness weight ``a = fedasync_weight(a0, s)``;
+    * ``ssp_s``      — ``theta <- theta + (theta_w - fetched_w) / N`` where
+      ``N`` is the *committing cohort* size (``cohort_size``, defaulting to
+      the slot pool ``num_workers``): under async client sampling only C*W
+      workers ever commit, and SSP's delta averaging is over them;
+    * ``dcasgd_s``   — DC-ASGD-a: the committed "gradient" is the accumulated
+      local update divided by lr, compensated by ``lam_t * g^2 * (theta -
+      w_bak)`` with a mean-square-adaptive ``lam_t``.
+
+    DC-ASGD bookkeeping is *stacked*: ``backup`` is a ``{path: [W, ...]}``
+    base-coordinate array over the full slot pool (worker w's ``w_bak`` is
+    row w — slot ids index it even when only a cohort commits) and ``dc_m``
+    the running mean-square accumulator, so the resident path never
+    materializes per-worker dicts for it.  ``commit`` always rebinds
+    ``self.params`` to a fresh dict (never mutates arrays in place), which
+    is what lets callers keep zero-copy references to fetched snapshots.
+    """
+
+    def __init__(
+        self,
+        method: str,
+        global_params: Params,
+        num_workers: int,
+        *,
+        cohort_size: Optional[int] = None,
+        fedasync_a: float = 0.5,
+        lr: float = 0.05,
+        dcasgd_lambda: float = 2.0,
+        dcasgd_m: float = 0.95,
+    ):
+        self.method = method
+        self.params: Params = dict(global_params)
+        self.num_workers = num_workers
+        self.cohort_size = num_workers if cohort_size is None else cohort_size
+        self.version = 0
+        self.fedasync_a = fedasync_a
+        self.lr = lr
+        self.dcasgd_lambda = dcasgd_lambda
+        self.dcasgd_m = dcasgd_m
+        self.backup: Optional[Dict[str, np.ndarray]] = None
+        self.dc_m: Optional[Params] = None
+        if method == "dcasgd_s":
+            self.backup = {
+                k: np.repeat(np.asarray(v)[None], num_workers, axis=0)
+                for k, v in global_params.items()
+            }
+            self.dc_m = {k: np.zeros_like(v) for k, v in global_params.items()}
+
+    def commit(
+        self, worker: int, trained: Params, fetched: Params, staleness: int
+    ) -> Params:
+        """Apply one worker's commit; returns (and rebinds) the new global."""
+        g = self.params
+        if self.method == "fedasync_s":
+            a = fedasync_weight(self.fedasync_a, staleness)
+            new = {k: (1 - a) * g[k] + a * trained[k] for k in g}
+        elif self.method == "ssp_s":
+            new = {
+                k: g[k] + (trained[k] - fetched[k]) / self.cohort_size for k in g
+            }
+        elif self.method == "dcasgd_s":
+            new = {}
+            for k in g:
+                grad = (fetched[k] - trained[k]) / self.lr
+                self.dc_m[k] = (
+                    self.dcasgd_m * self.dc_m[k]
+                    + (1 - self.dcasgd_m) * grad * grad
+                )
+                lam_t = self.dcasgd_lambda / np.sqrt(np.mean(self.dc_m[k]) + 1e-12)
+                comp = grad + lam_t * grad * grad * (g[k] - self.backup[k][worker])
+                new[k] = g[k] - self.lr * comp
+            for k in new:
+                self.backup[k][worker] = new[k]
+        else:
+            raise ValueError(f"unknown async method {self.method!r}")
+        self.params = new
+        self.version += 1
+        return new
 
 
 def aggregate_by_unit_stacked(

@@ -43,6 +43,20 @@ stack — the synchronous simulator never calls ``extract_subparams`` /
 * aggregation consumes the stacks directly
   (``aggregation.aggregate_by_worker_stacked`` / ``_by_unit_stacked``).
 
+**Participation-sized compute** (``train_rows``): when only a subset of the
+slots has work this phase — scenario sampling at C < 1, straggler dropout,
+or an async window batch — the active rows are gathered into a fixed-size
+``[B, ...]`` sub-stack before the vmapped scan, so device FLOPs track
+participation instead of W.  ``B`` is padded up to the next power of two
+(capped at W, padding rows are fully step-invalid) so the whole run touches
+only a logarithmic set of device shapes: recompiles are bounded by the
+number of distinct sub-stack bucket sizes (``buckets_used``), and the step
+dimension is padded to a per-phase constant (``worker.plan_steps`` over all
+slots) so ragged subsets never add shapes of their own.  Trained rows are
+scattered back into the resident stacks; the async schedulers additionally
+pull the ``[B, ...]`` trained rows to host in ONE copy per fleet call (the
+"stacked aggregate out" their per-commit merges consume).
+
 Every engine consumes identical pre-drawn batch plans (``make_batch_plan``),
 which is what the equivalence tests pin down.  Compiles are counted in the
 underlying ``LocalTrainer.compile_count`` and surfaced as
@@ -51,7 +65,7 @@ underlying ``LocalTrainer.compile_count`` and surfaced as
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Mapping, Optional, Sequence
+from typing import Dict, List, Mapping, Optional, Sequence, Tuple
 
 import jax.numpy as jnp
 import numpy as np
@@ -66,11 +80,53 @@ from .aggregation import (
     subparam_shapes,
 )
 from .masks import GlobalIndex
-from .worker import LocalTrainer, Params
+from .worker import LocalTrainer, Params, stack_batch_plans
 
-__all__ = ["ENGINES", "FleetJob", "FleetEngine", "FleetState"]
+__all__ = [
+    "ENGINES",
+    "FleetJob",
+    "FleetEngine",
+    "FleetState",
+    "bucket_rows",
+    "gather_stack_rows",
+    "scatter_stack_rows",
+]
 
 ENGINES = ("sequential", "bucketed", "masked")
+
+
+def bucket_rows(n: int, cap: int) -> int:
+    """Sub-stack row bucket for ``n`` active rows: the smallest power of two
+    >= n, capped at the fleet size.  A handful of buckets covers every
+    participation pattern, which is what bounds recompiles."""
+    if n < 1:
+        raise ValueError(f"bucket_rows needs n >= 1, got {n}")
+    b = 1
+    while b < n:
+        b <<= 1
+    return min(b, cap)
+
+
+def gather_stack_rows(
+    stacks: Mapping[str, jnp.ndarray], rows: np.ndarray
+) -> Dict[str, jnp.ndarray]:
+    """Gather rows of ``[W, ...]`` stacks into a ``[B, ...]`` sub-stack
+    (``rows`` may repeat indices — bucket padding repeats row 0)."""
+    idx = jnp.asarray(np.asarray(rows, np.int64))
+    return {k: jnp.take(v, idx, axis=0) for k, v in stacks.items()}
+
+
+def scatter_stack_rows(
+    stacks: Mapping[str, jnp.ndarray],
+    rows: np.ndarray,
+    sub: Mapping[str, jnp.ndarray],
+) -> Dict[str, jnp.ndarray]:
+    """Scatter the first ``len(rows)`` rows of a sub-stack back into the
+    ``[W, ...]`` stacks (the inverse of ``gather_stack_rows`` on real rows;
+    bucket-padding rows beyond ``len(rows)`` are discarded)."""
+    idx = jnp.asarray(np.asarray(rows, np.int64))
+    n = len(rows)
+    return {k: v.at[idx].set(sub[k][:n]) for k, v in stacks.items()}
 
 
 @dataclasses.dataclass
@@ -102,6 +158,7 @@ class FleetEngine:
         self.base_shapes = base_shapes
         self.engine = engine
         self.batched_calls = 0    # device programs launched for batched phases
+        self.buckets_used: set = set()   # sub-stack row counts launched
         self._mask_cache: Dict[tuple, Params] = {}
 
     # ------------------------------------------------------------------
@@ -284,21 +341,38 @@ class FleetEngine:
         for path, g in global_params.items():
             state.params[path] = jnp.asarray(g)[None] * state.masks[path]
 
-    def stack_plans(self, plans: Sequence[Optional[np.ndarray]]):
-        """Pad per-worker batch plans into ``[W, S, batch]`` + a ``[W, S]``
-        validity mask (``None``/empty plan = fully invalid row).  Returns
-        ``None`` when no worker has a real step this phase."""
-        steps = [0 if p is None else p.shape[0] for p in plans]
-        S = max(steps)
-        if S == 0:
+    def scatter_global_rows(
+        self,
+        state: "FleetState",
+        rows: Sequence[int],
+        globals_list: Sequence[Params],
+    ):
+        """Masked scatter of per-row global snapshots into the resident stack:
+        row ``rows[i]`` becomes ``globals_list[i] * M[rows[i]]``.
+
+        This is the async schedulers' refetch path — each committing worker
+        refetched a *different* global version, so the rows are stacked on
+        host once per fleet call and written in one device op per tensor."""
+        idx = jnp.asarray(np.asarray(rows, np.int64))
+        for path in state.params:
+            g = jnp.asarray(np.stack([gl[path] for gl in globals_list]))
+            state.params[path] = state.params[path].at[idx].set(
+                g * jnp.take(state.masks[path], idx, axis=0)
+            )
+
+    def stack_plans(
+        self,
+        plans: Sequence[Optional[np.ndarray]],
+        pad_rows: Optional[int] = None,
+        pad_steps: Optional[int] = None,
+    ):
+        """Pad per-worker batch plans into ``[R, S, batch]`` + a ``[R, S]``
+        validity mask (see ``worker.stack_batch_plans``).  Returns ``None``
+        when no worker has a real step this phase."""
+        stacked = stack_batch_plans(plans, num_rows=pad_rows, num_steps=pad_steps)
+        if stacked is None:
             return None
-        batch = next(p.shape[1] for p in plans if p is not None and p.shape[0] > 0)
-        stack = np.zeros((len(plans), S, batch), np.int64)
-        valid = np.zeros((len(plans), S), np.float32)
-        for w, p in enumerate(plans):
-            if steps[w]:
-                stack[w, : steps[w]] = p
-                valid[w, : steps[w]] = 1.0
+        stack, valid = stacked
         return jnp.asarray(stack), jnp.asarray(valid)
 
     def train_rounds(
@@ -306,22 +380,87 @@ class FleetEngine:
         state: "FleetState",
         plans: Sequence[Optional[np.ndarray]],
         lam: float = 0.0,
+        pad_steps: Optional[int] = None,
     ) -> Optional[np.ndarray]:
         """One resident device program for a whole round phase.
 
-        Returns per-worker mean losses (NaN-free; invalid rows report 0), or
-        ``None`` if no worker had work this phase."""
-        stacked = self.stack_plans(plans)
-        if stacked is None:
+        Rows whose plan is ``None``/empty are not trained *and not computed*:
+        when fewer than W slots have work, the active rows are gathered into
+        a bucket-sized sub-stack first (``train_rows``), so device FLOPs
+        track participation.  Returns per-worker mean losses aligned to the
+        full slot space (idle rows report 0), or ``None`` if no worker had
+        work this phase."""
+        W = state.num_workers
+        rows = [w for w, p in enumerate(plans) if p is not None and p.shape[0] > 0]
+        if not rows:
             return None
+        if len(rows) == W:
+            stacked = self.stack_plans(plans, pad_steps=pad_steps)
+            plan_stack, valid = stacked
+            gl = {k: jnp.asarray(v) for k, v in state.gl_sizes.items()}
+            state.params, state.momentum, losses = self.trainer.train_resident(
+                state.params, state.masks, self.unit_map,
+                state.xs, state.ys, plan_stack, valid, lam, gl,
+            )
+            self.batched_calls += 1
+            self.buckets_used.add(W)
+            return np.asarray(losses)
+        losses, _ = self.train_rows(
+            state, rows, [plans[w] for w in rows], lam, pad_steps=pad_steps
+        )
+        full = np.zeros(W, np.float32)
+        full[rows] = losses
+        return full
+
+    def train_rows(
+        self,
+        state: "FleetState",
+        rows: Sequence[int],
+        plans: Sequence[Optional[np.ndarray]],
+        lam: float = 0.0,
+        pad_steps: Optional[int] = None,
+        to_host: bool = False,
+    ) -> Tuple[np.ndarray, Optional[Dict[str, np.ndarray]]]:
+        """Participation-sized resident training: gather ``rows`` into a
+        ``[B, ...]`` sub-stack (B = next row bucket), run ONE vmapped scan
+        over it, scatter the trained rows back into the resident stacks.
+
+        ``plans`` aligns with ``rows``.  Returns ``(losses[len(rows)],
+        trained)`` where ``trained`` is a single host copy of the trained
+        ``{path: [len(rows), ...]}`` rows when ``to_host`` is set (the async
+        schedulers' stacked aggregate out) and ``None`` otherwise."""
+        W = state.num_workers
+        B = len(rows)
+        bucket = bucket_rows(B, W)
+        rows = [int(w) for w in rows]
+        rows_pad = rows + [rows[0]] * (bucket - B)
+        stacked = self.stack_plans(
+            list(plans) + [None] * (bucket - B),
+            pad_rows=bucket, pad_steps=pad_steps,
+        )
+        if stacked is None:
+            return np.zeros(B, np.float32), None
         plan_stack, valid = stacked
-        gl = {k: jnp.asarray(v) for k, v in state.gl_sizes.items()}
-        state.params, state.momentum, losses = self.trainer.train_resident(
-            state.params, state.masks, self.unit_map,
-            state.xs, state.ys, plan_stack, valid, lam, gl,
+        sub_params = gather_stack_rows(state.params, rows_pad)
+        sub_masks = gather_stack_rows(state.masks, rows_pad)
+        idx = jnp.asarray(np.asarray(rows_pad, np.int64))
+        xs = jnp.take(state.xs, idx, axis=0)
+        ys = jnp.take(state.ys, idx, axis=0)
+        gl = {
+            k: jnp.asarray(np.asarray(v)[rows_pad]) for k, v in state.gl_sizes.items()
+        }
+        out, _, losses = self.trainer.train_resident(
+            sub_params, sub_masks, self.unit_map, xs, ys, plan_stack, valid, lam, gl,
         )
         self.batched_calls += 1
-        return np.asarray(losses)
+        self.buckets_used.add(bucket)
+        state.params = scatter_stack_rows(state.params, rows, out)
+        # state.momentum (a full-stack observational snapshot, nothing reads
+        # it) is left untouched — momentum restarts per phase regardless
+        trained = (
+            {k: np.asarray(v[:B]) for k, v in out.items()} if to_host else None
+        )
+        return np.asarray(losses)[:B], trained
 
     def params_host(self, state: "FleetState") -> Dict[str, np.ndarray]:
         """Host view of the resident param stack (submission boundary only)."""
@@ -336,9 +475,11 @@ class FleetState:
     """Resident multi-worker state: everything is a ``[W, ...]`` stack.
 
     ``params`` rows are always masked (pruned coordinates exactly 0), so
-    stacked aggregation can consume them directly; ``momentum`` holds the
-    last phase's optimizer stack (momentum restarts per phase, matching the
-    per-worker engines).  ``shard_sizes`` records true (pre-padding) shard
+    stacked aggregation can consume them directly; ``momentum`` is a purely
+    observational snapshot of the last FULL-stack phase's optimizer state
+    (momentum restarts per phase, matching the per-worker engines, and
+    participation-sized sub-stack phases do not update it).  ``shard_sizes``
+    records true (pre-padding) shard
     lengths; ``gl_sizes`` the per-worker sqrt-group-size factors that keep
     the group-lasso penalty equal to each physically-reconfigured twin."""
 

@@ -27,9 +27,15 @@ Semantics (documented here, implemented by ``core.simulation._run_sync``):
   pruned-rate history / DGC residuals.  Replacement keeps ``W`` constant —
   the fleet is a slot pool, as in semi-async FL systems.
 
-Scenarios currently apply to the synchronous methods (``fedavg``,
-``fedavg_s``, ``adaptcl``); the async schedulers model client pacing through
-the event queue already.
+Scenarios apply in full to the synchronous methods (``fedavg``,
+``fedavg_s``, ``adaptcl``).  The async schedulers model client *pacing*
+through their event queue already, but they honour **client sampling**:
+``participation`` selects a static ``max(min_participants, round(C * W))``
+subset of the slot pool (``static_participants``, drawn from the same
+dedicated RNG stream) that joins the event loop — the resident engine then
+sizes its device compute to the participants, not the slot pool.  Dropout
+and churn stay sync-only (the async timeout semantics are the event queue
+itself) and are rejected for async methods.
 
 ``ScenarioConfig.schedule`` takes explicit per-round events for tests and
 reproducible sweeps; rounds beyond the schedule fall back to full
@@ -118,7 +124,7 @@ class ScenarioEngine:
                 return ev
             return full_participation(W)
         joined = self.rng.random(W) < cfg.churn
-        k = int(np.clip(round(cfg.participation * W), cfg.min_participants, W))
+        k = self.cohort_size()
         active = np.zeros(W, dtype=bool)
         active[self.rng.choice(W, size=k, replace=False)] = True
         dropped = active & (self.rng.random(W) < cfg.dropout)
@@ -126,6 +132,25 @@ class ScenarioEngine:
             # straggler timeout never starves the round: keep one submitter
             dropped[np.flatnonzero(active)[0]] = False
         return RoundEvents(active=active, dropped=dropped, joined=joined)
+
+    def cohort_size(self) -> int:
+        """Sampled cohort size: ``clip(round(C * W), min_participants, W)`` —
+        the ONE formula behind both the sync per-round draw and the async
+        static cohort, so the two can't diverge."""
+        cfg = self.cfg
+        return int(np.clip(round(cfg.participation * self.W),
+                           cfg.min_participants, self.W))
+
+    def static_participants(self) -> np.ndarray:
+        """Slot ids participating in an ASYNC run, drawn once at run start.
+
+        Async client sampling: a ``cohort_size()`` subset joins the event
+        loop; the rest of the slot pool idles for the whole run.  Sorted
+        ascending so the initial schedule order matches the
+        full-participation loop, and drawn from the scenario RNG stream so
+        the same subset participates under every engine."""
+        k = self.cohort_size()
+        return np.sort(self.rng.choice(self.W, size=k, replace=False)).astype(np.int64)
 
     def fresh_shard(self, size: int, train_len: int) -> np.ndarray:
         """Index set for a churned-in worker (uniform over the task's pool)."""

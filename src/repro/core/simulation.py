@@ -47,13 +47,25 @@ one-compile guarantee.
 The async schedulers batch event-queue commits that land within one virtual
 window (``SimConfig.async_window``, default 0 = fully serial) into a single
 fleet call, so ``fedasync_s``/``ssp_s``/``dcasgd_s`` stop issuing W-sized
-streams of single-job fleet calls.
+streams of single-job fleet calls.  Under the resident engine the async loop
+is fully stack-native: each window batch scatters the committing workers'
+refetched globals into their ``[W, ...]`` rows (masked scatter in), trains
+the batch as one bucket-sized sub-stack program, pulls the trained rows to
+host in ONE copy (stacked aggregate out), and applies the per-commit
+staleness-weighted merges (``aggregation.AsyncServer``) in finish order — no
+``extract_subparams``/``embed_params`` anywhere, so
+``SimResult.host_roundtrips == 0`` for resident async runs too.  Async
+methods honour scenario *client sampling* (a static C-fraction of the slot
+pool joins the event loop, ``ScenarioEngine.static_participants``); device
+compute is sized to the participants.
 
 ``SimResult`` reports ``recompiles`` (jit shape-signatures compiled),
 ``batched_calls`` (device programs launched by the batched engines),
-``walltime_s`` (host wall-clock), and ``host_roundtrips`` (extract/embed
-calls inside the round loop — 0 for the resident engine) so the engines'
-host cost can be compared directly.
+``walltime_s`` (host wall-clock), ``host_roundtrips`` (extract/embed calls
+plus per-worker async merge copies inside the loop — 0 for the resident
+engine), and ``bucket_sizes`` (the sub-stack row buckets launched, which
+bound the recompile count) so the engines' host cost can be compared
+directly.
 """
 from __future__ import annotations
 
@@ -79,6 +91,7 @@ from repro.models.cnn import (
 )
 
 from .aggregation import (
+    AsyncServer,
     aggregate_by_unit,
     aggregate_by_unit_stacked,
     aggregate_by_worker,
@@ -86,6 +99,7 @@ from .aggregation import (
     extract_subparams,
     roundtrip_total,
     subparam_shapes,
+    tally_roundtrip,
 )
 from .fleet import FleetEngine, FleetJob
 from .importance import CIG_METHODS, METHODS, ImportanceContext
@@ -93,7 +107,7 @@ from .masks import full_index, is_nested, payload_bytes, prune_to_budget, retent
 from .pruned_rate import PrunedRateConfig, WorkerHistory, learn_pruned_rates
 from .scenario import ScenarioConfig, ScenarioEngine, full_participation
 from .timing import HeterogeneityConfig, heterogeneity_from_times, make_bandwidths
-from .worker import LocalTrainer, local_unit_stats, make_batch_plan
+from .worker import LocalTrainer, local_unit_stats, make_batch_plan, plan_steps
 
 __all__ = ["SimConfig", "SimResult", "run_simulation", "default_cnn"]
 
@@ -171,6 +185,9 @@ class SimResult:
     scenario_rounds: List[Tuple[int, int, int, int]] = dataclasses.field(
         default_factory=list
     )
+    # sub-stack row buckets launched by the resident engine (sorted); the
+    # recompile count is bounded by len(bucket_sizes) x phases
+    bucket_sizes: List[int] = dataclasses.field(default_factory=list)
     # final global model (base coordinates) — test/analysis hook
     global_params: Optional[Dict[str, np.ndarray]] = None
 
@@ -365,9 +382,24 @@ def _run_sync(sim: SimConfig, env: _Env) -> SimResult:
     prune_round_count = 0
 
     state = None
+    pad_a = pad_b = None
     if resident:
         shard_x, shard_y = zip(*(env.shard_xy(w) for w in range(W)))
         state = env.fleet.init_state(env.base_params, list(shard_x), list(shard_y))
+        # constant per-phase step pads (churn keeps shard sizes fixed): every
+        # gathered sub-stack shares one plan shape per phase, so recompiles
+        # are bounded by the row buckets alone
+        pad_a = max(
+            plan_steps(len(env.shards[w]), sim.batch_size, sim.local_epochs)
+            for w in range(W)
+        )
+        pad_b = max(
+            plan_steps(
+                len(env.shards[w]), sim.batch_size,
+                (1 - sim.beta) * sim.local_epochs,
+            )
+            for w in range(W)
+        )
         if sim.dgc_sparsity > 0.0:
             dgc_res_stack = {
                 k: np.zeros((W,) + tuple(s), np.float32)
@@ -432,7 +464,7 @@ def _run_sync(sim: SimConfig, env: _Env) -> SimResult:
         worker_params: Dict[int, Dict[str, np.ndarray]] = {}
         if resident:
             env.fleet.scatter_global(state, global_params)
-            env.fleet.train_rounds(state, plans_a, lam)
+            env.fleet.train_rounds(state, plans_a, lam, pad_steps=pad_a)
         else:
             jobs_a = []
             for w in active_ws:
@@ -477,7 +509,9 @@ def _run_sync(sim: SimConfig, env: _Env) -> SimResult:
             if pruned_any:
                 env.fleet.refresh_masks(state, indices)
                 env.fleet.train_rounds(
-                    state, [plans_b[w] if prune_now[w] else None for w in range(W)], lam
+                    state,
+                    [plans_b[w] if prune_now[w] else None for w in range(W)],
+                    lam, pad_steps=pad_b,
                 )
         elif jobs_b:
             for job, trained in zip(jobs_b, env.fleet.train_all(jobs_b, lam)):
@@ -640,18 +674,52 @@ def _run_async(sim: SimConfig, env: _Env) -> SimResult:
     W = sim.num_workers
     lam = sim.lam
     method = sim.method
+    resident = sim.engine == "masked"
     global_params = dict(env.base_params)
-    version = 0
     idx = full_index(env.space)
 
-    # per-worker: fetched params, fetched version, local round counter
-    fetched = [dict(global_params) for _ in range(W)]
-    fetched_ver = [0] * W
-    rounds_done = [0] * W
-    backup = [dict(global_params) for _ in range(W)]        # DC-ASGD w_bak
-    dc_m = {k: np.zeros_like(v) for k, v in global_params.items()}
+    # --- scenario: async methods honour client sampling (a static C-fraction
+    # of the slot pool joins the event loop); dropout/churn stay sync-only.
+    scen = ScenarioEngine(sim.scenario, W) if sim.scenario is not None else None
+    if scen is not None and (
+        scen.cfg.dropout > 0.0
+        or scen.cfg.churn > 0.0
+        or scen.cfg.schedule is not None
+    ):
+        raise ValueError(
+            "async schedulers support scenario client sampling only; dropout, "
+            "churn and per-round schedules apply to the synchronous methods "
+            "(the event queue already models client pacing)"
+        )
+    participants = (
+        scen.static_participants() if scen is not None else np.arange(W)
+    )
+    n_part = len(participants)
 
-    total_commits = W * sim.rounds
+    # staleness bookkeeping over the slot space (stacked ints), plus each
+    # worker's fetched global snapshot.  AsyncServer.commit always rebinds a
+    # fresh params dict, so snapshots are safe zero-copy references on the
+    # resident path; the per-worker path keeps the legacy shallow copies.
+    server = AsyncServer(
+        method, global_params, W, cohort_size=n_part,
+        fedasync_a=sim.fedasync_a, lr=sim.lr,
+        dcasgd_lambda=sim.dcasgd_lambda, dcasgd_m=sim.dcasgd_m,
+    )
+    fetched = [dict(global_params) for _ in range(W)]
+    fetched_ver = np.zeros(W, np.int64)
+    rounds_done = np.zeros(W, np.int64)
+
+    state = None
+    pad_steps = None
+    if resident:
+        shard_x, shard_y = zip(*(env.shard_xy(w) for w in range(W)))
+        state = env.fleet.init_state(env.base_params, list(shard_x), list(shard_y))
+        pad_steps = max(
+            plan_steps(len(env.shards[w]), sim.batch_size, sim.local_epochs)
+            for w in participants
+        )
+
+    total_commits = n_part * sim.rounds
     commits = 0
     clock = 0.0
     comm_bytes = 0.0
@@ -660,11 +728,13 @@ def _run_async(sim: SimConfig, env: _Env) -> SimResult:
     rt_base = roundtrip_total()
 
     def schedule(w, now):
-        phi = env.phi(w, fetched[w])
+        # channel-model time; resident path derives it from the index alone
+        # (identical shapes, identical jitter draw -> identical schedules)
+        phi = env.phi_from_index(w, idx) if resident else env.phi(w, fetched[w])
         heapq.heappush(heap, (now + phi, w))
 
-    for w in range(W):
-        schedule(w, 0.0)
+    for w in participants:
+        schedule(int(w), 0.0)
 
     blocked: List[int] = []
     window = sim.async_window
@@ -678,63 +748,80 @@ def _run_async(sim: SimConfig, env: _Env) -> SimResult:
                and len(batch) < total_commits - commits
                and heap[0][0] <= batch[0][0] + window):
             batch.append(heapq.heappop(heap))
-        jobs = []
-        for _, w in batch:
-            x, y = env.shard_xy(w)
-            jobs.append(FleetJob(
-                worker=w, params=fetched[w], index=idx, x=x, y=y,
-                plan=make_batch_plan(len(x), sim.batch_size, sim.local_epochs, env.rng),
-            ))
-        trained_batch = env.fleet.train_all(jobs, lam)
+        rows = [w for _, w in batch]
+        plans = [
+            make_batch_plan(
+                len(env.shards[w]), sim.batch_size, sim.local_epochs, env.rng
+            )
+            for w in rows
+        ]
+        if resident:
+            # masked scatter in: each batch worker's row becomes the global
+            # snapshot it fetched at its last commit...
+            env.fleet.scatter_global_rows(state, rows, [fetched[w] for w in rows])
+            # ...one bucket-sized sub-stack program trains the whole batch,
+            # and the trained rows come back in ONE stacked host copy.
+            _, pulled = env.fleet.train_rows(
+                state, rows, plans, lam, pad_steps=pad_steps, to_host=True
+            )
+            if pulled is None:
+                # no-step plans (local_epochs <= 0): commit the fetched
+                # params unchanged, matching the per-worker engines
+                trained_batch = [fetched[w] for w in rows]
+            else:
+                trained_batch = [
+                    {k: v[i] for k, v in pulled.items()} for i in range(len(rows))
+                ]
+        else:
+            jobs = []
+            for (_, w), plan in zip(batch, plans):
+                x, y = env.shard_xy(w)
+                jobs.append(FleetJob(
+                    worker=w, params=fetched[w], index=idx, x=x, y=y, plan=plan,
+                ))
+            trained_batch = env.fleet.train_all(jobs, lam)
         for (finish, w), trained in zip(batch, trained_batch):
             clock = max(clock, finish)
-            staleness = version - fetched_ver[w]
-            if method == "fedasync_s":
-                a = sim.fedasync_a * (staleness + 1.0) ** -0.5
-                global_params = {
-                    k: (1 - a) * global_params[k] + a * trained[k] for k in global_params
-                }
-            elif method == "ssp_s":
-                delta = {k: trained[k] - fetched[w][k] for k in trained}
-                global_params = {k: global_params[k] + delta[k] / W for k in global_params}
-            elif method == "dcasgd_s":
-                # committed "gradient" = accumulated local update / lr
-                g = {k: (fetched[w][k] - trained[k]) / sim.lr for k in trained}
-                for k in g:
-                    dc_m[k] = sim.dcasgd_m * dc_m[k] + (1 - sim.dcasgd_m) * g[k] * g[k]
-                    lam_t = sim.dcasgd_lambda / np.sqrt(np.mean(dc_m[k]) + 1e-12)
-                    comp = g[k] + lam_t * g[k] * g[k] * (global_params[k] - backup[w][k])
-                    global_params[k] = global_params[k] - sim.lr * comp
-                backup[w] = dict(global_params)
-            version += 1
+            staleness = int(server.version - fetched_ver[w])
+            global_params = server.commit(w, trained, fetched[w], staleness)
+            if not resident:
+                # per-worker path: each commit copies a full param dict
+                # across the host boundary — count it so host_roundtrips is
+                # honest in the baseline (SSP included)
+                tally_roundtrip("async_merge")
             commits += 1
             rounds_done[w] += 1
             comm_bytes += 2.0 * sum(v.size * 4 for v in trained.values())
             # refetch + maybe block (SSP)
             fetched[w] = dict(global_params)
-            fetched_ver[w] = version
-            if method == "ssp_s" and rounds_done[w] >= min(rounds_done) + sim.ssp_threshold:
+            fetched_ver[w] = server.version
+            if method == "ssp_s" and rounds_done[w] >= int(
+                rounds_done[participants].min()
+            ) + sim.ssp_threshold:
                 blocked.append(w)
             elif rounds_done[w] < sim.rounds:
                 schedule(w, clock)
             if method == "ssp_s" and blocked:
+                min_done = int(rounds_done[participants].min())
                 still = []
                 for bw in blocked:
-                    if rounds_done[bw] < min(rounds_done) + sim.ssp_threshold and rounds_done[bw] < sim.rounds:
+                    if rounds_done[bw] < min_done + sim.ssp_threshold and rounds_done[bw] < sim.rounds:
                         fetched[bw] = dict(global_params)
-                        fetched_ver[bw] = version
+                        fetched_ver[bw] = server.version
                         schedule(bw, clock)
                     else:
                         still.append(bw)
                 blocked = [b for b in still if rounds_done[b] < sim.rounds]
-            if commits % W == 0:
+            if commits % n_part == 0:
                 acc_time.append((clock, _accuracy(global_params, sim.cnn, env.task.x_test, env.task.y_test)))
 
     host_roundtrips = roundtrip_total() - rt_base
+    scen_rows = [(0, n_part, 0, 0)] if scen is not None else []
     return _finalize(sim, env, acc_time, [], [], [], [1.0] * W,
                      [dict(global_params) for _ in range(W)], comm_bytes, 0.0, clock,
                      global_params=dict(global_params),
-                     host_roundtrips=host_roundtrips)
+                     host_roundtrips=host_roundtrips,
+                     scenario_rounds=scen_rows)
 
 
 def _finalize(sim, env, acc_time, het_traj, sim_traj, upd_times, retentions,
@@ -767,6 +854,7 @@ def _finalize(sim, env, acc_time, het_traj, sim_traj, upd_times, retentions,
         batched_calls=env.fleet.batched_calls,
         host_roundtrips=host_roundtrips,
         scenario_rounds=scenario_rounds or [],
+        bucket_sizes=sorted(env.fleet.buckets_used),
         global_params={k: np.asarray(v) for k, v in global_params.items()}
         if global_params is not None else None,
     )
@@ -778,12 +866,6 @@ def run_simulation(sim: SimConfig) -> SimResult:
     if sim.method in ("adaptcl", "fedavg", "fedavg_s"):
         result = _run_sync(sim, env)
     elif sim.method in ("fedasync_s", "ssp_s", "dcasgd_s"):
-        if sim.scenario is not None:
-            raise ValueError(
-                "scenarios (sampling/dropout/churn) apply to the synchronous "
-                "methods; the async schedulers model client pacing through "
-                "their event queue"
-            )
         result = _run_async(sim, env)
     else:
         raise ValueError(f"unknown method {sim.method}")

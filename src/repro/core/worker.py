@@ -40,7 +40,14 @@ from repro.optim.optimizers import apply_updates, momentum
 
 from .masks import GlobalIndex, prune_to_budget
 
-__all__ = ["LocalTrainer", "make_batch_plan", "reslice_subparams", "local_unit_stats"]
+__all__ = [
+    "LocalTrainer",
+    "make_batch_plan",
+    "plan_steps",
+    "stack_batch_plans",
+    "reslice_subparams",
+    "local_unit_stats",
+]
 
 Params = Dict[str, np.ndarray]
 
@@ -72,6 +79,54 @@ def make_batch_plan(
             sels.append(sel.astype(np.int64))
             done += batch_size
     return np.stack(sels)
+
+
+def plan_steps(n: int, batch_size: int, epochs: float) -> int:
+    """Number of steps ``make_batch_plan(n, batch_size, epochs, ...)`` draws,
+    without consuming RNG state.
+
+    The fleet engine uses this to pick a *constant* step pad for a whole run
+    phase (the max over every worker slot), so gathered sub-stacks keep one
+    plan shape no matter which subset participates — the step dimension never
+    forces a recompile."""
+    if epochs <= 0 or n <= 0:
+        return 0
+    total = max(1, int(round(epochs * n)))
+    return -(-total // batch_size)
+
+
+def stack_batch_plans(
+    plans: Sequence[Optional[np.ndarray]],
+    num_rows: Optional[int] = None,
+    num_steps: Optional[int] = None,
+):
+    """Pad per-row batch plans into ``[R, S, batch]`` + a ``[R, S]`` validity
+    mask (``None``/empty plan = fully invalid row).
+
+    ``num_rows``/``num_steps`` pad the row and step dimensions beyond the
+    given plans (padding rows/steps are invalid, so the resident trainer
+    compute-and-discards them) — this is how gathered sub-stacks are bucketed
+    to a small set of device shapes.  Returns ``None`` when no row has a real
+    step and no explicit padding was requested."""
+    steps = [0 if p is None else p.shape[0] for p in plans]
+    S = max(steps) if steps else 0
+    if num_steps is not None:
+        S = max(S, num_steps)
+    if S == 0:
+        return None
+    R = len(plans)
+    if num_rows is not None:
+        R = max(R, num_rows)
+    batch = next(
+        (p.shape[1] for p in plans if p is not None and p.shape[0] > 0), 1
+    )
+    stack = np.zeros((R, S, batch), np.int64)
+    valid = np.zeros((R, S), np.float32)
+    for w, p in enumerate(plans):
+        if steps[w]:
+            stack[w, : steps[w]] = p
+            valid[w, : steps[w]] = 1.0
+    return stack, valid
 
 
 def reslice_subparams(

@@ -1,0 +1,241 @@
+"""Async resident schedulers: the PR-3 engine-equivalence harness.
+
+Pins three contracts:
+
+1. **Scheduler equivalence** — the resident (masked) async path must match
+   the per-worker reference for every scheduler (``fedasync_s`` / ``ssp_s``
+   / ``dcasgd_s``): identical virtual clocks (the event queue, channel model
+   and RNG streams are shared), final params within 1e-3, and ZERO
+   extract/embed/merge host round-trips — while the per-worker baseline now
+   honestly tallies one ``async_merge`` per commit.
+2. **Staleness-weighting goldens** — the polynomial fedasync weights, the
+   SSP delta rule and the DC-ASGD compensation are pinned against literal
+   expected values over scripted commit schedules, so the stacked rewrite
+   (or any future one) cannot silently change the merge semantics.
+3. **Participation-sized compute** — sampled scenarios and async window
+   batches gather only the active rows into power-of-two-bucketed
+   sub-stacks; recompiles stay bounded by the number of bucket sizes
+   actually launched (``SimResult.bucket_sizes``).
+"""
+import numpy as np
+import pytest
+
+from repro.core.aggregation import AsyncServer, fedasync_weight
+from repro.core.fleet import bucket_rows
+from repro.core.scenario import RoundEvents, ScenarioConfig
+from repro.core.simulation import SimConfig, run_simulation
+from repro.core.timing import HeterogeneityConfig
+from repro.models.cnn import vgg_config
+
+TINY = vgg_config("vgg_tiny_async", [8, "M", 16], num_classes=4, image_size=8)
+ASYNC_METHODS = ("fedasync_s", "ssp_s", "dcasgd_s")
+
+
+def _cfg(engine, method="fedasync_s", **kw):
+    W = kw.pop("num_workers", 4)
+    base = dict(
+        method=method,
+        engine=engine,
+        rounds=2,
+        num_workers=W,
+        cnn=TINY,
+        het=HeterogeneityConfig(num_workers=W, sigma=3.0),
+        eval_every=2,
+        seed=5,
+    )
+    base.update(kw)
+    return SimConfig(**base)
+
+
+# ---------------------------------------------------------------------------
+# golden regression: staleness weighting math (quick)
+# ---------------------------------------------------------------------------
+
+def test_fedasync_polynomial_weights_golden():
+    """a = a0 * (s + 1)^-0.5, pinned for a scripted staleness ladder."""
+    expected = {
+        0: 0.5,
+        1: 0.3535533905932738,
+        2: 0.28867513459481287,
+        5: 0.2041241452319315,
+        10: 0.15075567228888181,
+    }
+    for s, want in expected.items():
+        assert fedasync_weight(0.5, s) == pytest.approx(want, abs=1e-12)
+    # a0 scales linearly; staleness 0 commits at full mixing weight
+    assert fedasync_weight(0.8, 0) == pytest.approx(0.8, abs=1e-12)
+
+
+def test_fedasync_scripted_merge_golden():
+    srv = AsyncServer("fedasync_s", {"w": np.array([1.0])}, 4, fedasync_a=0.5)
+    g0 = {"w": np.array([1.0])}
+    srv.commit(0, {"w": np.array([2.0])}, g0, 0)       # a=0.5
+    assert srv.params["w"][0] == pytest.approx(1.5, abs=1e-12)
+    srv.commit(1, {"w": np.array([3.0])}, g0, 3)       # a=0.5*4^-0.5=0.25
+    assert srv.params["w"][0] == pytest.approx(0.75 * 1.5 + 0.25 * 3.0, abs=1e-12)
+    assert srv.params["w"][0] == pytest.approx(1.875, abs=1e-12)
+    assert srv.version == 2
+
+
+def test_ssp_scripted_merge_golden():
+    srv = AsyncServer("ssp_s", {"w": np.array([1.0])}, 4)
+    out = srv.commit(2, {"w": np.array([3.0])}, {"w": np.array([1.0])}, 5)
+    assert out["w"][0] == pytest.approx(1.0 + (3.0 - 1.0) / 4, abs=1e-12)
+    out = srv.commit(0, {"w": np.array([0.5])}, {"w": np.array([1.5])}, 0)
+    assert out["w"][0] == pytest.approx(1.5 - 1.0 / 4, abs=1e-12)
+    # under client sampling, SSP's delta average is over the committing
+    # cohort, not the slot pool
+    srv = AsyncServer("ssp_s", {"w": np.array([1.0])}, 200, cohort_size=2)
+    out = srv.commit(7, {"w": np.array([3.0])}, {"w": np.array([1.0])}, 0)
+    assert out["w"][0] == pytest.approx(2.0, abs=1e-12)
+
+
+def test_dcasgd_compensation_golden():
+    """DC-ASGD-a over a scripted 3-commit schedule (lr=0.1, lambda=2, m=.95):
+    expected globals pinned from the reference per-worker semantics."""
+    g0 = {"w": np.array([1.0, -2.0])}
+    srv = AsyncServer(
+        "dcasgd_s", g0, 2, lr=0.1, dcasgd_lambda=2.0, dcasgd_m=0.95
+    )
+    fetched = {0: dict(srv.params), 1: dict(srv.params)}
+    script = [
+        (0, [0.8, -1.9], [0.8, -1.9]),
+        (1, [1.1, -2.2], [0.98101915, -2.26203830]),
+        (0, [0.7, -1.6], [0.82884827, -1.02296241]),
+    ]
+    for w, trained, want in script:
+        out = srv.commit(w, {"w": np.array(trained)}, fetched[w], 0)
+        np.testing.assert_allclose(out["w"], want, atol=1e-6)
+        fetched[w] = dict(srv.params)
+    # w_bak tracks the post-commit global per worker row
+    np.testing.assert_allclose(srv.backup["w"][0], srv.params["w"], atol=1e-12)
+
+
+def test_async_server_rejects_unknown_method():
+    srv = AsyncServer("fedasync_s", {"w": np.array([1.0])}, 2)
+    srv.method = "nope"
+    with pytest.raises(ValueError):
+        srv.commit(0, {"w": np.array([1.0])}, {"w": np.array([1.0])}, 0)
+
+
+# ---------------------------------------------------------------------------
+# sub-stack buckets (quick)
+# ---------------------------------------------------------------------------
+
+def test_bucket_rows_powers_of_two_capped():
+    assert bucket_rows(1, 10) == 1
+    assert bucket_rows(2, 10) == 2
+    assert bucket_rows(3, 10) == 4
+    assert bucket_rows(5, 10) == 8
+    assert bucket_rows(9, 10) == 10      # capped at the fleet size
+    assert bucket_rows(10, 10) == 10
+    with pytest.raises(ValueError):
+        bucket_rows(0, 4)
+
+
+# ---------------------------------------------------------------------------
+# per-scheduler engine equivalence (simulator level)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.slow
+@pytest.mark.parametrize("method", ASYNC_METHODS)
+def test_resident_async_matches_per_worker(method):
+    rounds = 4 if method == "ssp_s" else 2     # let SSP hit its blocking path
+    seq = run_simulation(_cfg("sequential", method, rounds=rounds))
+    res = run_simulation(_cfg("masked", method, rounds=rounds))
+    # shared event queue + channel model: identical virtual clocks
+    assert res.total_time == pytest.approx(seq.total_time, rel=1e-9)
+    assert res.final_acc == pytest.approx(seq.final_acc, abs=1e-3)
+    assert len(res.acc_time) == len(seq.acc_time)
+    for k in seq.global_params:
+        np.testing.assert_allclose(
+            res.global_params[k], seq.global_params[k], atol=1e-3, err_msg=k
+        )
+    # resident contract: zero host round-trips in the async loop; the
+    # per-worker baseline honestly reports one merge round-trip per commit
+    assert res.host_roundtrips == 0
+    assert seq.host_roundtrips >= rounds * 4
+
+
+@pytest.mark.slow
+def test_resident_windowed_async_matches_per_worker():
+    kw = dict(async_window=30.0, rounds=3, num_workers=6)
+    seq = run_simulation(_cfg("sequential", "fedasync_s", **kw))
+    res = run_simulation(_cfg("masked", "fedasync_s", **kw))
+    assert res.total_time == pytest.approx(seq.total_time, rel=1e-9)
+    for k in seq.global_params:
+        np.testing.assert_allclose(
+            res.global_params[k], seq.global_params[k], atol=1e-3, err_msg=k
+        )
+    assert res.host_roundtrips == 0
+    # window batches land as bucketed sub-stacks; compiles bounded by buckets
+    assert res.recompiles <= len(res.bucket_sizes)
+
+
+# ---------------------------------------------------------------------------
+# participation-sized compute + recompile bounds
+# ---------------------------------------------------------------------------
+
+def test_async_sampling_zero_roundtrips_and_bucket_bound():
+    """C=0.5 async sampling: only the sampled participants enter the event
+    loop, sub-stacks are sized to them, recompiles bounded by buckets."""
+    r = run_simulation(_cfg(
+        "masked", "fedasync_s", rounds=2, num_workers=8,
+        scenario=ScenarioConfig(participation=0.5, seed=2),
+        async_window=30.0,
+    ))
+    assert r.host_roundtrips == 0
+    assert r.recompiles <= len(r.bucket_sizes)
+    assert max(r.bucket_sizes) <= 4          # device compute ~ participants
+    assert r.scenario_rounds == [(0, 4, 0, 0)]
+    assert 0.0 <= r.final_acc <= 1.0
+
+
+def test_resident_async_zero_epoch_plans_commit_fetched_params():
+    """local_epochs=0 draws empty plans everywhere: the resident path must
+    commit the fetched params unchanged (like the per-worker engines), not
+    crash on the absent trained sub-stack."""
+    r = run_simulation(_cfg("masked", "fedasync_s", rounds=1, num_workers=2,
+                            local_epochs=0.0))
+    assert r.host_roundtrips == 0
+    assert 0.0 <= r.final_acc <= 1.0
+
+
+@pytest.mark.slow
+def test_sync_participation_sized_compute_recompile_bound():
+    """Varying sampled cohorts + pruning under the resident sync engine:
+    active rows are gathered into bucketed sub-stacks (FLOPs track
+    participation) and recompiles stay bounded by the bucket count, while
+    the trained model still matches the sequential reference."""
+    W = 8
+
+    def ev(active):
+        a = np.zeros(W, bool)
+        a[list(active)] = True
+        return RoundEvents(
+            active=a, dropped=np.zeros(W, bool), joined=np.zeros(W, bool)
+        )
+
+    sched = [
+        ev([0, 1]),                      # bucket 2
+        ev([2, 3, 4]),                   # bucket 4
+        ev(range(W)),                    # full stack (prune round, PI=2)
+        ev([1, 2, 3, 4, 5]),             # bucket 8
+        ev(range(W)),                    # full again
+        ev([6, 7]),                      # bucket 2 (reused shape)
+    ]
+    kw = dict(
+        method="adaptcl", rounds=len(sched), prune_interval=2, num_workers=W,
+        scenario=ScenarioConfig(schedule=sched),
+    )
+    seq = run_simulation(_cfg("sequential", **kw))
+    res = run_simulation(_cfg("masked", **kw))
+    assert res.host_roundtrips == 0
+    assert set(res.bucket_sizes) <= {2, 4, 8}
+    assert res.recompiles <= len(res.bucket_sizes)
+    assert res.scenario_rounds == seq.scenario_rounds
+    assert res.total_time == pytest.approx(seq.total_time, rel=1e-9)
+    for k in seq.global_params:
+        np.testing.assert_allclose(
+            res.global_params[k], seq.global_params[k], atol=1e-3, err_msg=k
+        )

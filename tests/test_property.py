@@ -10,6 +10,7 @@ pytest.importorskip("hypothesis")
 
 from hypothesis import given, settings, strategies as st
 
+from repro.core.fleet import bucket_rows, gather_stack_rows, scatter_stack_rows
 from repro.core.importance import METHODS, ImportanceContext
 from repro.core.masks import (
     UnitLayer,
@@ -29,6 +30,7 @@ from repro.core.pruned_rate import (
     newton_divided_differences,
     newton_eval,
 )
+from repro.core.scenario import ScenarioConfig, ScenarioEngine
 from repro.core.timing import heterogeneity_closed_form, heterogeneity_from_times
 
 SPACE = UnitSpace(
@@ -104,6 +106,92 @@ def test_heterogeneity_bounds(phis):
 def test_heterogeneity_closed_form_matches_eq6_times(sigma, w):
     phis = [1.0 * (1.0 + (sigma - 1.0) / (w - 1) * (w - i)) for i in range(1, w + 1)]
     assert abs(heterogeneity_from_times(phis) - heterogeneity_closed_form(w, sigma)) < 1e-9
+
+
+@settings(max_examples=30, deadline=None)
+@given(
+    C=st.floats(0.05, 1.0),
+    dropout=st.floats(0.0, 0.95),
+    churn=st.floats(0.0, 0.8),
+    W=st.integers(2, 40),
+    seed=st.integers(0, 12),
+)
+def test_scenario_draw_always_has_a_submitter(C, dropout, churn, W, seed):
+    """For EVERY (C, dropout, churn) draw the straggler timeout leaves at
+    least one submitter, dropouts are a subset of the sampled cohort, and
+    the sampled count respects the floor."""
+    cfg = ScenarioConfig(participation=C, dropout=dropout, churn=churn, seed=seed)
+    eng = ScenarioEngine(cfg, W)
+    for t in range(1, 9):
+        ev = eng.draw(t)
+        assert ev.submitters.any()
+        assert not (ev.dropped & ~ev.active).any()
+        assert ev.active.sum() >= cfg.min_participants
+
+
+@settings(max_examples=30, deadline=None)
+@given(
+    C=st.floats(0.05, 1.0),
+    dropout=st.floats(0.0, 0.95),
+    churn=st.floats(0.0, 0.8),
+    W=st.integers(2, 24),
+    seed=st.integers(0, 12),
+)
+def test_scenario_stream_identical_across_engines(C, dropout, churn, W, seed):
+    """Participation masks are identical under every fleet engine: each
+    engine builds its ScenarioEngine from the same config, and the stream
+    (round draws AND the async static-participant draw) is a pure function
+    of (config, W) on a dedicated RNG — nothing engine-dependent feeds it."""
+    cfg = ScenarioConfig(participation=C, dropout=dropout, churn=churn, seed=seed)
+    a, b = ScenarioEngine(cfg, W), ScenarioEngine(cfg, W)
+    for t in range(1, 7):
+        ea, eb = a.draw(t), b.draw(t)
+        assert np.array_equal(ea.active, eb.active)
+        assert np.array_equal(ea.dropped, eb.dropped)
+        assert np.array_equal(ea.joined, eb.joined)
+    a2, b2 = ScenarioEngine(cfg, W), ScenarioEngine(cfg, W)
+    assert np.array_equal(a2.static_participants(), b2.static_participants())
+
+
+@settings(max_examples=40, deadline=None)
+@given(
+    W=st.integers(1, 12),
+    nsel=st.integers(1, 12),
+    seed=st.integers(0, 20),
+)
+def test_substack_gather_scatter_roundtrip(W, nsel, seed):
+    """The participation sub-stack path is lossless: scatter(gather(rows))
+    restores the stacks exactly, trained rows land only on their slots, and
+    bucket-padding rows (repeats of row 0) never leak back."""
+    import jax.numpy as jnp
+
+    nsel = min(nsel, W)
+    rng = np.random.default_rng(seed)
+    stacks = {
+        "a": jnp.asarray(rng.normal(size=(W, 3, 2)).astype(np.float32)),
+        "b": jnp.asarray(rng.normal(size=(W, 5)).astype(np.float32)),
+    }
+    rows = np.sort(rng.choice(W, size=nsel, replace=False))
+    bucket = bucket_rows(nsel, W)
+    rows_pad = np.concatenate([rows, np.full(bucket - nsel, rows[0], np.int64)])
+    sub = gather_stack_rows(stacks, rows_pad)
+    for k in stacks:
+        assert sub[k].shape == (bucket,) + stacks[k].shape[1:]
+        np.testing.assert_array_equal(np.asarray(sub[k][:nsel]),
+                                      np.asarray(stacks[k])[rows])
+    # identity round-trip
+    same = scatter_stack_rows(stacks, rows, sub)
+    for k in stacks:
+        np.testing.assert_array_equal(np.asarray(same[k]), np.asarray(stacks[k]))
+    # a "trained" sub-stack (padding rows poisoned) lands only on its rows
+    shifted = {k: v + 1.0 for k, v in sub.items()}
+    out = scatter_stack_rows(stacks, rows, shifted)
+    others = np.setdiff1d(np.arange(W), rows)
+    for k in stacks:
+        np.testing.assert_allclose(np.asarray(out[k])[rows],
+                                   np.asarray(stacks[k])[rows] + 1.0, atol=1e-6)
+        np.testing.assert_array_equal(np.asarray(out[k])[others],
+                                      np.asarray(stacks[k])[others])
 
 
 @settings(max_examples=30, deadline=None)

@@ -78,9 +78,17 @@ def test_scenario_config_validation():
         ScenarioEngine(ScenarioConfig(dropout=1.0), 4)
     with pytest.raises(ValueError):
         ScenarioEngine(ScenarioConfig(min_participants=0), 4)
+    # async methods accept client sampling but reject dropout/churn (the
+    # event queue already models pacing; see tests/test_async_resident.py)
     with pytest.raises(ValueError):
         run_simulation(_cfg("masked", method="fedasync_s",
-                            scenario=ScenarioConfig(participation=0.5)))
+                            scenario=ScenarioConfig(dropout=0.5)))
+    with pytest.raises(ValueError):
+        run_simulation(_cfg("masked", method="ssp_s",
+                            scenario=ScenarioConfig(churn=0.2)))
+    with pytest.raises(ValueError):   # scripted schedules are sync-only too
+        run_simulation(_cfg("masked", method="dcasgd_s",
+                            scenario=ScenarioConfig(schedule=[_events([1, 1, 1, 1])])))
 
 
 def test_schedule_rounds_are_normalized():
