@@ -182,17 +182,103 @@ def async_scale(out_path: str = "BENCH_async.json", quick: bool = False) -> None
     print(f"async_scale/json,{out_path},")
 
 
+def retention_sweep(out_path: str = "BENCH_retention.json", quick: bool = False) -> None:
+    """Device-FLOPs-vs-retention bench: compute path x retention grid.
+
+    The paper's speedup claim is that a worker at retention r does ~r of the
+    FLOPs; the dense masked engine can't show it (base-shape programs, masks
+    are multiplies), the ``block_skip`` path must.  Each cell runs a resident
+    adaptcl sim that prunes every worker to the target retention after round
+    1 (index-prefix importance — the relabeled-CIG order that makes retained
+    sets coordinate prefixes), then trains at it; we record walltime, the
+    executed/ideal FLOPs ratio, and the kernel-grid block proxy.  Targets:
+    blocks (and executed FLOPs) decrease monotonically with retention, and
+    retention 0.25 executes < 0.5x the blocks of retention 1.0."""
+    import numpy as np
+
+    from repro.core.simulation import SimConfig, run_simulation
+    from repro.data.synthetic import SyntheticImageTask
+    from repro.models.cnn import vgg_config
+
+    cnn = vgg_config("vgg_ret", [32, "M", 64], num_classes=10, image_size=8)
+    task = SyntheticImageTask(num_classes=10, image_size=8, train_size=64,
+                              test_size=64, seed=0)
+    # rates realizing the target retentions under the index-prefix order
+    targets = {1.0: 0.0, 0.5: 0.5, 0.25: 0.74, 0.125: 0.86}
+    retentions = (1.0, 0.25) if quick else (1.0, 0.5, 0.25, 0.125)
+    W, rounds = 2, 3
+    rows = []
+    print("name,value,derived")
+    for compute in ("dense", "block_skip"):
+        for target in retentions:
+            r = run_simulation(SimConfig(
+                method="adaptcl", engine="masked", compute=compute,
+                compute_blocks=(128, 8, 8), importance="index",
+                rounds=rounds, prune_interval=1, num_workers=W, batch_size=8,
+                local_epochs=1.0, cnn=cnn, task=task, eval_every=rounds,
+                fixed_pruned_rates=[[targets[target]] * W] + [[0.0] * W] * (rounds - 1),
+                seed=3,
+            ))
+            rows.append(dict(
+                compute=compute, retention_target=target,
+                retention_realized=float(np.mean(r.retentions)),
+                walltime_s=r.walltime_s,
+                flops_executed=r.flops_executed, flops_ideal=r.flops_ideal,
+                flops_ratio=r.flops_executed / max(r.flops_ideal, 1e-9),
+                blocks_executed=r.blocks_executed,
+                flops_per_image_final=r.flops_per_image_final,
+                blocks_per_image_final=r.blocks_per_image_final,
+                recompiles=r.recompiles, final_acc=r.final_acc,
+            ))
+            print(
+                f"retention/{compute}/r{target},{r.walltime_s:.2f}s,"
+                f"exec_over_ideal={rows[-1]['flops_ratio']:.3f};"
+                f"blocks_final={r.blocks_per_image_final:.0f};acc={r.final_acc:.3f}"
+            )
+    # checks run on the steady-state per-image cost at the final sub-models —
+    # warm-up rounds before the prune land in the cumulative ledger instead
+    by = {(row["compute"], row["retention_target"]): row for row in rows}
+    checks = {}
+    bs_rows = [by[("block_skip", t)] for t in retentions]
+    checks["blocks_monotone_decreasing"] = all(
+        a["blocks_per_image_final"] >= b["blocks_per_image_final"]
+        for a, b in zip(bs_rows, bs_rows[1:])
+    )
+    checks["flops_monotone_decreasing"] = all(
+        a["flops_per_image_final"] >= b["flops_per_image_final"]
+        for a, b in zip(bs_rows, bs_rows[1:])
+    )
+    lo = by[("block_skip", 0.25 if 0.25 in retentions else min(retentions))]
+    hi = by[("block_skip", 1.0)]
+    checks["quarter_blocks_over_full"] = (
+        lo["blocks_per_image_final"] / max(hi["blocks_per_image_final"], 1e-9)
+    )
+    checks["quarter_under_half_blocks"] = checks["quarter_blocks_over_full"] < 0.5
+    checks["dense_flops_flat_in_retention"] = (
+        by[("dense", min(retentions))]["flops_per_image_final"]
+        == by[("dense", 1.0)]["flops_per_image_final"]
+    )
+    for k, v in checks.items():
+        print(f"retention/{k},{v},")
+    with open(out_path, "w") as f:
+        json.dump({"rows": rows, "retentions": list(retentions),
+                   "checks": checks}, f, indent=2)
+    print(f"retention/json,{out_path},")
+
+
 def main() -> None:
     ap = argparse.ArgumentParser(
         description=__doc__, formatter_class=argparse.RawDescriptionHelpFormatter
     )
     ap.add_argument(
         "command", nargs="?", default="tables",
-        choices=("tables", "scale", "async_scale"),
+        choices=("tables", "scale", "async_scale", "retention_sweep"),
         help="'tables' (default) = paper-table benches; 'scale' = sync "
              "fleet-scaling grid (W x engine x scenario -> BENCH_scale.json); "
              "'async_scale' = resident async scheduler grid (W x scheduler x "
-             "participation C -> BENCH_async.json)",
+             "participation C -> BENCH_async.json); 'retention_sweep' = "
+             "device FLOPs vs retention, dense vs block_skip "
+             "(-> BENCH_retention.json)",
     )
     ap.add_argument("--only", default=None)
     ap.add_argument("--quick", action="store_true")
@@ -214,6 +300,9 @@ def main() -> None:
         return
     if args.command == "async_scale":
         async_scale(args.out or "BENCH_async.json", quick=args.quick)
+        return
+    if args.command == "retention_sweep":
+        retention_sweep(args.out or "BENCH_retention.json", quick=args.quick)
         return
 
     from benchmarks import tables  # import after BENCH_QUICK is set

@@ -17,6 +17,11 @@ is ~flat in worker count — try ``--workers 200 --engine masked``.
 Async methods accept sampling only (C,0,0): a static C*W cohort joins the
 event loop and the resident engine sizes device compute to it.
 
+``--compute block_skip`` (with ``--engine masked``) dispatches the convs +
+head through the ``kernels/pruned_matmul`` block-skip Pallas kernel, so a
+pruned worker's device FLOPs track its retention (``--compute-blocks``
+sets the tile sizes; shrink them for CPU interpret runs).
+
 ``--methods`` picks the frameworks to compare (first = baseline for the
 speedup line), e.g. the async schedulers on the resident engine:
 
@@ -40,6 +45,17 @@ def main():
     ap.add_argument("--workers", type=int, default=10)
     ap.add_argument("--engine", default="sequential",
                     choices=("sequential", "bucketed", "masked"))
+    ap.add_argument("--compute", default="dense",
+                    choices=("dense", "block_skip"),
+                    help="masked engine's device compute path: block_skip "
+                         "dispatches convs + head through the "
+                         "kernels/pruned_matmul block-skip Pallas kernel so "
+                         "device FLOPs track retention (requires --engine "
+                         "masked; interpret-mode off-TPU)")
+    ap.add_argument("--compute-blocks", default="128,128,128",
+                    metavar="BM,BN,BK",
+                    help="pruned_matmul tile sizes; shrink (e.g. 128,8,8) "
+                         "for fine-grained CPU/interpret runs")
     ap.add_argument("--scenario", default=None, metavar="C,DROPOUT,CHURN",
                     help="client sampling fraction, dropout prob, churn prob")
     ap.add_argument("--methods", default="fedavg_s,adaptcl",
@@ -67,6 +83,8 @@ def main():
             noniid_s=args.noniid,
             het=HeterogeneityConfig(num_workers=args.workers, sigma=args.sigma),
             engine=args.engine,
+            compute=args.compute,
+            compute_blocks=tuple(int(v) for v in args.compute_blocks.split(",")),
             scenario=scenario,
             async_window=args.async_window,
         )
@@ -76,6 +94,10 @@ def main():
               f"param_red={r.param_reduction:.1%} "
               f"(host: {r.walltime_s:.1f}s, {r.recompiles} compiles, "
               f"{r.host_roundtrips} roundtrips, engine={r.engine})")
+        if args.compute == "block_skip":
+            print(f"            compute=block_skip: "
+                  f"flops_exec/ideal={r.flops_executed / max(r.flops_ideal, 1e-9):.3f} "
+                  f"blocks/img(final)={r.blocks_per_image_final:.0f}")
         if method == "adaptcl":
             print(f"            retentions={[round(g, 2) for g in r.retentions]}")
             hs = [f"{h:.2f}" for _, h in r.het_traj[:: max(1, args.rounds // 8)]]

@@ -25,6 +25,15 @@ pruning diversity.  This module batches the fleet:
   vanish on pruned coordinates, so retained coordinates see the same
   function as the physically-small model.
 
+The masked engine's *device* cost is set by the trainer's ``compute`` path:
+``"dense"`` executes base-shape convs (masks are 0/1 multiplies, so pruning
+saves recompiles and round-trips but zero FLOPs), while ``"block_skip"``
+dispatches the convs + head through ``kernels.pruned_matmul`` — the vmapped
+resident program then carries per-row block-keep flags, one fleet program
+serves heterogeneous retentions, and fully-pruned mask blocks execute zero
+MXU passes (device FLOPs finally track retention, the paper's speedup
+story).  ``FleetEngine.compute`` surfaces which path is live.
+
 On top of the masked idiom sits the **resident fleet state** (``FleetState``):
 stacked ``[W, ...]`` base-shape param / mask / momentum arrays that live on
 device across rounds.  Sub-model identity is carried ONLY by the 0/1 mask
@@ -160,6 +169,12 @@ class FleetEngine:
         self.batched_calls = 0    # device programs launched for batched phases
         self.buckets_used: set = set()   # sub-stack row counts launched
         self._mask_cache: Dict[tuple, Params] = {}
+
+    @property
+    def compute(self) -> str:
+        """Device compute path of the masked/resident programs this engine
+        launches ("dense" | "block_skip") — owned by the trainer."""
+        return self.trainer.compute
 
     # ------------------------------------------------------------------
     def train_all(self, jobs: Sequence[FleetJob], lam: float = 0.0) -> List[Params]:

@@ -83,6 +83,7 @@ from repro.models.cnn import (
     CNNConfig,
     build_unit_space,
     cnn_apply,
+    cnn_block_compute,
     cnn_flops,
     cnn_flops_from_shapes,
     extract_bn_scales,
@@ -149,6 +150,14 @@ class SimConfig:
     dgc_sparsity: float = 0.0
     # local-training engine: "sequential" | "bucketed" | "masked" (core.fleet)
     engine: str = "sequential"
+    # device compute path of the masked engine's programs: "dense" executes
+    # base-shape convs under 0/1 masks (full FLOPs), "block_skip" dispatches
+    # convs + head through kernels.pruned_matmul so device FLOPs track
+    # retention (requires engine="masked"; interpret-mode fallback off-TPU)
+    compute: str = "dense"
+    # pruned_matmul tile sizes (block_m, block_n, block_k); 128-aligned on
+    # TPU, shrink for fine-grained CPU/interpret runs and small models
+    compute_blocks: Tuple[int, int, int] = (128, 128, 128)
     # client sampling / dropout / churn (sync methods only, core.scenario)
     scenario: Optional[ScenarioConfig] = None
     # async engines: event-queue commits landing within this virtual window
@@ -188,6 +197,26 @@ class SimResult:
     # sub-stack row buckets launched by the resident engine (sorted); the
     # recompile count is bounded by len(bucket_sizes) x phases
     bucket_sizes: List[int] = dataclasses.field(default_factory=list)
+    # device compute path ("dense" | "block_skip") + the training-FLOPs
+    # ledger: flops_ideal is the paper's per-sub-model cost
+    # (cnn_flops_from_shapes of each worker's reconfigured shapes x images
+    # trained), flops_executed the per-worker dispatched cost — equal to
+    # ideal for physically reconfigured engines, the full base-shape cost
+    # for masked+dense, and the block-granular proxy
+    # (models.cnn.cnn_block_compute) for masked+block_skip.  blocks_executed
+    # counts kernel grid cells whose MXU pass runs (the interpret-mode proxy
+    # benches assert on).  The ledger counts each worker's SCHEDULED plan
+    # steps x batch images; the resident engine's compute-and-discard padding
+    # (step pads to the per-phase max, pow2 bucket-row pads) is excluded —
+    # identical across compute paths, so ratios between them are unaffected.
+    compute: str = "dense"
+    flops_executed: float = 0.0
+    flops_ideal: float = 0.0
+    blocks_executed: float = 0.0
+    # steady-state per-image cost at the FINAL sub-models (mean over workers)
+    # — what a post-prune training step executes, free of warm-up rounds
+    flops_per_image_final: float = 0.0
+    blocks_per_image_final: float = 0.0
     # final global model (base coordinates) — test/analysis hook
     global_params: Optional[Dict[str, np.ndarray]] = None
 
@@ -205,6 +234,12 @@ class _Env:
 
     def __init__(self, sim: SimConfig):
         self.sim = sim
+        if sim.compute == "block_skip" and sim.engine != "masked":
+            raise ValueError(
+                "compute='block_skip' needs the masked (resident) engine — "
+                "the block-keep flags are derived from the 0/1 mask stacks; "
+                "the reconfigured engines already run physically small models"
+            )
         self.task = sim.task or SyntheticImageTask(
             num_classes=sim.cnn.num_classes, image_size=sim.cnn.image_size,
             train_size=1280, test_size=512, seed=sim.seed,
@@ -219,11 +254,61 @@ class _Env:
         self.full_bytes = payload_bytes(full_index(self.space), self.space)
         self.full_flops = cnn_flops(self.base_params, sim.cnn)
         self.bandwidths = make_bandwidths(sim.het, self.full_bytes, sim.t_train_full)
-        self.trainer = LocalTrainer(sim.cnn, lr=sim.lr)
+        self.trainer = LocalTrainer(
+            sim.cnn, lr=sim.lr,
+            compute=sim.compute, compute_blocks=sim.compute_blocks,
+        )
         self.fleet = FleetEngine(
             self.trainer, self.unit_map, self.base_shapes, engine=sim.engine
         )
         self.rng = np.random.default_rng(sim.seed + 17)
+        # training-FLOPs ledger (SimResult.flops_*): per-image costs are
+        # cached per distinct global index, multiplied by images trained
+        self.flops_executed = 0.0
+        self.flops_ideal = 0.0
+        self.blocks_executed = 0.0
+        self._acct_cache: Dict[tuple, Tuple[float, float, float]] = {}
+
+    def cost_for_index(self, index) -> Tuple[float, float, float]:
+        """(executed flops, ideal flops, executed kernel blocks) per IMAGE at
+        this global index, for the engine/compute path this run dispatches."""
+        key = tuple(
+            (l, tuple(map(int, v))) for l, v in sorted(index.items())
+        )
+        cached = self._acct_cache.get(key)
+        if cached is None:
+            shapes = subparam_shapes(index, self.unit_map, self.base_shapes)
+            ideal = cnn_flops_from_shapes(shapes, self.sim.cnn)
+            if self.sim.compute == "block_skip":
+                masks = {
+                    l.name: np.asarray(
+                        np.isin(np.arange(l.num_units), index[l.name]), np.float32
+                    )
+                    for l in self.space.layers
+                }
+                bc = cnn_block_compute(self.sim.cnn, masks, self.sim.compute_blocks)
+                cached = (bc["flops"], ideal, bc["blocks"])
+            elif self.sim.engine == "masked":
+                # dense masked programs run the base shapes regardless of masks
+                cached = (self.full_flops, ideal, 0.0)
+            else:
+                # physically reconfigured models execute exactly their size
+                cached = (ideal, ideal, 0.0)
+            self._acct_cache[key] = cached
+        return cached
+
+    def account_train(self, index, steps: int):
+        """Record one worker's local-training phase in the FLOPs ledger:
+        ``steps`` plan steps x batch images, costed at this global index
+        (scheduled work only — the resident engine's compute-and-discard
+        step/bucket padding is not attributed to any worker)."""
+        if steps <= 0:
+            return
+        executed, ideal, blocks = self.cost_for_index(index)
+        images = steps * self.sim.batch_size
+        self.flops_executed += images * executed
+        self.flops_ideal += images * ideal
+        self.blocks_executed += images * blocks
 
     def phi(self, worker: int, params, payload_factor: float = 1.0) -> float:
         """Channel-model update time for this worker's current sub-model."""
@@ -457,6 +542,8 @@ def _run_sync(sim: SimConfig, env: _Env) -> SimResult:
             n = len(env.shards[w])
             plans_a[w] = make_batch_plan(n, sim.batch_size, e1, env.rng)
             plans_b[w] = make_batch_plan(n, sim.batch_size, e2, env.rng)
+        for w in active_ws:   # FLOPs ledger: phase A runs at the pre-prune index
+            env.account_train(indices[w], plans_a[w].shape[0])
 
         # --- phase A: every participating worker's pre-prune local training,
         # ONE fleet call.  Resident path: broadcast-back is a masked scatter
@@ -516,6 +603,9 @@ def _run_sync(sim: SimConfig, env: _Env) -> SimResult:
         elif jobs_b:
             for job, trained in zip(jobs_b, env.fleet.train_all(jobs_b, lam)):
                 worker_params[job.worker] = trained
+        for w in active_ws:   # FLOPs ledger: phase B runs at the pruned index
+            if prune_now[w]:
+                env.account_train(indices[w], plans_b[w].shape[0])
 
         # --- submission boundary: channel model + (optional) DGC delta
         # compression + aggregation inputs.
@@ -633,12 +723,15 @@ def _run_sync(sim: SimConfig, env: _Env) -> SimResult:
             acc_time.append((clock, _accuracy(global_params, sim.cnn, env.task.x_test, env.task.y_test)))
 
     host_roundtrips = roundtrip_total() - rt_base
+    final_costs = [env.cost_for_index(indices[w]) for w in range(W)]
     return _finalize(sim, env, acc_time, het_traj, sim_traj, upd_times,
                      [retention(indices[w], env.space) for w in range(W)],
                      [extract_subparams(global_params, indices[w], env.unit_map) for w in range(W)],
                      comm_bytes, server_overhead, clock,
                      global_params=global_params, host_roundtrips=host_roundtrips,
-                     scenario_rounds=scen_rows)
+                     scenario_rounds=scen_rows,
+                     flops_per_image_final=float(np.mean([c[0] for c in final_costs])),
+                     blocks_per_image_final=float(np.mean([c[2] for c in final_costs])))
 
 
 def _scores_for(sim: SimConfig, env: _Env, worker, prune_round, params_w, index_w,
@@ -755,6 +848,8 @@ def _run_async(sim: SimConfig, env: _Env) -> SimResult:
             )
             for w in rows
         ]
+        for plan in plans:   # async workers all train at the shared full index
+            env.account_train(idx, plan.shape[0])
         if resident:
             # masked scatter in: each batch worker's row becomes the global
             # snapshot it fetched at its last commit...
@@ -817,17 +912,21 @@ def _run_async(sim: SimConfig, env: _Env) -> SimResult:
 
     host_roundtrips = roundtrip_total() - rt_base
     scen_rows = [(0, n_part, 0, 0)] if scen is not None else []
+    final_cost = env.cost_for_index(idx)
     return _finalize(sim, env, acc_time, [], [], [], [1.0] * W,
                      [dict(global_params) for _ in range(W)], comm_bytes, 0.0, clock,
                      global_params=dict(global_params),
                      host_roundtrips=host_roundtrips,
-                     scenario_rounds=scen_rows)
+                     scenario_rounds=scen_rows,
+                     flops_per_image_final=final_cost[0],
+                     blocks_per_image_final=final_cost[2])
 
 
 def _finalize(sim, env, acc_time, het_traj, sim_traj, upd_times, retentions,
               worker_params, comm_bytes, server_overhead, clock,
               global_params=None, host_roundtrips=0,
-              scenario_rounds=None) -> SimResult:
+              scenario_rounds=None, flops_per_image_final=0.0,
+              blocks_per_image_final=0.0) -> SimResult:
     accs = np.array([a for _, a in acc_time])
     times = np.array([t for t, _ in acc_time])
     best = int(np.argmax(accs))
@@ -855,6 +954,12 @@ def _finalize(sim, env, acc_time, het_traj, sim_traj, upd_times, retentions,
         host_roundtrips=host_roundtrips,
         scenario_rounds=scenario_rounds or [],
         bucket_sizes=sorted(env.fleet.buckets_used),
+        compute=sim.compute,
+        flops_executed=env.flops_executed,
+        flops_ideal=env.flops_ideal,
+        blocks_executed=env.blocks_executed,
+        flops_per_image_final=flops_per_image_final,
+        blocks_per_image_final=blocks_per_image_final,
         global_params={k: np.asarray(v) for k, v in global_params.items()}
         if global_params is not None else None,
     )

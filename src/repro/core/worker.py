@@ -34,7 +34,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.models.cnn import CNNConfig, cnn_apply
+from repro.models.cnn import CNNConfig, cnn_apply, prunable_layer_names
 from repro.optim.group_lasso import group_lasso_penalty, group_size_sqrt
 from repro.optim.optimizers import apply_updates, momentum
 
@@ -146,14 +146,60 @@ def reslice_subparams(
 
 
 class LocalTrainer:
-    """Minibatch SGD(+momentum) with optional group-lasso sparse training."""
+    """Minibatch SGD(+momentum) with optional group-lasso sparse training.
 
-    def __init__(self, cnn_cfg: CNNConfig, lr: float = 0.05, beta: float = 0.9):
+    ``compute`` selects the masked paths' device dispatch: ``"dense"`` runs
+    base-shape ``lax.conv`` programs (masks as 0/1 multiplies — full FLOPs),
+    ``"block_skip"`` lowers the convs + head onto the ``kernels.pruned_matmul``
+    block-skip kernel with per-worker unit masks (derived from each worker's
+    ``bn_g`` mask rows), so a pruned worker's device FLOPs track its
+    retention.  Only the masked/resident paths honour it — the unmasked
+    engines run physically reconfigured models, which are already sized.
+    ``interpret=None`` auto-selects per backend (Python interpreter off-TPU).
+    """
+
+    def __init__(
+        self,
+        cnn_cfg: CNNConfig,
+        lr: float = 0.05,
+        beta: float = 0.9,
+        compute: str = "dense",
+        compute_blocks: Tuple[int, int, int] = (128, 128, 128),
+        interpret: Optional[bool] = None,
+    ):
+        if compute not in ("dense", "block_skip"):
+            raise ValueError(f"unknown compute path {compute!r}")
         self.cfg = cnn_cfg
         self.lr = lr
         self.beta = beta
+        self.compute = compute
+        self.compute_blocks = tuple(compute_blocks)
+        if interpret is None:
+            from repro.kernels.ops import auto_interpret
+
+            interpret = auto_interpret()
+        self.compute_interpret = bool(interpret)
+        self._prunable = prunable_layer_names(cnn_cfg)
         self._step_cache: Dict = {}
         self.compile_count = 0  # reconfigure-induced recompiles (overhead bench)
+
+    def _masked_logits(self, qm, mask, xb):
+        """Logits of the masked base-shape model; the block-skip path reads
+        each prunable layer's unit mask off its ``bn_g`` mask row (the
+        [width] 0/1 vector the fleet's ``refresh_masks`` writes)."""
+        if self.compute == "block_skip":
+            um = {n: mask[f"{n}/bn_g"] for n in self._prunable}
+            return cnn_apply(
+                qm, self.cfg, xb, compute="block_skip", unit_masks=um,
+                blocks=self.compute_blocks, interpret=self.compute_interpret,
+            )
+        return cnn_apply(qm, self.cfg, xb)
+
+    def _masked_ce(self, qm, mask, xb, yb):
+        """Mean cross-entropy of the masked model (shared by the masked
+        stacked and resident train closures)."""
+        logp = jax.nn.log_softmax(self._masked_logits(qm, mask, xb))
+        return -jnp.take_along_axis(logp, yb[:, None], axis=1).mean()
 
     def _make_loss(self, unit_map, lam: float):
         cfg = self.cfg
@@ -239,7 +285,7 @@ class LocalTrainer:
             def train_one(p, x, y, plan, mask, gl_size):
                 def loss_fn(q, xb, yb):
                     qm = jax.tree.map(lambda w, m: w * m, q, mask)
-                    l = ce(qm, xb, yb)
+                    l = self._masked_ce(qm, mask, xb, yb)
                     if lam > 0.0:
                         l = l + group_lasso_penalty(qm, frozen_map, lam, size_sqrt=gl_size)
                     return l
@@ -340,9 +386,7 @@ class LocalTrainer:
         def train_one(p, x, y, plan, valid, mask, gl_size):
             def loss_fn(q, xb, yb):
                 qm = jax.tree.map(lambda w, m: w * m, q, mask)
-                logits = cnn_apply(qm, cfg, xb)
-                logp = jax.nn.log_softmax(logits)
-                l = -jnp.take_along_axis(logp, yb[:, None], axis=1).mean()
+                l = self._masked_ce(qm, mask, xb, yb)
                 if lam > 0.0:
                     l = l + group_lasso_penalty(qm, frozen_map, lam, size_sqrt=gl_size)
                 return l

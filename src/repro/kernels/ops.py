@@ -13,7 +13,7 @@ import jax
 import jax.numpy as jnp
 
 from .flash_attention import flash_attention_kernel_call
-from .pruned_matmul import pruned_matmul_kernel_call
+from .pruned_matmul import pruned_matmul as pruned_matmul_ad
 from .rg_lru_scan import rg_lru_scan_kernel_call
 
 __all__ = ["auto_interpret", "pruned_matmul", "flash_attention", "rg_lru_scan"]
@@ -23,11 +23,13 @@ def auto_interpret() -> bool:
     return jax.default_backend() != "tpu"
 
 
-def pruned_matmul(x, w, in_mask, out_mask, **kw):
+def pruned_matmul(x, w, in_mask, out_mask, row_mask=None, **kw):
     """AdaptCL masked-training matmul: y = (x * in_mask) @ w * out_mask with
-    whole pruned K-blocks skipped. Masks are 0/1 vectors in base coordinates."""
+    whole pruned M/K/N blocks skipped.  Masks are 0/1 vectors in base
+    coordinates; differentiable (custom VJP reuses the block-skip kernel),
+    and any shape is accepted (padded to block multiples internally)."""
     kw.setdefault("interpret", auto_interpret())
-    return pruned_matmul_kernel_call(x, w, in_mask, out_mask, **kw)
+    return pruned_matmul_ad(x, w, in_mask, out_mask, row_mask, **kw)
 
 
 def flash_attention(q, k, v, *, causal=True, window: Optional[int] = None,

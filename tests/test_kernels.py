@@ -39,6 +39,37 @@ def test_pruned_matmul(dtype, M, K, N, keep_k, keep_n):
         assert np.abs(np.asarray(y[:, keep_n:], np.float32)).max() == 0.0
 
 
+@pytest.mark.parametrize("M,K,N", [(200, 300, 130), (1, 1, 1), (100, 128, 129)])
+def test_pruned_matmul_ragged_shapes(M, K, N):
+    """Non-128-multiple dims are padded to block multiples and sliced back;
+    padded mask entries are zero, so the padding blocks are skipped."""
+    rng = np.random.default_rng(M)
+    x = jnp.asarray(rng.normal(size=(M, K)), jnp.float32)
+    w = jnp.asarray(rng.normal(size=(K, N)) * 0.05, jnp.float32)
+    in_mask = (rng.random(K) < 0.7).astype(np.float32)
+    out_mask = (rng.random(N) < 0.7).astype(np.float32)
+    in_mask[0] = out_mask[0] = 1.0
+    y = ops.pruned_matmul(x, w, jnp.asarray(in_mask), jnp.asarray(out_mask))
+    dense = (x * in_mask[None, :]) @ w * out_mask[None, :]
+    assert y.shape == (M, N)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(dense), atol=1e-4, rtol=1e-4)
+
+
+def test_pruned_matmul_row_mask():
+    """The optional row mask zeroes (and block-skips) masked M rows."""
+    rng = np.random.default_rng(5)
+    M, K, N = 160, 128, 128
+    x = jnp.asarray(rng.normal(size=(M, K)), jnp.float32)
+    w = jnp.asarray(rng.normal(size=(K, N)) * 0.05, jnp.float32)
+    ones_k, ones_n = jnp.ones(K, jnp.float32), jnp.ones(N, jnp.float32)
+    row = np.zeros(M, np.float32)
+    row[:50] = 1.0
+    y = ops.pruned_matmul(x, w, ones_k, ones_n, jnp.asarray(row))
+    dense = (x @ w) * row[:, None]
+    np.testing.assert_allclose(np.asarray(y), np.asarray(dense), atol=1e-4, rtol=1e-4)
+    assert np.abs(np.asarray(y)[50:]).max() == 0.0
+
+
 def test_pruned_matmul_random_mask():
     """Non-prefix (scattered) retained sets are also exact."""
     rng = np.random.default_rng(0)
