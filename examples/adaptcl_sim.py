@@ -44,7 +44,11 @@ def main():
     ap.add_argument("--noniid", type=float, default=80.0)
     ap.add_argument("--workers", type=int, default=10)
     ap.add_argument("--engine", default="sequential",
-                    choices=("sequential", "bucketed", "masked"))
+                    choices=("sequential", "bucketed", "masked", "fused"))
+    ap.add_argument("--round-fusion", type=int, default=0,
+                    help="fused engine: max rounds per on-device lax.scan "
+                         "chunk (0 = fuse up to the next prune-rate-learning "
+                         "event)")
     ap.add_argument("--compute", default="dense",
                     choices=("dense", "block_skip"),
                     help="masked engine's device compute path: block_skip "
@@ -83,6 +87,7 @@ def main():
             noniid_s=args.noniid,
             het=HeterogeneityConfig(num_workers=args.workers, sigma=args.sigma),
             engine=args.engine,
+            round_fusion=args.round_fusion,
             compute=args.compute,
             compute_blocks=tuple(int(v) for v in args.compute_blocks.split(",")),
             scenario=scenario,

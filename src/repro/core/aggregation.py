@@ -46,6 +46,7 @@ from __future__ import annotations
 
 from typing import Dict, List, Mapping, Optional, Sequence, Tuple
 
+import jax.numpy as jnp
 import numpy as np
 
 from .masks import GlobalIndex, embed_units
@@ -60,6 +61,8 @@ __all__ = [
     "aggregate_by_unit",
     "aggregate_by_worker_stacked",
     "aggregate_by_unit_stacked",
+    "aggregate_by_worker_stacked_jnp",
+    "aggregate_by_unit_stacked_jnp",
     "fedasync_weight",
     "AsyncServer",
     "ROUNDTRIP_COUNTS",
@@ -222,6 +225,33 @@ def aggregate_by_worker_stacked(
     for path, stack in param_stacks.items():
         arr = np.asarray(stack, dtype=np.float64)
         out[path] = np.tensordot(weights, arr, axes=1)
+    return out
+
+
+def aggregate_by_worker_stacked_jnp(
+    param_stacks: Mapping[str, jnp.ndarray],   # {path: [W, ...]} masked stacks
+    weights: jnp.ndarray,                      # [W]; 0 for non-submitters
+) -> Dict[str, jnp.ndarray]:
+    """Pure-``jnp`` by-worker aggregation — the fused round engine's in-scan
+    server step.  Numerics: float32 on device vs the host path's float64
+    accumulate-then-cast; the engine-equivalence tests bound the drift."""
+    return {
+        path: jnp.tensordot(weights, stack, axes=1)
+        for path, stack in param_stacks.items()
+    }
+
+
+def aggregate_by_unit_stacked_jnp(
+    param_stacks: Mapping[str, jnp.ndarray],
+    mask_stacks: Mapping[str, jnp.ndarray],
+    submitters: jnp.ndarray,                   # [W] float 0/1
+) -> Dict[str, jnp.ndarray]:
+    """Pure-``jnp`` per-coordinate 1/w' masked mean (fused by-unit path)."""
+    out: Dict[str, jnp.ndarray] = {}
+    for path, stack in param_stacks.items():
+        num = jnp.tensordot(submitters, stack, axes=1)
+        den = jnp.tensordot(submitters, mask_stacks[path], axes=1)
+        out[path] = num / jnp.maximum(den, 1.0)
     return out
 
 

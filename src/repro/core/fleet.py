@@ -88,7 +88,7 @@ from .aggregation import (
     extract_subparams,
     subparam_shapes,
 )
-from .masks import GlobalIndex
+from .masks import GlobalIndex, UnitFlat
 from .worker import LocalTrainer, Params, stack_batch_plans
 
 __all__ = [
@@ -99,9 +99,64 @@ __all__ = [
     "bucket_rows",
     "gather_stack_rows",
     "scatter_stack_rows",
+    "masks_from_presence",
+    "gl_factors_from_counts",
 ]
 
-ENGINES = ("sequential", "bucketed", "masked")
+# "fused" shares the masked engine's resident representation; its round loop
+# additionally runs as chunked on-device lax.scan programs (core.fused)
+ENGINES = ("sequential", "bucketed", "masked", "fused")
+
+
+def masks_from_presence(
+    presence: jnp.ndarray,                     # [W, U] flat 0/1
+    flat: UnitFlat,
+    unit_map: UnitMap,
+    base_shapes: Mapping[str, tuple],
+) -> Dict[str, jnp.ndarray]:
+    """Device rebuild of the ``[W, ...]`` 0/1 mask stacks from a flat
+    presence matrix — the in-scan analogue of ``FleetEngine.refresh_masks``
+    (same product-over-governed-axes construction, pure ``jnp``)."""
+    W = presence.shape[0]
+    rows = {
+        name: presence[:, flat.offsets[l] : flat.offsets[l] + flat.sizes[l]]
+        for l, name in enumerate(flat.names)
+    }
+    masks: Dict[str, jnp.ndarray] = {}
+    for path, shape in base_shapes.items():
+        m = jnp.ones((W,) + tuple(shape), jnp.float32)
+        for lname, axis in unit_map.get(path, ()):
+            bshape = [W] + [1] * len(shape)
+            bshape[1 + axis] = shape[axis]
+            m = m * rows[lname].reshape(bshape)
+        masks[path] = m
+    return masks
+
+
+def gl_factors_from_counts(
+    counts: Mapping[str, jnp.ndarray],         # {lname: [W] retained counts}
+    unit_map: UnitMap,
+    base_shapes: Mapping[str, tuple],
+) -> Dict[str, jnp.ndarray]:
+    """Device analogue of ``group_size_sqrt_from_shapes``: per-worker
+    sqrt-group-size factors from retained-unit counts alone.  A path's
+    reconfigured numel is its static numel with every governed axis rescaled
+    by ``count/base``; a unit layer's group size is the sum over the paths it
+    governs of ``numel / count``."""
+    numel: Dict[str, jnp.ndarray] = {}
+    for path, shape in base_shapes.items():
+        val = jnp.asarray(float(np.prod(shape)), jnp.float32)
+        for lname, axis in unit_map.get(path, ()):
+            val = val / float(shape[axis]) * counts[lname]
+        numel[path] = val
+    sizes: Dict[str, jnp.ndarray] = {}
+    for path, entries in unit_map.items():
+        if path not in base_shapes:
+            continue
+        for lname, axis in entries:
+            contrib = numel[path] / jnp.maximum(counts[lname], 1.0)
+            sizes[lname] = sizes.get(lname, 0.0) + contrib
+    return {lname: jnp.sqrt(v) for lname, v in sizes.items()}
 
 
 def bucket_rows(n: int, cap: int) -> int:
@@ -338,6 +393,11 @@ class FleetEngine:
                 m = m * presence[lname].reshape(bshape)
             state.masks[path] = jnp.asarray(m)
             state.params[path] = state.params[path] * state.masks[path]
+            if state.momentum is not None:
+                # cross-round momentum rows are masked like the params, so a
+                # pruned unit's velocity dies with it (matching the fused
+                # engine's in-scan prune)
+                state.momentum[path] = state.momentum[path] * state.masks[path]
         for w in range(W):
             shapes = subparam_shapes(indices[w], self.unit_map, self.base_shapes)
             for lname, s in group_size_sqrt_from_shapes(shapes, self.unit_map).items():
@@ -390,12 +450,18 @@ class FleetEngine:
         stack, valid = stacked
         return jnp.asarray(stack), jnp.asarray(valid)
 
+    def init_momentum(self, state: "FleetState"):
+        """Zero the momentum stack for the cross-round resident-momentum
+        mode (``SimConfig.resident_momentum``)."""
+        state.momentum = {k: jnp.zeros_like(v) for k, v in state.params.items()}
+
     def train_rounds(
         self,
         state: "FleetState",
         plans: Sequence[Optional[np.ndarray]],
         lam: float = 0.0,
         pad_steps: Optional[int] = None,
+        carry_momentum: bool = False,
     ) -> Optional[np.ndarray]:
         """One resident device program for a whole round phase.
 
@@ -404,7 +470,10 @@ class FleetEngine:
         a bucket-sized sub-stack first (``train_rows``), so device FLOPs
         track participation.  Returns per-worker mean losses aligned to the
         full slot space (idle rows report 0), or ``None`` if no worker had
-        work this phase."""
+        work this phase.  ``carry_momentum`` feeds ``state.momentum`` into
+        the optimizer and keeps the trained stack as the next carry (the
+        cross-round resident-momentum mode) instead of the default per-phase
+        zero restart."""
         W = state.num_workers
         rows = [w for w, p in enumerate(plans) if p is not None and p.shape[0] > 0]
         if not rows:
@@ -416,12 +485,14 @@ class FleetEngine:
             state.params, state.momentum, losses = self.trainer.train_resident(
                 state.params, state.masks, self.unit_map,
                 state.xs, state.ys, plan_stack, valid, lam, gl,
+                momentum_in=state.momentum if carry_momentum else None,
             )
             self.batched_calls += 1
             self.buckets_used.add(W)
             return np.asarray(losses)
         losses, _ = self.train_rows(
-            state, rows, [plans[w] for w in rows], lam, pad_steps=pad_steps
+            state, rows, [plans[w] for w in rows], lam, pad_steps=pad_steps,
+            carry_momentum=carry_momentum,
         )
         full = np.zeros(W, np.float32)
         full[rows] = losses
@@ -435,6 +506,7 @@ class FleetEngine:
         lam: float = 0.0,
         pad_steps: Optional[int] = None,
         to_host: bool = False,
+        carry_momentum: bool = False,
     ) -> Tuple[np.ndarray, Optional[Dict[str, np.ndarray]]]:
         """Participation-sized resident training: gather ``rows`` into a
         ``[B, ...]`` sub-stack (B = next row bucket), run ONE vmapped scan
@@ -464,14 +536,21 @@ class FleetEngine:
         gl = {
             k: jnp.asarray(np.asarray(v)[rows_pad]) for k, v in state.gl_sizes.items()
         }
-        out, _, losses = self.trainer.train_resident(
+        mom_in = (
+            gather_stack_rows(state.momentum, rows_pad) if carry_momentum else None
+        )
+        out, mom_out, losses = self.trainer.train_resident(
             sub_params, sub_masks, self.unit_map, xs, ys, plan_stack, valid, lam, gl,
+            momentum_in=mom_in,
         )
         self.batched_calls += 1
         self.buckets_used.add(bucket)
         state.params = scatter_stack_rows(state.params, rows, out)
-        # state.momentum (a full-stack observational snapshot, nothing reads
-        # it) is left untouched — momentum restarts per phase regardless
+        if carry_momentum:
+            # cross-round mode: the trained rows' velocity is the next carry
+            state.momentum = scatter_stack_rows(state.momentum, rows, mom_out)
+        # otherwise state.momentum (a full-stack observational snapshot,
+        # nothing reads it) is left untouched — momentum restarts per phase
         trained = (
             {k: np.asarray(v[:B]) for k, v in out.items()} if to_host else None
         )

@@ -1,0 +1,641 @@
+"""Fused round engine: whole synchronous rounds as on-device ``lax.scan`` chunks.
+
+The resident masked engine (``core.fleet.FleetState``) already keeps the
+fleet's ``[W, ...]`` stacks on device, but every round still pays a host
+boundary: a jit dispatch for each train phase, a ``params_host`` pull, NumPy
+float64 aggregation, host importance scoring and ``prune_to_budget``, and a
+``refresh_masks`` rewrite — per round, per fleet.  This module removes that
+boundary: ``SimConfig.engine = "fused"`` expresses the ENTIRE synchronous
+round — masked broadcast-back (``theta_g[None] * M``), vmapped fleet
+training, stacked aggregation, importance scoring, budget pruning, and
+mask-row refresh — in pure ``jnp`` over the resident stacks, and runs chunks
+of rounds as a single ``jax.lax.scan`` device program.  R rounds execute in
+``O(R / round_fusion)`` host dispatches (``SimResult.host_dispatches``)
+instead of ``O(R)``.
+
+**Chunk boundaries.**  Newton pruned-rate learning (``core.pruned_rate``,
+scalar host math over per-worker histories) stays on host — it is the
+natural fusion boundary: chunks span the rounds BETWEEN prune-rate-learning
+events (every ``prune_interval`` rounds for ``adaptcl``), capped at
+``SimConfig.round_fusion`` when set.  Churn rounds also cut chunks (a slot
+replacement swaps data shards and resets host bookkeeping); sampling and
+dropout are pure participation masks and fuse freely.
+
+**Engine-identical decisions.**  Everything the host path draws from RNG is
+pre-drawn in the SAME stream order: scenario events come from
+``ScenarioEngine.draw_all`` (events + churn shards, the dedicated scenario
+stream), batch plans and channel-jitter multipliers are drawn per round in
+the lazy loop's exact ``env.rng`` order during chunk pre-compute.  Pruning
+replays host ``prune_to_budget`` exactly: removal ORDERS for the
+data-independent criteria are host-exact integer permutations
+(``masks.prune_order``, float64 scores + ``(score, layer, unit)``
+tie-break), budgets are exact integer thresholds (``prune_budget_units``),
+and the device greedy (``prune_presence_rows``) replays the same walk — so
+given the same scores, the removed unit sets are bit-identical.  The
+seed-derived criteria (``index``/``no_adjacent``/``no_identical``/
+``no_constant``) therefore carry an UNCONDITIONAL bit-identity guarantee;
+``cig_bnscalor``'s frozen scores are |BN gamma| of the trained global at
+the freeze event, which differs across engines at float32-drift scale
+(fused aggregates in f32 on device, the host paths in f64), so a near-tie
+inside that drift could in principle reorder two units — the equivalence
+tests pin index equality on real runs.  Data-dependent criteria
+(``l1``/``taylor``, ``importance.DEVICE_METHODS``) are scored on device in
+float32 with the same caveat.
+
+The host recovers per-round ``GlobalIndex`` values lazily from the scan's
+``[K, W, U]`` presence outputs — ONLY for payload/FLOPs accounting and the
+channel model, after the chunk has already run.  Per-round aggregated
+globals come back as stacked scan outputs, so ``eval_every`` never forces a
+chunk split.
+
+Out of scope (see ROADMAP): fusing the async event-queue schedulers,
+participation-sized sub-stack gathering inside a scan (fused rounds compute
+all W rows with validity masks), DGC delta compression, and the
+``block_skip`` compute path under the scan (interpret-mode Pallas inside
+``lax.scan`` is untested off-TPU).
+"""
+from __future__ import annotations
+
+import time as _time
+from typing import Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.cnn import cnn_flops_from_shapes, extract_bn_scales
+
+from .aggregation import (
+    aggregate_by_unit_stacked_jnp,
+    aggregate_by_worker_stacked_jnp,
+    extract_subparams,
+    roundtrip_total,
+    subparam_shapes,
+)
+from .fleet import gl_factors_from_counts, masks_from_presence
+from .importance import (
+    DEVICE_METHODS,
+    METHODS,
+    STATIC_METHODS,
+    ImportanceContext,
+    l1_scores_jnp,
+    taylor_scores_jnp,
+)
+from .masks import (
+    UnitFlat,
+    flatten_unit_space,
+    full_index,
+    index_from_presence,
+    presence_from_index,
+    prune_budget_units,
+    prune_order,
+    prune_presence_rows,
+    retention,
+    similarity,
+)
+from .pruned_rate import WorkerHistory, learn_pruned_rates
+from .scenario import ScenarioEngine, ScenarioPlan
+from .timing import heterogeneity_from_times
+from .worker import make_batch_plan, plan_steps, stack_batch_plans
+
+__all__ = ["run_sync_fused", "validate_fused_config"]
+
+
+def validate_fused_config(sim) -> None:
+    """Reject configurations the fused engine does not express on device."""
+    if sim.method not in ("adaptcl", "fedavg", "fedavg_s"):
+        raise ValueError(
+            "engine='fused' fuses the synchronous round loop; the async "
+            "schedulers' event queue stays on the resident masked engine"
+        )
+    if sim.dgc_sparsity > 0.0:
+        raise ValueError(
+            "engine='fused' does not support DGC delta compression (the "
+            "compressor is host NumPy at the submission boundary); use "
+            "engine='masked'"
+        )
+    if sim.compute != "dense":
+        raise ValueError(
+            "engine='fused' supports compute='dense' only — the block_skip "
+            "interpret-mode kernel inside lax.scan is out of scope off-TPU"
+        )
+    supported = STATIC_METHODS | DEVICE_METHODS
+    if sim.importance not in supported:
+        raise ValueError(
+            f"engine='fused' supports importance criteria {sorted(supported)}; "
+            f"{sim.importance!r} needs host-side statistics (use "
+            "engine='masked')"
+        )
+
+
+def _static_orders(sim, env, flat: UnitFlat, cig_scores, prune_round_count):
+    """Host-exact ``[W, U]`` removal orders for the data-independent
+    criteria (``None`` while CIG scores are not yet frozen — unused then,
+    because no prune can fire before the first learning event)."""
+    W = sim.num_workers
+    name = sim.importance
+    if name == "cig_bnscalor":
+        if cig_scores is None:
+            return None
+        return np.tile(prune_order(cig_scores, flat), (W, 1))
+    ctx = dict(unit_counts=env.space.unit_counts, round=prune_round_count,
+               seed=sim.seed)
+    if name != "no_identical":    # one shared order across workers
+        scores = METHODS[name](ImportanceContext(**ctx))
+        return np.tile(prune_order(scores, flat), (W, 1))
+    rows = []
+    for w in range(W):
+        scores = METHODS[name](ImportanceContext(worker=w, **ctx))
+        rows.append(prune_order(scores, flat))
+    return np.stack(rows)
+
+
+def _build_chunk_fn(trainer, unit_map, base_shapes, flat: UnitFlat, lam,
+                    *, by_unit: bool, importance: str,
+                    resident_momentum: bool, has_phase_b: bool):
+    """Build the jitted chunk program: ``lax.scan`` over K fused rounds.
+
+    Carry: (param stacks, mask stacks, flat presence, global params,
+    momentum stacks) — everything a round needs, so nothing touches the host
+    between scan steps.  Per-round inputs arrive as ``[K, ...]`` tensors;
+    per-round outputs (post-prune presence, post-aggregation global) come
+    back stacked so the host can account payloads/clock and evaluate lazily.
+    """
+    train_one = trainer.make_resident_train(unit_map, lam, carry_momentum=True)
+    vm_train = jax.vmap(
+        lambda p, m0, x, y, plan, valid, mask, gl:
+            train_one(p, x, y, plan, valid, mask, gl, m0)
+    )
+    slices = {
+        name: (int(flat.offsets[l]), int(flat.sizes[l]))
+        for l, name in enumerate(flat.names)
+    }
+    tiebreak_dev = jnp.asarray(flat.tiebreak)
+
+    def counts_of(presence):
+        return {
+            name: presence[:, off : off + sz].sum(axis=1)
+            for name, (off, sz) in slices.items()
+        }
+
+    def device_scores(params, masks, presence, xs, ys, sizes):
+        """Data-dependent importance in base coordinates over the stacks.
+
+        Mirrors ``worker.local_unit_stats`` + the host METHODS: masked unit
+        group norms (l1) / per-unit |sum g.w| on the first <=64 shard images
+        (taylor), non-retained slots scattered to -inf."""
+        if importance == "l1":
+            sq: Dict[str, jnp.ndarray] = {}
+            for path, entries in unit_map.items():
+                arr = params.get(path)
+                if arr is None:
+                    continue
+                for lname, axis in entries:
+                    axes = tuple(
+                        i for i in range(arr.ndim) if i not in (0, 1 + axis)
+                    )
+                    s = jnp.sum(jnp.square(arr.astype(jnp.float32)), axis=axes)
+                    sq[lname] = sq.get(lname, 0.0) + s
+            norms = {k: jnp.sqrt(jnp.maximum(v, 1e-12)) for k, v in sq.items()}
+            return l1_scores_jnp(norms, flat.names, presence)
+        # taylor: grads of the masked CE on each worker's first <=64 images
+        nb = min(64, xs.shape[1])
+        xb, yb = xs[:, :nb], ys[:, :nb]
+        wv = (
+            jnp.arange(nb)[None, :] < jnp.minimum(sizes, nb)[:, None]
+        ).astype(jnp.float32)
+
+        def ce_one(q, mask, x, y, v):
+            qm = jax.tree.map(lambda w, m: w * m, q, mask)
+            logp = jax.nn.log_softmax(trainer._masked_logits(qm, mask, x))
+            pick = jnp.take_along_axis(logp, y[:, None], axis=1)[:, 0]
+            return -(pick * v).sum() / jnp.maximum(v.sum(), 1.0)
+
+        grads = jax.vmap(
+            lambda q, mask, x, y, v: jax.grad(ce_one)(q, mask, x, y, v)
+        )(params, masks, xb, yb, wv)
+        gw: Dict[str, jnp.ndarray] = {}
+        for path, entries in unit_map.items():
+            if path not in grads:
+                continue
+            for lname, axis in entries:
+                g, w_ = grads[path], params[path]
+                axes = tuple(i for i in range(g.ndim) if i not in (0, 1 + axis))
+                gw[lname] = gw.get(lname, 0.0) + jnp.abs(
+                    jnp.sum(g * w_, axis=axes)
+                )
+        return taylor_scores_jnp(gw, flat.names, presence)
+
+    def chunk(params, momentum, presence, global_p, xs, ys, sizes,
+              per_round, orders):
+        masks = masks_from_presence(presence, flat, unit_map, base_shapes)
+
+        def body(carry, inp):
+            params, masks, presence, global_p, momentum = carry
+            # broadcast-back: masked scatter of the global into every row
+            params = {k: global_p[k][None] * masks[k] for k in params}
+            gl = gl_factors_from_counts(
+                counts_of(presence), unit_map, base_shapes
+            )
+            m0 = (momentum if resident_momentum
+                  else jax.tree.map(jnp.zeros_like, params))
+            params, m_out, _ = vm_train(
+                params, m0, xs, ys, inp["plan_a"], inp["valid_a"], masks, gl
+            )
+            momentum = m_out if resident_momentum else momentum
+
+            def prune_branch(op):
+                params, masks, presence, momentum = op
+                if importance in STATIC_METHODS:
+                    ow = orders
+                else:
+                    scores = device_scores(
+                        params, masks, presence, xs, ys, sizes
+                    )
+                    ow = jax.vmap(
+                        lambda s: jnp.lexsort((tiebreak_dev, s)).astype(jnp.int32)
+                    )(scores)
+                pres2 = prune_presence_rows(presence, ow, inp["budgets"], flat)
+                masks2 = masks_from_presence(pres2, flat, unit_map, base_shapes)
+                params2 = {k: params[k] * masks2[k] for k in params}
+                mom2 = (
+                    {k: momentum[k] * masks2[k] for k in momentum}
+                    if resident_momentum else momentum
+                )
+                if has_phase_b:
+                    gl2 = gl_factors_from_counts(
+                        counts_of(pres2), unit_map, base_shapes
+                    )
+                    m0b = (mom2 if resident_momentum
+                           else jax.tree.map(jnp.zeros_like, params2))
+                    params2, m_b, _ = vm_train(
+                        params2, m0b, xs, ys,
+                        inp["plan_b"], inp["valid_b"], masks2, gl2,
+                    )
+                    mom2 = m_b if resident_momentum else mom2
+                return params2, masks2, pres2, mom2
+
+            params, masks, presence, momentum = jax.lax.cond(
+                inp["prune_any"], prune_branch, lambda op: op,
+                (params, masks, presence, momentum),
+            )
+
+            if by_unit:
+                g_new = aggregate_by_unit_stacked_jnp(
+                    params, masks, inp["submitters"]
+                )
+            else:
+                g_new = aggregate_by_worker_stacked_jnp(params, inp["weights"])
+            # dead padding rounds (real=False) keep the global untouched, so
+            # every chunk shares ONE [K]-shaped compiled program
+            global_p = {
+                k: jnp.where(inp["real"], g_new[k].astype(jnp.float32),
+                             global_p[k])
+                for k in global_p
+            }
+            return (params, masks, presence, global_p, momentum), (
+                presence, global_p
+            )
+
+        carry0 = (params, masks, presence, global_p, momentum)
+        (params, masks, presence, global_p, momentum), (pres_seq, glob_seq) = (
+            jax.lax.scan(body, carry0, per_round)
+        )
+        return params, momentum, presence, global_p, pres_seq, glob_seq
+
+    return jax.jit(chunk)
+
+
+def run_sync_fused(sim, env):
+    """Synchronous simulation with the fused round engine (see module doc).
+
+    Mirrors ``simulation._run_sync`` decision-for-decision; the differences
+    are WHERE things run (rounds on device in scan chunks, accounting on
+    host after each chunk), never WHAT is computed.
+    """
+    from .simulation import _env_accuracy, _finalize   # lazy: no import cycle
+
+    validate_fused_config(sim)
+    W = sim.num_workers
+    adapt = sim.method == "adaptcl"
+    sparse = sim.method in ("fedavg_s", "adaptcl")
+    lam = sim.lam if sparse else 0.0
+    trainer = env.trainer
+    unit_map = env.unit_map
+    base_shapes = env.base_shapes
+    flat = flatten_unit_space(env.space)
+    U = flat.num_units
+
+    scen = ScenarioEngine(sim.scenario, W) if sim.scenario is not None else None
+    if scen is not None:
+        plan_all = scen.draw_all(
+            sim.rounds,
+            shard_sizes=[len(s) for s in env.shards],
+            train_len=len(env.task.y_train),
+        )
+    else:
+        plan_all = ScenarioPlan.full(sim.rounds, W)
+
+    shard_x, shard_y = zip(*(env.shard_xy(w) for w in range(W)))
+    state = env.fleet.init_state(env.base_params, list(shard_x), list(shard_y))
+    if sim.resident_momentum:
+        env.fleet.init_momentum(state)
+
+    batch = sim.batch_size
+    pad_a = max(
+        plan_steps(len(env.shards[w]), batch, sim.local_epochs)
+        for w in range(W)
+    )
+    pad_b = max(
+        plan_steps(len(env.shards[w]), batch, (1 - sim.beta) * sim.local_epochs)
+        for w in range(W)
+    )
+    K_pad = sim.round_fusion if sim.round_fusion > 0 else (
+        sim.prune_interval if adapt else 8
+    )
+    K_pad = max(1, min(K_pad, sim.rounds))
+
+    global_params = {k: np.asarray(v) for k, v in env.base_params.items()}
+    global_dev = {k: jnp.asarray(v) for k, v in global_params.items()}
+    sizes_dev = jnp.asarray(np.asarray(state.shard_sizes, np.int32))
+
+    indices = [full_index(env.space) for _ in range(W)]
+    histories = [WorkerHistory() for _ in range(W)]
+    pending_rates = [0.0] * W
+    cig_scores = None
+    interval_phis: List[List[float]] = [[] for _ in range(W)]
+    prune_round_count = 0
+    prune_events = []
+    fused_chunks = 0
+
+    clock = 0.0
+    comm_bytes = 0.0
+    server_overhead = 0.0
+    acc_time, het_traj, sim_traj, upd_times = [], [], [], []
+    scen_rows = []
+
+    # channel-model cache: payload bytes + FLOPs depend on the index only
+    # through per-layer retained COUNTS, so the per-(round, worker) phi math
+    # collapses to a dict lookup + the exact float ops of _phi_from_shapes —
+    # bit-identical values, O(distinct retentions) instead of O(R x W) host
+    # shape walks
+    _count_cache: Dict[tuple, tuple] = {}
+
+    def _bytes_flops(idx) -> tuple:
+        key = tuple(len(idx[name]) for name in flat.names)
+        ent = _count_cache.get(key)
+        if ent is None:
+            shapes = subparam_shapes(idx, unit_map, base_shapes)
+            ent = (
+                sum(int(np.prod(s)) * 4 for s in shapes.values()),
+                cnn_flops_from_shapes(shapes, sim.cnn),
+            )
+            _count_cache[key] = ent
+        return ent
+
+    acc_time.append((0.0, _env_accuracy(env, global_params)))
+    rt_base = roundtrip_total()
+
+    sig_shapes = tuple(
+        sorted((k, tuple(v.shape)) for k, v in state.params.items())
+    )
+    sig = (
+        sig_shapes,
+        ("fused", K_pad, pad_a, pad_b, tuple(state.xs.shape), batch,
+         sim.aggregation, sim.importance, bool(sim.resident_momentum)),
+        float(lam),
+    )
+    build = lambda: _build_chunk_fn(
+        trainer, unit_map, base_shapes, flat, lam,
+        by_unit=sim.aggregation == "by_unit",
+        importance=sim.importance,
+        resident_momentum=bool(sim.resident_momentum),
+        has_phase_b=pad_b > 0,
+    )
+
+    t = 0
+    while t < sim.rounds:
+        # ---- chunk-start churn (host): replaced slots restart fresh ------
+        ev0 = plan_all.events[t]
+        if ev0.joined.any():
+            for w in np.flatnonzero(ev0.joined):
+                w = int(w)
+                indices[w] = full_index(env.space)
+                histories[w] = WorkerHistory()
+                pending_rates[w] = 0.0
+                interval_phis[w] = []
+                env.shards[w] = plan_all.fresh_shards[t][w]
+                env.fleet.update_shard(state, w, *env.shard_xy(w))
+                if sim.resident_momentum:
+                    state.momentum = {
+                        k: v.at[w].set(0.0) for k, v in state.momentum.items()
+                    }
+        # ---- chunk extent: learning events and churn rounds cut ----------
+        n = min(K_pad, sim.rounds - t)
+        if adapt:
+            n = min(n, sim.prune_interval - (t % sim.prune_interval))
+        for j in range(1, n):
+            if plan_all.events[t + j].joined.any():
+                n = j
+                break
+        rounds_this = list(range(t + 1, t + n + 1))
+
+        # ---- host pre-compute: plans / budgets / jitter, in the lazy
+        # loop's exact env.rng order (plans then jitter, per round) --------
+        plans_a = np.zeros((K_pad, W, pad_a, batch), np.int64)
+        valid_a = np.zeros((K_pad, W, pad_a), np.float32)
+        plans_b = np.zeros((K_pad, W, max(pad_b, 1), batch), np.int64)
+        valid_b = np.zeros((K_pad, W, max(pad_b, 1)), np.float32)
+        budgets = np.zeros((K_pad, W), np.int32)
+        prune_any = np.zeros((K_pad,), bool)
+        real = np.zeros((K_pad,), bool)
+        weights = np.zeros((K_pad, W), np.float32)
+        submit_m = np.zeros((K_pad, W), np.float32)
+        jitters = np.ones((K_pad, W))
+        steps_a = np.zeros((K_pad, W), np.int64)
+        steps_b = np.zeros((K_pad, W), np.int64)
+        active_list: List[List[int]] = []
+        prune_now_rounds: List[np.ndarray] = []
+
+        for j, rnd in enumerate(rounds_this):
+            ev = plan_all.events[rnd - 1]
+            active_ws = [int(w) for w in np.flatnonzero(ev.active)]
+            active_list.append(active_ws)
+            if scen is not None:
+                scen_rows.append((
+                    rnd, len(active_ws),
+                    int(ev.dropped.sum()), int(ev.joined.sum()),
+                ))
+            pa: List[Optional[np.ndarray]] = [None] * W
+            pb: List[Optional[np.ndarray]] = [None] * W
+            pn = np.zeros(W, bool)
+            for w in active_ws:
+                rate = pending_rates[w] if adapt else 0.0
+                if adapt and rate > 0.0:
+                    e1 = sim.beta * sim.local_epochs
+                    e2 = (1 - sim.beta) * sim.local_epochs
+                    pn[w] = True
+                else:
+                    e1, e2 = sim.local_epochs, 0.0
+                nsh = len(env.shards[w])
+                pa[w] = make_batch_plan(nsh, batch, e1, env.rng)
+                pb[w] = make_batch_plan(nsh, batch, e2, env.rng)
+                steps_a[j, w] = pa[w].shape[0]
+                steps_b[j, w] = pb[w].shape[0]
+            prune_now_rounds.append(pn)
+            for w in active_ws:
+                if pn[w]:
+                    budgets[j, w] = prune_budget_units(
+                        indices[w], pending_rates[w], env.space
+                    )
+            prune_any[j] = bool(pn.any())
+            sa = stack_batch_plans(pa, num_rows=W, num_steps=pad_a)
+            if sa is not None:
+                plans_a[j], valid_a[j] = sa
+            if pad_b > 0:
+                sb = stack_batch_plans(pb, num_rows=W, num_steps=pad_b)
+                if sb is not None:
+                    plans_b[j], valid_b[j] = sb
+            submit_m[j] = ev.submitters.astype(np.float32)
+            if sim.aggregation != "by_unit":
+                weights[j] = (
+                    ev.submitters / ev.submitters.sum()
+                ).astype(np.float32)
+            real[j] = True
+            if sim.time_jitter > 0:
+                for w in active_ws:
+                    jitters[j, w] = float(
+                        np.exp(env.rng.normal(0, sim.time_jitter))
+                    )
+            for w in active_ws:      # submission resets the pending rate
+                pending_rates[w] = 0.0
+
+        orders_np = None
+        if sim.importance in STATIC_METHODS:
+            orders_np = _static_orders(sim, env, flat, cig_scores,
+                                       prune_round_count)
+        orders_dev = jnp.asarray(
+            orders_np if orders_np is not None
+            else np.zeros((W, U), np.int32)
+        )
+        presence_dev = jnp.asarray(
+            np.stack([presence_from_index(indices[w], flat) for w in range(W)])
+        )
+        per_round = {
+            "plan_a": jnp.asarray(plans_a.astype(np.int32)),
+            "valid_a": jnp.asarray(valid_a),
+            "budgets": jnp.asarray(budgets),
+            "prune_any": jnp.asarray(prune_any),
+            "real": jnp.asarray(real),
+            "weights": jnp.asarray(weights),
+            "submitters": jnp.asarray(submit_m),
+        }
+        if pad_b > 0:
+            per_round["plan_b"] = jnp.asarray(plans_b.astype(np.int32))
+            per_round["valid_b"] = jnp.asarray(valid_b)
+        momentum_arg = state.momentum if sim.resident_momentum else {}
+
+        # ---- ONE device dispatch for the whole chunk ---------------------
+        (state.params, mom_out, _, global_dev, pres_seq, glob_seq) = (
+            trainer._call_cached(
+                sig, build,
+                state.params, momentum_arg, presence_dev, global_dev,
+                state.xs, state.ys, sizes_dev, per_round, orders_dev,
+            )
+        )
+        if sim.resident_momentum:
+            state.momentum = mom_out
+        fused_chunks += 1
+        env.fleet.batched_calls += 1
+        env.fleet.buckets_used.add(W)
+
+        pres_seq_np = np.asarray(pres_seq)                     # [K, W, U]
+        glob_seq_np = {k: np.asarray(v) for k, v in glob_seq.items()}
+
+        # ---- post-chunk host accounting (payloads, clock, ledger, eval) --
+        for j, rnd in enumerate(rounds_this):
+            ev = plan_all.events[rnd - 1]
+            active_ws = active_list[j]
+            pn = prune_now_rounds[j]
+            for w in active_ws:     # ledger phase A at the pre-prune index
+                env.account_train(indices[w], int(steps_a[j, w]))
+            for w in active_ws:
+                if pn[w]:
+                    indices[w] = index_from_presence(pres_seq_np[j, w], flat)
+                    prune_events.append((
+                        rnd, int(w),
+                        {k: tuple(map(int, v)) for k, v in indices[w].items()},
+                    ))
+                    if pad_b > 0:   # ledger phase B at the pruned index
+                        env.account_train(indices[w], int(steps_b[j, w]))
+            phis = np.full(W, np.nan)
+            for w in active_ws:
+                bytes_w, flops_w = _bytes_flops(indices[w])
+                phi_w = env.phi_from_cost(
+                    w, bytes_w, flops_w, 1.0, jitters[j, w]
+                )
+                phis[w] = phi_w
+                interval_phis[w].append(phi_w)
+                if ev.submitters[w]:
+                    comm_bytes += 2.0 * bytes_w
+            sub_phis = phis[ev.submitters]
+            round_time = float(sub_phis.max())
+            if ev.dropped.any() and scen is not None:
+                round_time *= scen.cfg.timeout_factor
+            clock += round_time
+            upd_times.append(list(phis))
+            het_traj.append((rnd, heterogeneity_from_times(sub_phis)))
+            if W > 3:
+                sim_traj.append((rnd, similarity(indices[1], indices[3])))
+            if rnd % sim.eval_every == 0:
+                g_j = {k: v[j] for k, v in glob_seq_np.items()}
+                acc_time.append((clock, _env_accuracy(env, g_j)))
+        global_params = {k: np.array(v[n - 1]) for k, v in glob_seq_np.items()}
+        t += n
+
+        # ---- learning event at the chunk boundary (host Newton math) -----
+        if adapt and t % sim.prune_interval == 0:
+            t0 = _time.perf_counter()
+            prune_round_count += 1
+            if cig_scores is None and sim.importance == "cig_bnscalor":
+                cig_scores = METHODS["cig_bnscalor"](ImportanceContext(
+                    unit_counts=env.space.unit_counts,
+                    scales=extract_bn_scales(global_params, sim.cnn),
+                ))
+            gammas_now = [retention(indices[w], env.space) for w in range(W)]
+            phis_now = [
+                float(np.mean(interval_phis[w])) if interval_phis[w]
+                else env.phi_from_index(w, indices[w], jitter=False)
+                for w in range(W)
+            ]
+            for w in range(W):
+                histories[w].record(gammas_now[w], phis_now[w])
+            if sim.fixed_pruned_rates is not None:
+                k = prune_round_count - 1
+                rates = (
+                    sim.fixed_pruned_rates[k]
+                    if k < len(sim.fixed_pruned_rates)
+                    else [0.0] * W
+                )
+            else:
+                rates = learn_pruned_rates(
+                    histories, gammas_now, phis_now, sim.rate_cfg
+                )
+            pending_rates = list(rates)
+            interval_phis = [[] for _ in range(W)]
+            server_overhead += _time.perf_counter() - t0
+
+    host_roundtrips = roundtrip_total() - rt_base
+    final_costs = [env.cost_for_index(indices[w]) for w in range(W)]
+    return _finalize(
+        sim, env, acc_time, het_traj, sim_traj, upd_times,
+        [retention(indices[w], env.space) for w in range(W)],
+        [extract_subparams(global_params, indices[w], unit_map)
+         for w in range(W)],
+        comm_bytes, server_overhead, clock,
+        global_params=global_params, host_roundtrips=host_roundtrips,
+        scenario_rounds=scen_rows,
+        flops_per_image_final=float(np.mean([c[0] for c in final_costs])),
+        blocks_per_image_final=float(np.mean([c[2] for c in final_costs])),
+        prune_events=prune_events, fused_chunks=fused_chunks,
+    )

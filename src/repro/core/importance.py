@@ -26,6 +26,7 @@ from __future__ import annotations
 import dataclasses
 from typing import Callable, Dict, Mapping, Optional, Sequence
 
+import jax.numpy as jnp
 import numpy as np
 
 __all__ = [
@@ -34,6 +35,11 @@ __all__ = [
     "cig_scores_from_scales",
     "cig_scores_from_weight_norms",
     "METHODS",
+    "STATIC_METHODS",
+    "DEVICE_METHODS",
+    "l1_scores_jnp",
+    "taylor_scores_jnp",
+    "flat_scores_jnp",
 ]
 
 Scores = Dict[str, np.ndarray]
@@ -172,3 +178,53 @@ METHODS: Dict[str, ImportanceMethod] = {
 # Criteria that satisfy the paper's Identical+Constant principles. Only these
 # guarantee nested sub-models (masks.assert_nested holds for any two workers).
 CIG_METHODS = frozenset({"cig_bnscalor", "index", "no_adjacent"})
+
+# Criteria whose scores are data-independent — they depend only on (seed,
+# worker, prune round, frozen global scales), all of which the fused round
+# engine knows on the host at a chunk boundary, so their removal ORDERS can
+# be precomputed host-exactly (``masks.prune_order``) and shipped to device
+# as integer permutations.  For the seed-derived members the prune indices
+# are therefore UNCONDITIONALLY bit-identical to the host path;
+# cig_bnscalor's frozen scores read the trained global at the freeze event,
+# so cross-engine float32 training/aggregation drift could in principle
+# reorder a near-tie (the equivalence tests pin index equality on real
+# runs).
+STATIC_METHODS = CIG_METHODS | {"no_identical", "no_constant"}
+
+
+# --- device-side (jnp) scorer transforms -----------------------------------
+#
+# Data-dependent criteria can't be frozen at a chunk boundary: their scores
+# read the worker's CURRENT sub-model (and shard), which only exists on
+# device inside a fused chunk.  These transforms mirror the host methods'
+# scatter semantics — a non-retained unit scores -inf, exactly like
+# ``worker.local_unit_stats`` scattering into a ``-inf``-filled base vector —
+# over stacked ``[W, U]`` flat score rows.  The fused engine computes the
+# raw signals (masked unit norms, |g.w| sums) on device and sorts with the
+# same (score, layer, unit) lexicographic tie-break as the host
+# (``UnitFlat.tiebreak``); float32-vs-float64 summation can reorder
+# near-exact ties, which is why only ``STATIC_METHODS`` carry the
+# bit-identical guarantee.
+
+DEVICE_METHODS = frozenset({"l1", "taylor"})
+
+
+def flat_scores_jnp(
+    per_layer: Mapping[str, jnp.ndarray],   # {lname: [W, n_l]}
+    layer_names: Sequence[str],
+    presence: jnp.ndarray,                  # [W, U] 0/1 flat presence
+) -> jnp.ndarray:
+    """Concatenate per-layer score rows into ``[W, U]`` flat-slot order and
+    apply the -inf scatter for non-retained units."""
+    flat = jnp.concatenate([per_layer[name] for name in layer_names], axis=1)
+    return jnp.where(presence > 0, flat, -jnp.inf)
+
+
+def l1_scores_jnp(weight_norms, layer_names, presence) -> jnp.ndarray:
+    """L1 criterion on device: per-unit group norms of the masked stacks."""
+    return flat_scores_jnp(weight_norms, layer_names, presence)
+
+
+def taylor_scores_jnp(grad_weight, layer_names, presence) -> jnp.ndarray:
+    """Taylor |g.w| criterion on device."""
+    return flat_scores_jnp(grad_weight, layer_names, presence)

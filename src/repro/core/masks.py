@@ -12,21 +12,42 @@ other layers' choices: attention KV-head groups, FFN hidden units, experts,
 recurrent channels, conv filters.  Each layer advertises a per-unit parameter
 cost so pruned rates are enforced in *parameter space* (the paper's budget is
 a fraction of model size).
+
+**Device pruning** (the fused round engine's path): :class:`UnitFlat`
+flattens the unit space into static per-unit arrays (layer id, cost,
+tie-break rank), ``prune_order`` reproduces ``prune_to_budget``'s exact host
+sort — ascending ``(score, layer_name, unit)`` in float64 — as an integer
+permutation, ``prune_budget_units`` converts the float64 budget into the
+exact integer threshold the greedy walk compares against, and
+``prune_presence_rows`` replays the same greedy removal as a ``lax.scan``
+over the order, vmapped across worker rows of a ``[W, U]`` 0/1 presence
+matrix.  Because the order is a host-exact permutation and the budget an
+exact integer, the device path removes *bit-identical* unit sets to
+``prune_to_budget`` (pinned by the golden tie-breaking test).
 """
 from __future__ import annotations
 
 import dataclasses
 from typing import Dict, List, Mapping, Sequence
 
+import jax
+import jax.numpy as jnp
 import numpy as np
 
 __all__ = [
     "UnitLayer",
     "UnitSpace",
+    "UnitFlat",
     "full_index",
     "retention",
     "payload_bytes",
     "prune_to_budget",
+    "flatten_unit_space",
+    "presence_from_index",
+    "index_from_presence",
+    "prune_order",
+    "prune_budget_units",
+    "prune_presence_rows",
     "similarity",
     "is_nested",
     "take_units",
@@ -169,6 +190,150 @@ def is_nested(small: GlobalIndex, big: GlobalIndex) -> bool:
         if not set(map(int, v)) <= set(map(int, big.get(k, []))):
             return False
     return True
+
+
+# --- flattened unit space + device-side budget pruning ---------------------
+
+@dataclasses.dataclass(frozen=True)
+class UnitFlat:
+    """Static flattening of a :class:`UnitSpace` into per-unit arrays.
+
+    Unit ``j`` of layer ``names[l]`` lives at flat slot ``offsets[l] + j``.
+    ``tiebreak[u]`` is the rank of slot ``u`` in the ascending
+    ``(layer_name, unit_id)`` order — exactly the tie-break
+    ``prune_to_budget`` applies between equal scores."""
+
+    names: tuple                 # layer names, in space.layers order
+    sizes: np.ndarray            # [L] units per layer
+    offsets: np.ndarray          # [L] flat offset of each layer
+    layer_of: np.ndarray         # [U] int32 layer id per flat slot
+    unit_id: np.ndarray          # [U] int32 unit id within its layer
+    costs: np.ndarray            # [U] int32 per-unit parameter cost
+    min_units: np.ndarray        # [L] int32
+    fixed_params: int
+    tiebreak: np.ndarray         # [U] int32 (layer_name, unit) rank
+
+    @property
+    def num_units(self) -> int:
+        return int(self.layer_of.shape[0])
+
+
+def flatten_unit_space(space: UnitSpace) -> UnitFlat:
+    names = tuple(l.name for l in space.layers)
+    sizes = np.array([l.num_units for l in space.layers], np.int64)
+    offsets = np.concatenate([[0], np.cumsum(sizes)[:-1]]).astype(np.int64)
+    layer_of = np.concatenate(
+        [np.full(l.num_units, i, np.int32) for i, l in enumerate(space.layers)]
+    )
+    unit_id = np.concatenate(
+        [np.arange(l.num_units, dtype=np.int32) for l in space.layers]
+    )
+    costs = np.concatenate(
+        [np.full(l.num_units, l.unit_param_cost, np.int32) for l in space.layers]
+    )
+    min_units = np.array([l.min_units for l in space.layers], np.int32)
+    # rank in ascending (layer_name, unit) order — the host sort's tie-break
+    name_rank = np.argsort(np.argsort(np.array(names)))
+    tiebreak = np.lexsort((unit_id, name_rank[layer_of]))
+    rank = np.empty_like(tiebreak)
+    rank[tiebreak] = np.arange(len(tiebreak))
+    return UnitFlat(
+        names=names, sizes=sizes, offsets=offsets, layer_of=layer_of,
+        unit_id=unit_id, costs=costs, min_units=min_units,
+        fixed_params=int(space.fixed_params), tiebreak=rank.astype(np.int32),
+    )
+
+
+def presence_from_index(index: GlobalIndex, flat: UnitFlat) -> np.ndarray:
+    """[U] float32 0/1 flat presence vector of a global index."""
+    p = np.zeros(flat.num_units, np.float32)
+    for l, name in enumerate(flat.names):
+        p[flat.offsets[l] + np.asarray(index[name], np.int64)] = 1.0
+    return p
+
+
+def index_from_presence(presence: np.ndarray, flat: UnitFlat) -> GlobalIndex:
+    """Inverse of ``presence_from_index`` (retained slots, ascending)."""
+    presence = np.asarray(presence)
+    out: GlobalIndex = {}
+    for l, name in enumerate(flat.names):
+        seg = presence[flat.offsets[l] : flat.offsets[l] + flat.sizes[l]]
+        out[name] = np.flatnonzero(seg > 0).astype(np.int64)
+    return out
+
+
+def prune_order(scores: Mapping[str, np.ndarray], flat: UnitFlat) -> np.ndarray:
+    """[U] removal-order permutation matching ``prune_to_budget``'s sort.
+
+    Host-exact: float64 scores, ties broken by ``(layer_name, unit)`` — the
+    same key the per-worker path sorts its ``(score, lname, unit, cost)``
+    entries by, so walking this order removes units in the identical
+    sequence.  Non-retained slots simply get skipped by the presence guard
+    during the walk, which is equivalent to the host path never listing
+    them."""
+    flat_scores = np.concatenate([
+        np.asarray(scores[name], np.float64)[: flat.sizes[l]]
+        for l, name in enumerate(flat.names)
+    ])
+    if flat_scores.shape[0] != flat.num_units:
+        raise ValueError("scores do not cover the unit space")
+    return np.lexsort((flat.tiebreak, flat_scores)).astype(np.int32)
+
+
+def prune_budget_units(index: GlobalIndex, rate: float, space: UnitSpace) -> int:
+    """Exact integer removal threshold for one worker's prune event.
+
+    ``prune_to_budget`` removes while ``removed_params < rate * current``
+    with ``removed_params`` an integer sum of integer unit costs; since
+    ``removed < b`` for integer ``removed`` equals ``removed < ceil(b)``
+    (``b`` non-integral) or ``removed < b`` (``b`` integral), the float64
+    budget collapses to an integer the device greedy can compare exactly —
+    no float32 drift can flip a removal decision."""
+    budget = float(rate) * _retained_params(index, space)
+    ceil_b = int(np.ceil(budget))
+    return int(budget) if budget == np.floor(budget) else ceil_b
+
+
+def prune_presence_rows(
+    presence: jnp.ndarray,       # [W, U] float32 0/1
+    orders: jnp.ndarray,         # [W, U] int32 removal order per worker
+    budgets: jnp.ndarray,        # [W] int32 (prune_budget_units per worker)
+    flat: UnitFlat,
+) -> jnp.ndarray:
+    """Device replay of ``prune_to_budget`` over worker rows (pure ``jnp``).
+
+    A ``lax.scan`` walks each worker's removal order: a slot is removed iff
+    the budget is not yet met, its layer stays above ``min_units``, and the
+    worker still retains it — the exact greedy of the host loop, including
+    the "skipped layers don't consume budget" semantics.  ``budgets == 0``
+    rows come back unchanged (the host's ``pruned_rate == 0`` early-out)."""
+    layer_of = jnp.asarray(flat.layer_of)
+    costs = jnp.asarray(flat.costs)
+    min_units = jnp.asarray(flat.min_units)
+    L = len(flat.names)
+
+    def one(pres, order, budget):
+        counts = jnp.zeros((L,), jnp.int32).at[layer_of].add(pres.astype(jnp.int32))
+
+        def body(carry, u):
+            removed, counts, pres = carry
+            l = layer_of[u]
+            can = (
+                (removed < budget)
+                & (counts[l] > min_units[l])
+                & (pres[u] > 0)
+            )
+            pres = pres.at[u].add(jnp.where(can, -1.0, 0.0))
+            counts = counts.at[l].add(jnp.where(can, -1, 0))
+            removed = removed + jnp.where(can, costs[u], 0)
+            return (removed, counts, pres), None
+
+        (_, _, pres), _ = jax.lax.scan(
+            body, (jnp.int32(0), counts, pres), order
+        )
+        return pres
+
+    return jax.vmap(one)(presence, orders, budgets)
 
 
 # --- array helpers used by reconfigure + aggregation -----------------------

@@ -44,11 +44,17 @@ participation.
 from __future__ import annotations
 
 import dataclasses
-from typing import List, Optional, Sequence
+from typing import Dict, List, Optional, Sequence
 
 import numpy as np
 
-__all__ = ["ScenarioConfig", "RoundEvents", "ScenarioEngine", "full_participation"]
+__all__ = [
+    "ScenarioConfig",
+    "RoundEvents",
+    "ScenarioEngine",
+    "ScenarioPlan",
+    "full_participation",
+]
 
 
 @dataclasses.dataclass
@@ -155,3 +161,58 @@ class ScenarioEngine:
     def fresh_shard(self, size: int, train_len: int) -> np.ndarray:
         """Index set for a churned-in worker (uniform over the task's pool)."""
         return self.rng.choice(train_len, size=size, replace=False).astype(np.int64)
+
+    def draw_all(
+        self,
+        rounds: int,
+        shard_sizes: Optional[Sequence[int]] = None,
+        train_len: int = 0,
+    ) -> "ScenarioPlan":
+        """Pre-draw the ENTIRE run's events (the fused engine's path).
+
+        Consumes the scenario RNG stream in exactly the per-round order of
+        the lazy sync loop — ``draw(t)`` then one ``fresh_shard`` per joined
+        slot in ascending slot order — so a pre-drawn plan unfolds
+        *identically* to round-by-round draws under every engine.  Fresh
+        shards for churned slots are drawn here too (they interleave with
+        the event draws on the shared stream); ``shard_sizes``/``train_len``
+        are only needed when churn is enabled."""
+        events: List[RoundEvents] = []
+        fresh: List[Dict[int, np.ndarray]] = []
+        for t in range(1, rounds + 1):
+            ev = self.draw(t)
+            shards: Dict[int, np.ndarray] = {}
+            for w in np.flatnonzero(ev.joined):
+                if shard_sizes is None:
+                    raise ValueError("draw_all needs shard_sizes when churn > 0")
+                shards[int(w)] = self.fresh_shard(int(shard_sizes[w]), train_len)
+            events.append(ev)
+            fresh.append(shards)
+        return ScenarioPlan(events=events, fresh_shards=fresh)
+
+
+@dataclasses.dataclass
+class ScenarioPlan:
+    """A whole run's pre-drawn scenario: per-round events + churn shards.
+
+    ``as_arrays`` stacks the boolean masks into ``[R, W]`` matrices — the
+    form the fused engine uploads to device (submitter weights, activity
+    masks) so the scan consumes one row per fused round."""
+
+    events: List[RoundEvents]
+    fresh_shards: List[Dict[int, np.ndarray]]
+
+    def as_arrays(self) -> Dict[str, np.ndarray]:
+        return {
+            "active": np.stack([e.active for e in self.events]),
+            "dropped": np.stack([e.dropped for e in self.events]),
+            "joined": np.stack([e.joined for e in self.events]),
+            "submitters": np.stack([e.submitters for e in self.events]),
+        }
+
+    @staticmethod
+    def full(rounds: int, num_workers: int) -> "ScenarioPlan":
+        return ScenarioPlan(
+            events=[full_participation(num_workers) for _ in range(rounds)],
+            fresh_shards=[{} for _ in range(rounds)],
+        )

@@ -148,8 +148,18 @@ class SimConfig:
     # (1-sparsity) fraction of each weight delta; the rest accumulates
     # locally until it crosses the threshold (momentum-factor-masking lite).
     dgc_sparsity: float = 0.0
-    # local-training engine: "sequential" | "bucketed" | "masked" (core.fleet)
+    # local-training engine: "sequential" | "bucketed" | "masked" | "fused"
+    # (core.fleet; "fused" = the resident stacks PLUS chunked on-device
+    # round fusion, core.fused)
     engine: str = "sequential"
+    # fused engine: max rounds per lax.scan chunk (0 = auto: fuse up to the
+    # next host boundary — a prune-rate-learning event for adaptcl, 8 rounds
+    # otherwise).  Chunks always end at learning events and churn rounds.
+    round_fusion: int = 0
+    # opt-in cross-round momentum: the resident momentum stack becomes a
+    # true optimizer carry across phases AND rounds (masked/fused engines
+    # only) instead of the per-phase zero restart of the reference engines
+    resident_momentum: bool = False
     # device compute path of the masked engine's programs: "dense" executes
     # base-shape convs under 0/1 masks (full FLOPs), "block_skip" dispatches
     # convs + head through kernels.pruned_matmul so device FLOPs track
@@ -217,15 +227,43 @@ class SimResult:
     # — what a post-prune training step executes, free of warm-up rounds
     flops_per_image_final: float = 0.0
     blocks_per_image_final: float = 0.0
+    # jitted training/round programs LAUNCHED (one per device dispatch): the
+    # resident engine pays O(rounds) of these, the fused engine
+    # O(rounds / round_fusion) — the companion metric to host_roundtrips
+    host_dispatches: int = 0
+    # wall spent inside FIRST calls of each compiled signature (trace +
+    # compile + one execution) — subtract from walltime_s for steady-state
+    compile_walltime_s: float = 0.0
+    # fused engine: number of lax.scan chunk programs launched
+    fused_chunks: int = 0
+    # every pruning event: (round, worker, {layer: retained unit ids}) —
+    # what the cross-engine bit-identity tests compare round-by-round
+    prune_events: List[Tuple[int, int, Dict[str, tuple]]] = dataclasses.field(
+        default_factory=list
+    )
     # final global model (base coordinates) — test/analysis hook
     global_params: Optional[Dict[str, np.ndarray]] = None
 
 
-def _accuracy(params, cfg, x, y, batch=256) -> float:
+def _env_accuracy(env: "_Env", params) -> float:
+    """Test accuracy of a base-shape global model through the trainer's jit
+    cache: one compiled program per test-batch shape instead of op-by-op
+    dispatch (which paid an untracked trace+compile tax on every run).
+    Counted like any other dispatch, so ``host_dispatches`` and
+    ``compile_walltime_s`` stay honest across engines."""
+    cfg = env.sim.cnn
+    x, y = env.task.x_test, env.task.y_test
+    jp = {k: jnp.asarray(v) for k, v in params.items()}
     correct = 0
-    for i in range(0, len(x), batch):
-        logits = cnn_apply({k: jnp.asarray(v) for k, v in params.items()}, cfg, jnp.asarray(x[i : i + batch]))
-        correct += int((np.argmax(np.asarray(logits), -1) == y[i : i + batch]).sum())
+    for i in range(0, len(x), 256):
+        xb = x[i : i + 256]
+        logits = env.trainer._call_cached(
+            ("eval_logits", xb.shape),
+            lambda: jax.jit(lambda p, q: cnn_apply(p, cfg, q)),
+            jp, jnp.asarray(xb),
+            count_compile=False,
+        )
+        correct += int((np.argmax(np.asarray(logits), -1) == y[i : i + 256]).sum())
     return correct / len(x)
 
 
@@ -238,7 +276,15 @@ class _Env:
             raise ValueError(
                 "compute='block_skip' needs the masked (resident) engine — "
                 "the block-keep flags are derived from the 0/1 mask stacks; "
-                "the reconfigured engines already run physically small models"
+                "the reconfigured engines already run physically small "
+                "models, and the fused engine's scan does not carry the "
+                "interpret-mode kernel off-TPU"
+            )
+        if sim.resident_momentum and sim.engine not in ("masked", "fused"):
+            raise ValueError(
+                "resident_momentum needs a resident engine "
+                "(engine='masked' or 'fused') — the cross-round carry IS "
+                "the FleetState momentum stack"
             )
         self.task = sim.task or SyntheticImageTask(
             num_classes=sim.cnn.num_classes, image_size=sim.cnn.image_size,
@@ -288,7 +334,7 @@ class _Env:
                 }
                 bc = cnn_block_compute(self.sim.cnn, masks, self.sim.compute_blocks)
                 cached = (bc["flops"], ideal, bc["blocks"])
-            elif self.sim.engine == "masked":
+            elif self.sim.engine in ("masked", "fused"):
                 # dense masked programs run the base shapes regardless of masks
                 cached = (self.full_flops, ideal, 0.0)
             else:
@@ -331,14 +377,31 @@ class _Env:
 
     def _phi_from_shapes(self, worker, shapes, payload_factor, jitter=True) -> float:
         sim = self.sim
-        bytes_w = payload_factor * sum(int(np.prod(s)) * 4 for s in shapes.values())
+        bytes_raw = sum(int(np.prod(s)) * 4 for s in shapes.values())
         flops_w = cnn_flops_from_shapes(shapes, sim.cnn)
+        jmult = (
+            float(np.exp(self.rng.normal(0, sim.time_jitter)))
+            if jitter and sim.time_jitter > 0 else 1.0
+        )
+        return self.phi_from_cost(worker, bytes_raw, flops_w, payload_factor, jmult)
+
+    def phi_from_cost(
+        self, worker: int, bytes_raw: int, flops_w: float,
+        payload_factor: float = 1.0, jitter_mult: float = 1.0,
+    ) -> float:
+        """The Eq. 6/7 channel model from precomputed payload bytes + FLOPs.
+
+        The ONE implementation behind both the lazy per-round path
+        (``_phi_from_shapes``, which derives the costs from shapes and draws
+        its jitter) and the fused engine's cached path (costs memoized per
+        retained-count signature, jitter pre-drawn) — so the two can't
+        drift and clocks stay engine-identical."""
+        sim = self.sim
+        bytes_w = payload_factor * bytes_raw
         rel = flops_w / self.full_flops
         t_train = sim.t_train_full * ((1 - sim.train_sens) + sim.train_sens * rel)
         t = 2.0 * bytes_w / self.bandwidths[worker] + t_train * sim.local_epochs
-        if jitter and sim.time_jitter > 0:
-            t *= float(np.exp(self.rng.normal(0, sim.time_jitter)))
-        return t
+        return t * jitter_mult
 
     def shard_xy(self, w):
         sh = self.shards[w]
@@ -465,12 +528,15 @@ def _run_sync(sim: SimConfig, env: _Env) -> SimResult:
     cig_scores = None              # frozen at first pruning (CIG principle)
     interval_phis: List[List[float]] = [[] for _ in range(W)]
     prune_round_count = 0
+    prune_events: List[Tuple[int, int, Dict[str, tuple]]] = []
 
     state = None
     pad_a = pad_b = None
     if resident:
         shard_x, shard_y = zip(*(env.shard_xy(w) for w in range(W)))
         state = env.fleet.init_state(env.base_params, list(shard_x), list(shard_y))
+        if sim.resident_momentum:
+            env.fleet.init_momentum(state)
         # constant per-phase step pads (churn keeps shard sizes fixed): every
         # gathered sub-stack shares one plan shape per phase, so recompiles
         # are bounded by the row buckets alone
@@ -496,7 +562,7 @@ def _run_sync(sim: SimConfig, env: _Env) -> SimResult:
     server_overhead = 0.0
     acc_time, het_traj, sim_traj, upd_times = [], [], [], []
     scen_rows: List[Tuple[int, int, int, int]] = []
-    acc0 = _accuracy(global_params, sim.cnn, env.task.x_test, env.task.y_test)
+    acc0 = _env_accuracy(env, global_params)
     acc_time.append((0.0, acc0))
     rt_base = roundtrip_total()    # host extract/embed round-trips in the loop
 
@@ -518,6 +584,13 @@ def _run_sync(sim: SimConfig, env: _Env) -> SimResult:
                 )
                 if resident:
                     env.fleet.update_shard(state, int(w), *env.shard_xy(int(w)))
+                    if sim.resident_momentum:
+                        # a churned-in worker is a FRESH worker: its slot's
+                        # cross-round velocity restarts at zero
+                        state.momentum = {
+                            k: v.at[int(w)].set(0.0)
+                            for k, v in state.momentum.items()
+                        }
             if resident:
                 env.fleet.refresh_masks(state, indices)
         active_ws = [int(w) for w in np.flatnonzero(events.active)]
@@ -551,7 +624,10 @@ def _run_sync(sim: SimConfig, env: _Env) -> SimResult:
         worker_params: Dict[int, Dict[str, np.ndarray]] = {}
         if resident:
             env.fleet.scatter_global(state, global_params)
-            env.fleet.train_rounds(state, plans_a, lam, pad_steps=pad_a)
+            env.fleet.train_rounds(
+                state, plans_a, lam, pad_steps=pad_a,
+                carry_momentum=sim.resident_momentum,
+            )
         else:
             jobs_a = []
             for w in active_ws:
@@ -592,6 +668,10 @@ def _run_sync(sim: SimConfig, env: _Env) -> SimResult:
                         worker=w, params=worker_params[w], index=indices[w],
                         x=x, y=y, plan=plans_b[w],
                     ))
+            prune_events.append((
+                t, int(w),
+                {k: tuple(map(int, v)) for k, v in indices[w].items()},
+            ))
         if resident:
             if pruned_any:
                 env.fleet.refresh_masks(state, indices)
@@ -599,6 +679,7 @@ def _run_sync(sim: SimConfig, env: _Env) -> SimResult:
                     state,
                     [plans_b[w] if prune_now[w] else None for w in range(W)],
                     lam, pad_steps=pad_b,
+                    carry_momentum=sim.resident_momentum,
                 )
         elif jobs_b:
             for job, trained in zip(jobs_b, env.fleet.train_all(jobs_b, lam)):
@@ -720,7 +801,7 @@ def _run_sync(sim: SimConfig, env: _Env) -> SimResult:
         server_overhead += _time.perf_counter() - t0
 
         if t % sim.eval_every == 0:
-            acc_time.append((clock, _accuracy(global_params, sim.cnn, env.task.x_test, env.task.y_test)))
+            acc_time.append((clock, _env_accuracy(env, global_params)))
 
     host_roundtrips = roundtrip_total() - rt_base
     final_costs = [env.cost_for_index(indices[w]) for w in range(W)]
@@ -731,7 +812,8 @@ def _run_sync(sim: SimConfig, env: _Env) -> SimResult:
                      global_params=global_params, host_roundtrips=host_roundtrips,
                      scenario_rounds=scen_rows,
                      flops_per_image_final=float(np.mean([c[0] for c in final_costs])),
-                     blocks_per_image_final=float(np.mean([c[2] for c in final_costs])))
+                     blocks_per_image_final=float(np.mean([c[2] for c in final_costs])),
+                     prune_events=prune_events)
 
 
 def _scores_for(sim: SimConfig, env: _Env, worker, prune_round, params_w, index_w,
@@ -767,6 +849,12 @@ def _run_async(sim: SimConfig, env: _Env) -> SimResult:
     W = sim.num_workers
     lam = sim.lam
     method = sim.method
+    if sim.resident_momentum:
+        raise ValueError(
+            "resident_momentum is a synchronous-round carry; the async "
+            "schedulers restart momentum per commit like their per-worker "
+            "twins"
+        )
     resident = sim.engine == "masked"
     global_params = dict(env.base_params)
     idx = full_index(env.space)
@@ -816,7 +904,7 @@ def _run_async(sim: SimConfig, env: _Env) -> SimResult:
     commits = 0
     clock = 0.0
     comm_bytes = 0.0
-    acc_time = [(0.0, _accuracy(global_params, sim.cnn, env.task.x_test, env.task.y_test))]
+    acc_time = [(0.0, _env_accuracy(env, global_params))]
     heap: List[Tuple[float, int]] = []
     rt_base = roundtrip_total()
 
@@ -908,7 +996,7 @@ def _run_async(sim: SimConfig, env: _Env) -> SimResult:
                         still.append(bw)
                 blocked = [b for b in still if rounds_done[b] < sim.rounds]
             if commits % n_part == 0:
-                acc_time.append((clock, _accuracy(global_params, sim.cnn, env.task.x_test, env.task.y_test)))
+                acc_time.append((clock, _env_accuracy(env, global_params)))
 
     host_roundtrips = roundtrip_total() - rt_base
     scen_rows = [(0, n_part, 0, 0)] if scen is not None else []
@@ -926,7 +1014,8 @@ def _finalize(sim, env, acc_time, het_traj, sim_traj, upd_times, retentions,
               worker_params, comm_bytes, server_overhead, clock,
               global_params=None, host_roundtrips=0,
               scenario_rounds=None, flops_per_image_final=0.0,
-              blocks_per_image_final=0.0) -> SimResult:
+              blocks_per_image_final=0.0, prune_events=None,
+              fused_chunks=0) -> SimResult:
     accs = np.array([a for _, a in acc_time])
     times = np.array([t for t, _ in acc_time])
     best = int(np.argmax(accs))
@@ -952,6 +1041,10 @@ def _finalize(sim, env, acc_time, het_traj, sim_traj, upd_times, retentions,
         engine=sim.engine,
         batched_calls=env.fleet.batched_calls,
         host_roundtrips=host_roundtrips,
+        host_dispatches=env.trainer.dispatch_count,
+        compile_walltime_s=env.trainer.compile_walltime_s,
+        fused_chunks=fused_chunks,
+        prune_events=prune_events or [],
         scenario_rounds=scenario_rounds or [],
         bucket_sizes=sorted(env.fleet.buckets_used),
         compute=sim.compute,
@@ -969,8 +1062,17 @@ def run_simulation(sim: SimConfig) -> SimResult:
     t0 = _time.perf_counter()
     env = _Env(sim)
     if sim.method in ("adaptcl", "fedavg", "fedavg_s"):
-        result = _run_sync(sim, env)
+        if sim.engine == "fused":
+            from .fused import run_sync_fused   # lazy: fused imports us back
+
+            result = run_sync_fused(sim, env)
+        else:
+            result = _run_sync(sim, env)
     elif sim.method in ("fedasync_s", "ssp_s", "dcasgd_s"):
+        if sim.engine == "fused":
+            from .fused import validate_fused_config
+
+            validate_fused_config(sim)  # raises: async is not fusable
         result = _run_async(sim, env)
     else:
         raise ValueError(f"unknown method {sim.method}")

@@ -28,6 +28,7 @@ that is what makes the engines numerically equivalent.
 from __future__ import annotations
 
 import dataclasses
+import time as _time
 from typing import Dict, List, Mapping, Optional, Sequence, Tuple
 
 import jax
@@ -182,6 +183,38 @@ class LocalTrainer:
         self._prunable = prunable_layer_names(cnn_cfg)
         self._step_cache: Dict = {}
         self.compile_count = 0  # reconfigure-induced recompiles (overhead bench)
+        self.dispatch_count = 0  # jitted training programs launched (host->device)
+        self.compile_walltime_s = 0.0  # wall spent in FIRST calls (compile + 1 run)
+
+    # ---- jit-cache plumbing ----------------------------------------------
+
+    def _call_cached(self, sig, build, *args, count_compile: bool = True):
+        """Dispatch a jitted program through the signature cache.
+
+        Every call counts toward ``dispatch_count`` (the per-round host
+        dispatch metric ``SimResult.host_dispatches`` reports); the FIRST
+        call of each signature is timed to completion (``block_until_ready``)
+        and accumulated into ``compile_walltime_s``, so benchmarks can
+        separate warm-up (trace + compile + one run) from steady-state
+        walltime.  ``count_compile=False`` keeps a signature out of
+        ``compile_count`` (``SimResult.recompiles`` means *training-program*
+        recompiles — evaluation helpers are timed but not counted there)."""
+        entry = self._step_cache.get(sig)
+        if entry is None:
+            entry = [build(), False]
+            self._step_cache[sig] = entry
+            if count_compile:
+                self.compile_count += 1
+        self.dispatch_count += 1
+        fn, warm = entry
+        if warm:
+            return fn(*args)
+        t0 = _time.perf_counter()
+        out = fn(*args)
+        jax.block_until_ready(out)
+        self.compile_walltime_s += _time.perf_counter() - t0
+        entry[1] = True
+        return out
 
     def _masked_logits(self, qm, mask, xb):
         """Logits of the masked base-shape model; the block-skip path reads
@@ -215,14 +248,11 @@ class LocalTrainer:
 
         return loss_fn
 
-    def _get_grad(self, params: Params, unit_map, lam: float):
+    def _grad_call(self, params: Params, unit_map, lam: float, *args):
         sig = self._plan_sig(params, "grad", lam)
-        fn = self._step_cache.get(sig)
-        if fn is None:
-            fn = jax.jit(jax.grad(self._make_loss(unit_map, lam)))
-            self._step_cache[sig] = fn
-            self.compile_count += 1
-        return fn
+        return self._call_cached(
+            sig, lambda: jax.jit(jax.grad(self._make_loss(unit_map, lam))), *args
+        )
 
     def train(
         self,
@@ -307,12 +337,9 @@ class LocalTrainer:
         if plan.shape[0] == 0:
             return {k: np.asarray(v) for k, v in params.items()}, float("nan")
         sig = self._plan_sig(params, ("plan", x.shape, plan.shape), lam)
-        fn = self._step_cache.get(sig)
-        if fn is None:
-            fn = jax.jit(self._make_plan_train(unit_map, lam, masked=False))
-            self._step_cache[sig] = fn
-            self.compile_count += 1
-        p, loss = fn(
+        p, loss = self._call_cached(
+            sig,
+            lambda: jax.jit(self._make_plan_train(unit_map, lam, masked=False)),
             {k: jnp.asarray(v) for k, v in params.items()},
             jnp.asarray(x), jnp.asarray(y), jnp.asarray(plan),
         )
@@ -346,11 +373,6 @@ class LocalTrainer:
         sig = self._plan_sig(
             params_list[0], ("many", B, xs.shape[1:], plans.shape[1:], masked), lam
         )
-        fn = self._step_cache.get(sig)
-        if fn is None:
-            fn = jax.jit(jax.vmap(self._make_plan_train(unit_map, lam, masked=masked)))
-            self._step_cache[sig] = fn
-            self.compile_count += 1
         args = [stacked, jnp.asarray(xs), jnp.asarray(ys), jnp.asarray(plans)]
         if masked:
             args.append({
@@ -363,7 +385,11 @@ class LocalTrainer:
                 lname: jnp.asarray([s[lname] for s in gl_sizes], jnp.float32)
                 for lname in gl_sizes[0]
             })
-        out, losses = fn(*args)
+        out, losses = self._call_cached(
+            sig,
+            lambda: jax.jit(jax.vmap(self._make_plan_train(unit_map, lam, masked=masked))),
+            *args,
+        )
         return (
             [{k: np.asarray(v[i]) for k, v in out.items()} for i in range(B)],
             [float(l) for l in losses],
@@ -371,19 +397,26 @@ class LocalTrainer:
 
     # ---- resident fleet path (core.fleet.FleetState) ---------------------
 
-    def _make_resident_train(self, unit_map, lam: float):
+    def make_resident_train(self, unit_map, lam: float, carry_momentum: bool = False):
         """One base-shape masked worker with step-validity gating; vmapped
-        across the whole resident ``[W, ...]`` stack by ``train_resident``.
+        across the whole resident ``[W, ...]`` stack by ``train_resident``
+        (and embedded, un-jitted, inside the fused round engine's scan).
 
         Valid steps replicate the masked ``_make_plan_train`` step exactly;
         an invalid step computes-and-discards (params, momentum and loss all
         keep their carry), which is how ragged plans and non-participating
         workers share one compiled program.
+
+        ``carry_momentum`` switches the optimizer state from the per-phase
+        reset of the reference engines to a caller-supplied carry: the
+        returned ``train_one`` then takes the incoming momentum stack as an
+        extra leading state argument (the cross-round resident-momentum
+        mode), instead of ``opt.init``-ing zeros every phase.
         """
         cfg, opt = self.cfg, momentum(self.lr, self.beta)
         frozen_map = {k: tuple(v) for k, v in unit_map.items()}
 
-        def train_one(p, x, y, plan, valid, mask, gl_size):
+        def train_one(p, x, y, plan, valid, mask, gl_size, m0=None):
             def loss_fn(q, xb, yb):
                 qm = jax.tree.map(lambda w, m: w * m, q, mask)
                 l = self._masked_ce(qm, mask, xb, yb)
@@ -391,7 +424,7 @@ class LocalTrainer:
                     l = l + group_lasso_penalty(qm, frozen_map, lam, size_sqrt=gl_size)
                 return l
 
-            opt_state = opt.init(p)
+            opt_state = m0 if carry_momentum else opt.init(p)
 
             def body(carry, step):
                 sel, v = step
@@ -422,19 +455,28 @@ class LocalTrainer:
         valid: jnp.ndarray,                     # [W, steps] 1.0 = real step
         lam: float = 0.0,
         gl_sizes: Optional[Dict[str, jnp.ndarray]] = None,   # {lname: [W]}
+        momentum_in: Optional[Dict[str, jnp.ndarray]] = None,  # [W, ...] carry
     ):
         """One jitted program over the ENTIRE resident fleet stack.
 
         Returns (params_stack, momentum_stack, losses[W]) — all stacks stay
-        jnp arrays, so nothing round-trips through the host.
+        jnp arrays, so nothing round-trips through the host.  When
+        ``momentum_in`` is given, the optimizer state starts from that stack
+        instead of zeros (cross-round resident momentum; the returned
+        momentum stack is the carry for the next phase/round).
         """
+        carry_m = momentum_in is not None
         shapes_sig = tuple(sorted((k, tuple(v.shape)) for k, v in params_stack.items()))
-        sig = (shapes_sig, ("resident", xs.shape, plans.shape), float(lam))
-        fn = self._step_cache.get(sig)
-        if fn is None:
-            fn = jax.jit(jax.vmap(self._make_resident_train(unit_map, lam)))
-            self._step_cache[sig] = fn
-            self.compile_count += 1
+        sig = (shapes_sig, ("resident", xs.shape, plans.shape, carry_m), float(lam))
+
+        def build():
+            one = self.make_resident_train(unit_map, lam, carry_momentum=carry_m)
+            if carry_m:
+                def with_m(p, m0, x, y, plan, valid, mask, gl_size):
+                    return one(p, x, y, plan, valid, mask, gl_size, m0)
+                return jax.jit(jax.vmap(with_m))
+            return jax.jit(jax.vmap(one))
+
         if gl_sizes is None:   # base-shape factors for every worker
             W = plans.shape[0]
             gl_sizes = {
@@ -443,12 +485,22 @@ class LocalTrainer:
                     {k: v[0] for k, v in params_stack.items()}, unit_map
                 ).items()
             }
-        return fn(params_stack, xs, ys, plans, valid, masks_stack, gl_sizes)
+        if carry_m:
+            return self._call_cached(
+                sig, build, params_stack, momentum_in, xs, ys, plans, valid,
+                masks_stack, gl_sizes,
+            )
+        return self._call_cached(
+            sig, build, params_stack, xs, ys, plans, valid, masks_stack, gl_sizes
+        )
 
     def gradient(self, params: Params, unit_map, x, y, lam: float = 0.0) -> Params:
         """One-batch gradient (DC-ASGD commits gradients, not models)."""
-        grad_fn = self._get_grad(params, unit_map, lam)
-        g = grad_fn({k: jnp.asarray(v) for k, v in params.items()}, jnp.asarray(x), jnp.asarray(y))
+        g = self._grad_call(
+            params, unit_map, lam,
+            {k: jnp.asarray(v) for k, v in params.items()},
+            jnp.asarray(x), jnp.asarray(y),
+        )
         return {k: np.asarray(v) for k, v in g.items()}
 
     # ---- Alg. 1 lines 3-5: prune + reconfigure ---------------------------

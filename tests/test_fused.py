@@ -1,0 +1,273 @@
+"""Fused round engine contracts (core.fused).
+
+Pins down:
+  * fused == resident == sequential equivalence — final acc within 1e-3,
+    identical scenario event streams, and per-round prune indices
+    BIT-identical (``SimResult.prune_events``), including under sampling,
+    dropout, churn and phase-B training;
+  * the device ``prune_presence_rows`` greedy vs the host
+    ``prune_to_budget`` — exact retained sets, including score
+    tie-breaking and min_units skips;
+  * host-dispatch economics: fused runs launch O(rounds / round_fusion)
+    jitted programs (``host_dispatches``), the resident engine O(rounds),
+    with fused recompiles bounded by the chunk signature count;
+  * cross-round resident momentum (opt-in): fused == masked, and both
+    differ from the per-phase-reset reference.
+"""
+import numpy as np
+import pytest
+
+from repro.core.masks import (
+    flatten_unit_space,
+    full_index,
+    index_from_presence,
+    presence_from_index,
+    prune_budget_units,
+    prune_order,
+    prune_presence_rows,
+    prune_to_budget,
+)
+from repro.core.scenario import ScenarioConfig
+from repro.core.simulation import SimConfig, run_simulation
+from repro.core.timing import HeterogeneityConfig
+from repro.models.cnn import build_unit_space, init_cnn, vgg_config
+
+TINY = vgg_config("vgg_tiny_fused", [8, "M", 16], num_classes=4, image_size=8)
+
+
+def _sim(engine, **kw):
+    base = dict(
+        method="adaptcl",
+        engine=engine,
+        rounds=6,
+        prune_interval=2,
+        num_workers=5,
+        batch_size=16,
+        cnn=TINY,
+        het=HeterogeneityConfig(num_workers=5, sigma=3.0),
+        eval_every=2,
+        seed=5,
+    )
+    base.update(kw)
+    return run_simulation(SimConfig(**base))
+
+
+def _assert_equivalent(ref, fused, *, bit_identical_prunes=True):
+    assert abs(ref.final_acc - fused.final_acc) <= 1e-3
+    assert ref.scenario_rounds == fused.scenario_rounds
+    if bit_identical_prunes:
+        assert ref.prune_events == fused.prune_events
+    # the channel model consumed identical indices + jitter draws
+    np.testing.assert_allclose(
+        np.array(ref.update_times), np.array(fused.update_times),
+        rtol=0, atol=0, equal_nan=True,
+    )
+    assert ref.total_time == pytest.approx(fused.total_time, abs=1e-9)
+
+
+# ---------------------------------------------------------------------------
+# equivalence: fused == resident == sequential
+# ---------------------------------------------------------------------------
+
+def test_fused_matches_sequential_and_resident():
+    seq = _sim("sequential")
+    res = _sim("masked")
+    fus = _sim("fused")
+    _assert_equivalent(seq, fus)
+    _assert_equivalent(res, fus)
+    assert len(fus.prune_events) > 0
+    assert fus.host_roundtrips == 0
+    assert fus.fused_chunks == 3          # 6 rounds / PI=2 chunks
+
+
+@pytest.mark.parametrize("scen", [
+    ScenarioConfig(participation=0.6, seed=1),
+    ScenarioConfig(participation=0.8, dropout=0.2, churn=0.15, seed=2),
+])
+def test_fused_scenario_streams_identical(scen):
+    seq = _sim("sequential", scenario=scen)
+    fus = _sim("fused", scenario=scen)
+    _assert_equivalent(seq, fus)
+    assert len(fus.scenario_rounds) == 6
+
+
+@pytest.mark.slow
+def test_fused_phase_b_and_by_unit():
+    for kw in (dict(beta=0.5), dict(aggregation="by_unit")):
+        seq = _sim("sequential", **kw)
+        fus = _sim("fused", **kw)
+        _assert_equivalent(seq, fus)
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("importance", ["index", "l1", "taylor"])
+def test_fused_importance_criteria(importance):
+    # l1/taylor are scored ON DEVICE in the fused engine (float32) — the
+    # retained sets still match the host float64 path on this fixture
+    seq = _sim("sequential", importance=importance)
+    fus = _sim("fused", importance=importance)
+    _assert_equivalent(seq, fus)
+
+
+@pytest.mark.slow
+def test_fused_round_fusion_cap_spans_learning_intervals():
+    # K=2 < PI=3: two chunks per interval, boundaries still at learn events
+    seq = _sim("sequential", rounds=7, prune_interval=3)
+    fus = _sim("fused", rounds=7, prune_interval=3, round_fusion=2)
+    _assert_equivalent(seq, fus)
+    assert fus.fused_chunks == 5          # 2+1 | 2+1 | 1
+
+
+# ---------------------------------------------------------------------------
+# device prune_to_budget vs host: exact indices incl. tie-breaking
+# ---------------------------------------------------------------------------
+
+def _space():
+    import jax
+
+    params = {
+        k: np.asarray(v) for k, v in init_cnn(jax.random.PRNGKey(0), TINY).items()
+    }
+    space, _ = build_unit_space(TINY, params)
+    return space
+
+
+@pytest.mark.parametrize("case", ["random", "ties", "minunits", "zero"])
+def test_device_prune_matches_host_golden(case):
+    space = _space()
+    flat = flatten_unit_space(space)
+    rng = np.random.default_rng(3)
+    if case == "ties":
+        # massive score collisions: the (layer_name, unit) tie-break decides
+        scores = {
+            l.name: rng.integers(0, 3, l.num_units).astype(np.float64)
+            for l in space.layers
+        }
+        rates = [0.3, 0.55]
+    elif case == "minunits":
+        # deep cut: min_units guards fire and skipped layers keep budget
+        scores = {l.name: rng.normal(size=l.num_units) for l in space.layers}
+        rates = [0.97]
+    elif case == "zero":
+        scores = {l.name: rng.normal(size=l.num_units) for l in space.layers}
+        rates = [0.0]
+    else:
+        scores = {l.name: rng.normal(size=l.num_units) for l in space.layers}
+        rates = [0.2, 0.4, 0.7]
+    index = full_index(space)
+    for rate in rates:
+        host = prune_to_budget(index, scores, rate, space)
+        order = prune_order(scores, flat)
+        budget = prune_budget_units(index, rate, space)
+        pres = presence_from_index(index, flat)[None]
+        out = np.asarray(prune_presence_rows(
+            pres, order[None], np.asarray([budget], np.int32), flat
+        ))[0]
+        dev = index_from_presence(out, flat)
+        for lname in host:
+            np.testing.assert_array_equal(
+                host[lname], dev[lname],
+                err_msg=f"{case} rate={rate} layer={lname}",
+            )
+        index = host   # chain prunes so nested-index paths are covered too
+
+
+def test_presence_roundtrip():
+    space = _space()
+    flat = flatten_unit_space(space)
+    rng = np.random.default_rng(0)
+    scores = {l.name: rng.normal(size=l.num_units) for l in space.layers}
+    idx = prune_to_budget(full_index(space), scores, 0.4, space)
+    back = index_from_presence(presence_from_index(idx, flat), flat)
+    for lname in idx:
+        np.testing.assert_array_equal(idx[lname], back[lname])
+
+
+# ---------------------------------------------------------------------------
+# host-dispatch + recompile economics
+# ---------------------------------------------------------------------------
+
+def test_fused_dispatches_scale_with_chunks_not_rounds():
+    rounds, fusion = 8, 4
+    res = _sim("masked", rounds=rounds, prune_interval=4, eval_every=rounds)
+    fus = _sim("fused", rounds=rounds, prune_interval=4, round_fusion=fusion,
+               eval_every=rounds)
+    # the initial + final accuracy evals go through the counted jit cache
+    # too (2 evals x ceil(512 test images / 256) batches) — identical for
+    # every engine, so subtract them to see the round-loop dispatches
+    eval_calls = 2 * 2
+    # fused: one jitted launch per chunk, O(R / round_fusion)
+    assert fus.fused_chunks == rounds // fusion
+    assert fus.host_dispatches == fus.fused_chunks + eval_calls
+    # resident pays at least one dispatch per round (phase A) + prune phases
+    assert res.host_dispatches >= rounds + eval_calls
+    assert (fus.host_dispatches - eval_calls) * 3 <= (
+        res.host_dispatches - eval_calls
+    )
+    # recompiles bounded by distinct chunk signatures (padding makes it 1),
+    # vs the resident engine's (phase shapes x buckets) — never O(rounds)
+    assert fus.recompiles <= 2
+    assert fus.compile_walltime_s <= fus.walltime_s
+
+
+def test_fused_zero_host_roundtrips():
+    fus = _sim("fused", scenario=ScenarioConfig(participation=0.6, seed=1))
+    assert fus.host_roundtrips == 0
+
+
+# ---------------------------------------------------------------------------
+# cross-round resident momentum (opt-in optimizer mode)
+# ---------------------------------------------------------------------------
+
+def test_resident_momentum_fused_matches_masked():
+    mas = _sim("masked", resident_momentum=True)
+    fus = _sim("fused", resident_momentum=True)
+    _assert_equivalent(mas, fus)
+    drift = max(
+        float(np.max(np.abs(mas.global_params[k] - fus.global_params[k])))
+        for k in mas.global_params
+    )
+    assert drift <= 1e-3
+
+
+def test_resident_momentum_differs_from_reset_and_is_gated():
+    reset = _sim("masked")
+    mom = _sim("masked", resident_momentum=True)
+    drift = max(
+        float(np.max(np.abs(reset.global_params[k] - mom.global_params[k])))
+        for k in reset.global_params
+    )
+    assert drift > 1e-6      # the carry actually changes the trajectory
+    with pytest.raises(ValueError, match="resident"):
+        _sim("sequential", resident_momentum=True)
+
+
+def test_resident_momentum_under_sampling():
+    scen = ScenarioConfig(participation=0.6, seed=3)
+    mas = _sim("masked", resident_momentum=True, scenario=scen)
+    fus = _sim("fused", resident_momentum=True, scenario=scen)
+    _assert_equivalent(mas, fus)
+
+
+@pytest.mark.slow
+def test_resident_momentum_under_churn():
+    # churn must zero the replaced slot's velocity in BOTH resident engines
+    scen = ScenarioConfig(participation=0.8, dropout=0.1, churn=0.2, seed=4)
+    mas = _sim("masked", resident_momentum=True, scenario=scen)
+    fus = _sim("fused", resident_momentum=True, scenario=scen)
+    _assert_equivalent(mas, fus)
+
+
+# ---------------------------------------------------------------------------
+# unsupported-config guards
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("kw,frag", [
+    (dict(method="fedasync_s"), "async"),
+    (dict(dgc_sparsity=0.5), "DGC"),
+    (dict(importance="hrank"), "criteria"),
+    (dict(compute="block_skip"), "block_skip"),
+])
+def test_fused_rejects_unsupported(kw, frag):
+    with pytest.raises(ValueError, match=frag):
+        _sim("fused", **kw)
