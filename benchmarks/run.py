@@ -10,11 +10,14 @@ resident masked engine against the sequential reference.  Results land in
 ``BENCH_scale.json`` so the perf trajectory is tracked across PRs.
 
 ``async_scale`` is the asynchronous analogue: W in {10, 50, 200} x scheduler
-(fedasync_s / ssp_s / dcasgd_s) x participation C, all on the resident masked
-engine with window batching.  It tracks walltime, recompiles vs the sub-stack
-bucket count, and zero host round-trips; at C=0.1 the W=200 walltime should
-stay within a small factor of W=50 because device compute is sized to the
-C*W participants, not the slot pool.  Results land in ``BENCH_async.json``.
+(fedasync_s / ssp_s / dcasgd_s) x participation C x engine {masked, fused}.
+Rows split ``compile_walltime_s`` from steady walltime (like BENCH_fused /
+BENCH_retention) and report steady events/sec; checks pin fused dispatch
+counts strictly below the resident engine's in every cell, a >= 1.3x steady
+events/sec speedup at the largest W, and zero host round-trips; at C=0.1
+the W=200 walltime should stay within a small factor of W=50 because device
+compute is sized to the C*W participants, not the slot pool.  Results land
+in ``BENCH_async.json``.
 
 Engine x scheduler support matrix (see README.md): every method runs on
 ``sequential``/``bucketed``/``masked``; the resident zero-round-trip path
@@ -114,14 +117,20 @@ def scale(out_path: str = "BENCH_scale.json", quick: bool = False) -> None:
 
 
 def async_scale(out_path: str = "BENCH_async.json", quick: bool = False) -> None:
-    """Async fleet-scaling bench: W x scheduler x participation C, resident.
+    """Async fleet-scaling bench: W x scheduler x participation C x engine.
 
-    Every cell runs the resident masked engine with window batching: the
-    async loop is extract/embed-free (``host_roundtrips == 0``), merges
-    consume the stacked aggregate, and each window batch trains as ONE
-    bucket-sized sub-stack program — so at C < 1 device FLOPs (and walltime)
-    track the C*W participants instead of the W-slot pool, and recompiles
-    stay bounded by the bucket count."""
+    Every cell runs with window batching and zero host round-trips; the
+    resident masked engine pays one jit dispatch per window batch, while the
+    fused engine (``core.fused.run_async_fused``) runs chunks of window
+    batches as single ``lax.scan`` programs — O(events / round_fusion) host
+    dispatches with bit-identical commit schedules (the fused driver hard
+    errors on divergence).  Rows split ``compile_walltime_s`` (trace +
+    compile + first execution) from steady walltime, so the fused speedup is
+    measured on steady-state events/sec — the largest-W full-cohort cells
+    run interleaved masked/fused repetitions and the check takes the median
+    of per-pair speedups.  At C < 1 device compute tracks the C*W
+    participants instead of the slot pool, and recompiles stay bounded by
+    the bucket/signature count."""
     from repro.core.scenario import ScenarioConfig
     from repro.core.simulation import SimConfig, run_simulation
     from repro.core.timing import HeterogeneityConfig
@@ -134,50 +143,100 @@ def async_scale(out_path: str = "BENCH_async.json", quick: bool = False) -> None
     schedulers = ("fedasync_s", "ssp_s", "dcasgd_s")
     rows = []
     print("name,value,derived")
+
+    def cell(engine, W, method, C):
+        scen = None if C >= 1.0 else ScenarioConfig(participation=C, seed=1)
+        n_part = W if C >= 1.0 else min(W, max(1, round(C * W)))
+        r = run_simulation(SimConfig(
+            method=method, engine=engine, scenario=scen,
+            rounds=rounds, num_workers=W, batch_size=8, cnn=cnn,
+            async_window=1000.0, eval_every=rounds,
+            het=HeterogeneityConfig(num_workers=W, sigma=5.0),
+            seed=7,
+        ))
+        assert r.host_roundtrips == 0, "resident async must not round-trip"
+        events = n_part * rounds
+        steady = max(r.walltime_s - r.compile_walltime_s, 1e-9)
+        row = dict(
+            workers=W, engine=engine, scheduler=method, participation=C,
+            rounds=rounds, events=events, walltime_s=r.walltime_s,
+            compile_walltime_s=r.compile_walltime_s,
+            steady_walltime_s=steady,
+            events_per_sec_steady=events / steady,
+            host_dispatches=r.host_dispatches, fused_chunks=r.fused_chunks,
+            recompiles=r.recompiles, batched_calls=r.batched_calls,
+            bucket_sizes=r.bucket_sizes,
+            host_roundtrips=r.host_roundtrips,
+            final_acc=r.final_acc, total_time=r.total_time,
+        )
+        rows.append(row)
+        print(
+            f"async_scale/W{W}/{engine}/{method}/C{C},"
+            f"{events / steady:.2f}eps,"
+            f"wall={r.walltime_s:.2f}s;compile={r.compile_walltime_s:.2f}s;"
+            f"dispatches={r.host_dispatches};recompiles={r.recompiles};"
+            f"acc={r.final_acc:.3f}"
+        )
+        return row
+
+    hi = worker_counts[-1]
+    pair_speedups = {m: [] for m in schedulers}
     for W in worker_counts:
         for method in schedulers:
             for C in parts:
-                scen = None if C >= 1.0 else ScenarioConfig(
-                    participation=C, seed=1
-                )
-                r = run_simulation(SimConfig(
-                    method=method, engine="masked", scenario=scen,
-                    rounds=rounds, num_workers=W, batch_size=8, cnn=cnn,
-                    async_window=1000.0, eval_every=rounds,
-                    het=HeterogeneityConfig(num_workers=W, sigma=5.0),
-                    seed=7,
-                ))
-                assert r.host_roundtrips == 0, "resident async must not round-trip"
-                rows.append(dict(
-                    workers=W, scheduler=method, participation=C,
-                    rounds=rounds, walltime_s=r.walltime_s,
-                    recompiles=r.recompiles, batched_calls=r.batched_calls,
-                    bucket_sizes=r.bucket_sizes,
-                    host_roundtrips=r.host_roundtrips,
-                    final_acc=r.final_acc, total_time=r.total_time,
-                ))
-                print(
-                    f"async_scale/W{W}/{method}/C{C},{r.walltime_s:.2f}s,"
-                    f"recompiles={r.recompiles};buckets={r.bucket_sizes};"
-                    f"batched={r.batched_calls};acc={r.final_acc:.3f}"
-                )
-    by = {(row["workers"], row["scheduler"], row["participation"]): row
-          for row in rows}
-    lo, hi = worker_counts[-2], worker_counts[-1]
+                rm = cell("masked", W, method, C)
+                rf = cell("fused", W, method, C)
+                if W == hi and C == 1.0:
+                    pair_speedups[method].append(
+                        rm["steady_walltime_s"] / rf["steady_walltime_s"]
+                    )
+    for _ in range(0 if quick else 2):   # extra interleaved reps (see doc)
+        for method in schedulers:
+            rm = cell("masked", hi, method, 1.0)
+            rf = cell("fused", hi, method, 1.0)
+            pair_speedups[method].append(
+                rm["steady_walltime_s"] / rf["steady_walltime_s"]
+            )
+
+    by = {}
+    for row in rows:   # first occurrence wins (reps re-measure walltime only)
+        key = (row["workers"], row["engine"], row["scheduler"],
+               row["participation"])
+        by.setdefault(key, row)
+    lo = worker_counts[-2]
     c_lo = min(parts)
     ratios = {}
     for method in schedulers:
-        ratio = (by[(hi, method, c_lo)]["walltime_s"]
-                 / max(by[(lo, method, c_lo)]["walltime_s"], 1e-9))
+        ratio = (by[(hi, "masked", method, c_lo)]["steady_walltime_s"]
+                 / max(by[(lo, "masked", method, c_lo)]["steady_walltime_s"],
+                       1e-9))
         ratios[method] = ratio
         print(f"async_scale/{method}_W{hi}_over_W{lo}/C{c_lo},{ratio:.2f}x,"
               f"participation-sized compute (target ~<1.5x)")
+    speedup = {
+        m: sorted(s)[len(s) // 2] for m, s in pair_speedups.items()
+    }
+    checks = {
+        # fused must dispatch strictly fewer programs than resident in EVERY
+        # cell — O(events/K) chunks + evals vs one dispatch per window batch
+        "fused_dispatches_strictly_below_resident": all(
+            by[(W, "fused", m, C)]["host_dispatches"]
+            < by[(W, "masked", m, C)]["host_dispatches"]
+            for W in worker_counts for m in schedulers for C in parts
+        ),
+        "steady_speedup_at_max_W": speedup,
+        "steady_speedup_samples": pair_speedups,
+        "steady_speedup_ge_1_3x": all(s >= 1.3 for s in speedup.values()),
+        "walltime_ratio_hi_over_lo_at_min_C": ratios,
+    }
+    for k, v in checks.items():
+        print(f"async_scale/{k},{v},")
     with open(out_path, "w") as f:
         json.dump({
             "rows": rows,
             "worker_counts": list(worker_counts),
             "participations": list(parts),
-            "walltime_ratio_hi_over_lo_at_min_C": ratios,
+            "checks": checks,
         }, f, indent=2)
     print(f"async_scale/json,{out_path},")
 

@@ -32,7 +32,9 @@ per-worker and the resident scheduler paths, so the stacked rewrite cannot
 drift from the reference semantics (pinned by the golden staleness tests).
 The resident path feeds it rows of the ``[B, ...]`` trained sub-stack pulled
 once per fleet call (the "stacked aggregate out"); the per-worker path feeds
-it per-worker dicts.
+it per-worker dicts.  ``async_commit_jnp`` is the pure-``jnp`` twin of
+``AsyncServer.commit`` that the fused async engine calls inside its
+``lax.scan`` commit walk.
 
 ``extract_subparams`` and ``embed_params`` count their invocations in
 ``ROUNDTRIP_COUNTS`` so the simulator can assert that the resident engine
@@ -65,6 +67,7 @@ __all__ = [
     "aggregate_by_unit_stacked_jnp",
     "fedasync_weight",
     "AsyncServer",
+    "async_commit_jnp",
     "ROUNDTRIP_COUNTS",
     "roundtrip_total",
     "reset_roundtrip_counts",
@@ -348,6 +351,53 @@ class AsyncServer:
         self.params = new
         self.version += 1
         return new
+
+
+def async_commit_jnp(
+    method: str,
+    g: Dict[str, jnp.ndarray],          # global params {path: [...]}
+    trained: Dict[str, jnp.ndarray],    # committing worker's trained params
+    fetched_w: Dict[str, jnp.ndarray],  # the global it fetched before training
+    staleness: jnp.ndarray,             # scalar (int or float)
+    worker: jnp.ndarray,                # scalar int32 slot id (traced OK)
+    backup: Dict[str, jnp.ndarray],     # dcasgd {path: [W, ...]} ({} otherwise)
+    dc_m: Dict[str, jnp.ndarray],       # dcasgd accumulator ({} otherwise)
+    *,
+    cohort_size: int,
+    fedasync_a: float,
+    lr: float,
+    dcasgd_lambda: float,
+    dcasgd_m: float,
+) -> Tuple[Dict[str, jnp.ndarray], Dict[str, jnp.ndarray], Dict[str, jnp.ndarray]]:
+    """Pure-``jnp`` :meth:`AsyncServer.commit` — the fused async engine's
+    in-scan server step.  ``method`` is Python-static (one branch traces);
+    ``staleness``/``worker`` are traced scalars.  UNGATED: it always computes
+    the merge — the caller masks dropped/padding commits with ``jnp.where``
+    on the returned state.  Numerics: float32 on device vs the host server's
+    float64 accumulate; the engine-equivalence tests bound the drift."""
+    if method == "fedasync_s":
+        a = fedasync_a * (staleness.astype(jnp.float32) + 1.0) ** -0.5
+        new = {k: (1 - a) * g[k] + a * trained[k] for k in g}
+        return new, backup, dc_m
+    if method == "ssp_s":
+        new = {
+            k: g[k] + (trained[k] - fetched_w[k]) / cohort_size for k in g
+        }
+        return new, backup, dc_m
+    if method == "dcasgd_s":
+        new = {}
+        dc_m2 = {}
+        backup2 = {}
+        for k in g:
+            grad = (fetched_w[k] - trained[k]) / lr
+            dc_m2[k] = dcasgd_m * dc_m[k] + (1 - dcasgd_m) * grad * grad
+            lam_t = dcasgd_lambda / jnp.sqrt(jnp.mean(dc_m2[k]) + 1e-12)
+            comp = grad + lam_t * grad * grad * (g[k] - backup[k][worker])
+            new[k] = g[k] - lr * comp
+        for k in new:
+            backup2[k] = backup[k].at[worker].set(new[k])
+        return new, backup2, dc_m2
+    raise ValueError(f"unknown async method {method!r}")
 
 
 def aggregate_by_unit_stacked(

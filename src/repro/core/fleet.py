@@ -99,6 +99,7 @@ __all__ = [
     "bucket_rows",
     "gather_stack_rows",
     "scatter_stack_rows",
+    "refetch_rows_jnp",
     "masks_from_presence",
     "gl_factors_from_counts",
 ]
@@ -191,6 +192,25 @@ def scatter_stack_rows(
     idx = jnp.asarray(np.asarray(rows, np.int64))
     n = len(rows)
     return {k: v.at[idx].set(sub[k][:n]) for k, v in stacks.items()}
+
+
+def refetch_rows_jnp(
+    fetched: Mapping[str, jnp.ndarray],   # {path: [W, ...]} fetched snapshots
+    refetch_mask: jnp.ndarray,            # [W] 0/1: rows refetching the global
+    global_p: Mapping[str, jnp.ndarray],  # {path: [...]} current global
+) -> Dict[str, jnp.ndarray]:
+    """Masked refetch: rows flagged in ``refetch_mask`` take the current
+    global, the rest keep their snapshot — the fused async engine's in-scan
+    twin of ``fetched[w] = dict(global_params)`` (``refetch_mask`` is traced,
+    so SSP's data-dependent unblock refetches stay inside the scan)."""
+    return {
+        k: jnp.where(
+            refetch_mask.reshape((-1,) + (1,) * (v.ndim - 1)) > 0,
+            global_p[k][None],
+            v,
+        )
+        for k, v in fetched.items()
+    }
 
 
 @dataclasses.dataclass

@@ -48,11 +48,28 @@ channel model, after the chunk has already run.  Per-round aggregated
 globals come back as stacked scan outputs, so ``eval_every`` never forces a
 chunk split.
 
-Out of scope (see ROADMAP): fusing the async event-queue schedulers,
-participation-sized sub-stack gathering inside a scan (fused rounds compute
-all W rows with validity masks), DGC delta compression, and the
-``block_skip`` compute path under the scan (interpret-mode Pallas inside
-``lax.scan`` is untested off-TPU).
+**Async fusion.**  The asynchronous schedulers (``fedasync_s`` / ``ssp_s``
+/ ``dcasgd_s``) fuse too (``run_async_fused``): the whole discrete-event
+run is pre-simulated on host into a ``scenario.AsyncEventPlan``
+(``simulation._plan_async_events`` — possible because async workers never
+prune, so event timing is independent of trained parameter values), and
+chunks of ``round_fusion`` window batches then run as ONE ``lax.scan``
+program each.  Inside the scan the pending-commit queue is a device array:
+each batch's events arrive in heap PUSH order with split-float64 finish
+keys, ``async_pop_perm`` (a ``lexsort`` — sorted finish-times replacing the
+host heap) re-derives the commit order including the host heap's
+``(time, worker)`` tie-break, and an inner scan walks the commits through
+``aggregation.async_commit_jnp`` merges, integer staleness counters
+(``version - fetched_ver``), dropout gating, and masked refetch
+(``fleet.refetch_rows_jnp``).  A per-chunk runtime check compares the
+device pop order and staleness integers against the plan and raises on
+divergence, so commit schedules are bit-identical to the resident engine
+by construction — E events run in ``O(E / round_fusion)`` host dispatches.
+
+Out of scope (see ROADMAP): participation-sized sub-stack gathering inside
+a scan (fused rounds compute all W rows with validity masks), DGC delta
+compression, and the ``block_skip`` compute path under the scan
+(interpret-mode Pallas inside ``lax.scan`` is untested off-TPU).
 """
 from __future__ import annotations
 
@@ -65,14 +82,17 @@ import numpy as np
 
 from repro.models.cnn import cnn_flops_from_shapes, extract_bn_scales
 
+from repro.optim.group_lasso import group_size_sqrt_from_shapes
+
 from .aggregation import (
     aggregate_by_unit_stacked_jnp,
     aggregate_by_worker_stacked_jnp,
+    async_commit_jnp,
     extract_subparams,
     roundtrip_total,
     subparam_shapes,
 )
-from .fleet import gl_factors_from_counts, masks_from_presence
+from .fleet import gl_factors_from_counts, masks_from_presence, refetch_rows_jnp
 from .importance import (
     DEVICE_METHODS,
     METHODS,
@@ -98,16 +118,17 @@ from .scenario import ScenarioEngine, ScenarioPlan
 from .timing import heterogeneity_from_times
 from .worker import make_batch_plan, plan_steps, stack_batch_plans
 
-__all__ = ["run_sync_fused", "validate_fused_config"]
+__all__ = [
+    "run_sync_fused",
+    "run_async_fused",
+    "async_pop_perm",
+    "split_time_keys",
+    "validate_fused_config",
+]
 
 
 def validate_fused_config(sim) -> None:
     """Reject configurations the fused engine does not express on device."""
-    if sim.method not in ("adaptcl", "fedavg", "fedavg_s"):
-        raise ValueError(
-            "engine='fused' fuses the synchronous round loop; the async "
-            "schedulers' event queue stays on the resident masked engine"
-        )
     if sim.dgc_sparsity > 0.0:
         raise ValueError(
             "engine='fused' does not support DGC delta compression (the "
@@ -639,3 +660,339 @@ def run_sync_fused(sim, env):
         blocks_per_image_final=float(np.mean([c[2] for c in final_costs])),
         prune_events=prune_events, fused_chunks=fused_chunks,
     )
+
+
+# ---------------------------------------------------------------------------
+# fused ASYNC engine: the discrete-event loop itself as lax.scan chunks
+# ---------------------------------------------------------------------------
+
+def split_time_keys(finishes: np.ndarray):
+    """Split float64 finish times into two float32 sort keys.
+
+    ``hi`` is the f32 rounding of the time, ``lo`` the f64 residual cast to
+    f32; because f32 rounding is monotone, ``(hi, lo)`` lexicographic order
+    equals f64 order except for residual-level collisions (~2^-48 apart),
+    which the fused driver's runtime order check turns into a hard error
+    instead of a silent reorder."""
+    hi = finishes.astype(np.float32)
+    lo = (finishes - hi.astype(np.float64)).astype(np.float32)
+    return hi, lo
+
+
+def async_pop_perm(fin_hi, fin_lo, rows):
+    """Device pending-queue pop order: the sorted-finish-times replacement
+    for the host ``heapq`` pop.  A stable ``lexsort`` over (primary) the
+    split finish keys then (tertiary) the worker index reproduces the host
+    heap's ``(time, worker_index)`` tuple ordering exactly — ties in finish
+    time pop in ascending worker order.  Padding slots carry ``hi = +inf``
+    so they sort to the tail."""
+    return jnp.lexsort((rows, fin_lo, fin_hi))
+
+
+def _build_async_chunk_fn(trainer, unit_map, base_shapes, lam, *, method, W,
+                          BP, EB, cohort_size, fedasync_a, lr,
+                          dcasgd_lambda, dcasgd_m):
+    """Build the jitted async chunk program: ``lax.scan`` over KB window
+    batches, each popping its events from a device queue, training the
+    batch's workers as one vmapped sub-stack, then walking the commits
+    through an inner scan of ``async_commit_jnp`` merges.
+
+    Carry: (fetched ``[W, ...]`` snapshots, global params, server version,
+    per-slot ``fetched_ver``, dcasgd backup/accumulator).  Per-batch inputs
+    arrive in heap PUSH order; outputs are the popped worker order and
+    staleness integers (the host verifies both against the plan) plus the
+    post-commit globals captured at eval events."""
+    train_one = trainer.make_resident_train(unit_map, lam)
+    vm_train = jax.vmap(
+        lambda p, x, y, plan, valid, mask, gl:
+            train_one(p, x, y, plan, valid, mask, gl)
+    )
+    gl_base = group_size_sqrt_from_shapes(base_shapes, unit_map)
+
+    def chunk(fetched, g, version, fetched_ver, backup, dc_m, xs, ys,
+              per_batch):
+        # async workers never prune: masks are all-ones, group-lasso factors
+        # are the base-shape constants
+        masks = {
+            k: jnp.ones((BP,) + tuple(base_shapes[k]), jnp.float32)
+            for k in fetched
+        }
+        gl = {
+            lname: jnp.full((BP,), s, jnp.float32)
+            for lname, s in gl_base.items()
+        }
+
+        def commit_body(c, e):
+            g, version, fetched_ver, fetched, backup, dc_m, eval_buf = c
+            w, v_ok, drop, t_row, f_row, ref_row, ev_flag, ev_slot = e
+            s = version - fetched_ver[w]
+            live = v_ok * (1.0 - drop)     # merged = real AND not timed out
+            g2, backup2, dc_m2 = async_commit_jnp(
+                method, g, t_row, f_row, s, w, backup, dc_m,
+                cohort_size=cohort_size, fedasync_a=fedasync_a, lr=lr,
+                dcasgd_lambda=dcasgd_lambda, dcasgd_m=dcasgd_m,
+            )
+            keep = live > 0
+            g = {k: jnp.where(keep, g2[k], g[k]) for k in g}
+            backup = {k: jnp.where(keep, backup2[k], backup[k]) for k in backup}
+            dc_m = {k: jnp.where(keep, dc_m2[k], dc_m[k]) for k in dc_m}
+            version = version + live.astype(jnp.int32)
+            # refetch AFTER the bump: dropped commits refetch the unchanged
+            # global; padding slots (v_ok = 0) touch nothing
+            ref_eff = ref_row * v_ok
+            fetched = refetch_rows_jnp(fetched, ref_eff, g)
+            fetched_ver = jnp.where(ref_eff > 0, version, fetched_ver)
+            wr = (ev_flag * v_ok) > 0
+            eval_buf = {
+                k: eval_buf[k].at[ev_slot].set(
+                    jnp.where(wr, g[k], eval_buf[k][ev_slot])
+                )
+                for k in eval_buf
+            }
+            return (g, version, fetched_ver, fetched, backup, dc_m,
+                    eval_buf), (w, s)
+
+        def body(carry, inp):
+            fetched, g, version, fetched_ver, backup, dc_m = carry
+            # device queue pop: push-ordered events -> commit order
+            perm = async_pop_perm(inp["fin_hi"], inp["fin_lo"], inp["rows"])
+            rows = jnp.take(inp["rows"], perm)
+            valid = jnp.take(inp["valid"], perm)
+            dropped = jnp.take(inp["dropped"], perm)
+            plans = jnp.take(inp["plans"], perm, axis=0)
+            pvalid = jnp.take(inp["pvalid"], perm, axis=0)
+            refetch = jnp.take(inp["refetch"], perm, axis=0)
+            eval_flag = jnp.take(inp["eval_flag"], perm)
+            eval_slot = jnp.take(inp["eval_slot"], perm)
+            # masked gather-in of each popped worker's fetched snapshot +
+            # shard, then ONE vmapped bucket-sized training for the batch
+            # (within a batch every worker is distinct and its input was
+            # fixed at its last refetch, so batched training is exact)
+            p0 = {k: jnp.take(v, rows, axis=0) for k, v in fetched.items()}
+            xb = jnp.take(xs, rows, axis=0)
+            yb = jnp.take(ys, rows, axis=0)
+            trained, _, _ = vm_train(p0, xb, yb, plans, pvalid, masks, gl)
+            eval_buf = {
+                k: jnp.zeros((EB,) + tuple(base_shapes[k]), jnp.float32)
+                for k in g
+            }
+            (g, version, fetched_ver, fetched, backup, dc_m, eval_buf), (
+                order, stale
+            ) = jax.lax.scan(
+                commit_body,
+                (g, version, fetched_ver, fetched, backup, dc_m, eval_buf),
+                (rows, valid, dropped, trained, p0, refetch, eval_flag,
+                 eval_slot),
+            )
+            return (fetched, g, version, fetched_ver, backup, dc_m), (
+                order, stale, eval_buf
+            )
+
+        carry0 = (fetched, g, version, fetched_ver, backup, dc_m)
+        (fetched, g, version, fetched_ver, backup, dc_m), (
+            order_seq, stale_seq, eval_seq
+        ) = jax.lax.scan(body, carry0, per_batch)
+        return (fetched, g, version, fetched_ver, backup, dc_m,
+                order_seq, stale_seq, eval_seq)
+
+    return jax.jit(chunk)
+
+
+def run_async_fused(sim, env, scen, participants, plan):
+    """Async simulation with the fused event-queue engine (see module doc).
+
+    Replays the SAME pre-simulated ``AsyncEventPlan`` as the resident/
+    per-worker engines (``simulation._run_async`` builds it and routes
+    here), so commit order, staleness weights, dropout outcomes and virtual
+    clocks are identical by construction; chunks of ``round_fusion`` window
+    batches run as one device program each."""
+    from .simulation import _env_accuracy, _finalize   # lazy: no import cycle
+
+    validate_fused_config(sim)
+    W = sim.num_workers
+    method = sim.method
+    lam = sim.lam
+    trainer = env.trainer
+    unit_map = env.unit_map
+    base_shapes = env.base_shapes
+    n_part = len(participants)
+    idx = full_index(env.space)
+
+    global_params = {k: np.asarray(v) for k, v in env.base_params.items()}
+    acc_time = [(0.0, _env_accuracy(env, global_params))]
+    rt_base = roundtrip_total()
+    # async commits always move base-shape payloads (workers never prune)
+    commit_bytes = 2.0 * sum(
+        int(np.prod(s)) * 4 for s in base_shapes.values()
+    )
+    comm_bytes = 0.0
+    fused_chunks = 0
+    final_cost = env.cost_for_index(idx)
+
+    E = plan.num_events
+    if E == 0:
+        return _finalize(sim, env, acc_time, [], [], [], [1.0] * W,
+                         [dict(global_params) for _ in range(W)], 0.0, 0.0,
+                         0.0, global_params=dict(global_params),
+                         host_roundtrips=roundtrip_total() - rt_base,
+                         scenario_rounds=(
+                             [(0, n_part, 0, 0)] if scen is not None else []
+                         ),
+                         flops_per_image_final=final_cost[0],
+                         blocks_per_image_final=final_cost[2],
+                         fused_chunks=0)
+
+    shard_x, shard_y = zip(*(env.shard_xy(w) for w in range(W)))
+    state = env.fleet.init_state(env.base_params, list(shard_x), list(shard_y))
+
+    batch = sim.batch_size
+    pad_steps = max(
+        plan_steps(len(env.shards[w]), batch, sim.local_epochs)
+        for w in participants
+    )
+    S_eff = max(pad_steps, 1)      # static step dim even for no-step plans
+    n_batches = len(plan.batch_starts) - 1
+    BP = int(np.diff(plan.batch_starts).max())
+    EB = max(
+        max(
+            int(plan.evals[int(plan.batch_starts[b]):
+                           int(plan.batch_starts[b + 1])].sum())
+            for b in range(n_batches)
+        ),
+        1,
+    )
+    KB = sim.round_fusion if sim.round_fusion > 0 else 8
+    KB = max(1, min(KB, n_batches))
+
+    # eval slots: exclusive cumsum of eval flags within each batch
+    slot_of = np.zeros(E, np.int64)
+    for b in range(n_batches):
+        s0, e0 = int(plan.batch_starts[b]), int(plan.batch_starts[b + 1])
+        ev = plan.evals[s0:e0].astype(np.int64)
+        slot_of[s0:e0] = np.cumsum(ev) - ev
+    fin_hi_all, fin_lo_all = split_time_keys(plan.finishes)
+
+    g_dev = {k: jnp.asarray(v, jnp.float32) for k, v in global_params.items()}
+    fetched_dev = state.params     # [W, ...] broadcast of the base params
+    version_dev = jnp.asarray(0, jnp.int32)
+    fetched_ver_dev = jnp.zeros((W,), jnp.int32)
+    if method == "dcasgd_s":
+        backup_dev = dict(fetched_dev)   # per-slot w_bak starts at the global
+        dc_m_dev = {k: jnp.zeros_like(v) for k, v in g_dev.items()}
+    else:
+        backup_dev, dc_m_dev = {}, {}
+
+    sig_shapes = tuple(
+        sorted((k, tuple(v.shape)) for k, v in state.params.items())
+    )
+    sig = (
+        sig_shapes,
+        ("fused_async", method, KB, BP, S_eff, EB, tuple(state.xs.shape),
+         batch, n_part, float(sim.fedasync_a), float(sim.lr),
+         float(sim.dcasgd_lambda), float(sim.dcasgd_m)),
+        float(lam),
+    )
+    build = lambda: _build_async_chunk_fn(
+        trainer, unit_map, base_shapes, lam, method=method, W=W, BP=BP,
+        EB=EB, cohort_size=n_part, fedasync_a=float(sim.fedasync_a),
+        lr=float(sim.lr), dcasgd_lambda=float(sim.dcasgd_lambda),
+        dcasgd_m=float(sim.dcasgd_m),
+    )
+
+    b = 0
+    while b < n_batches:
+        nc = min(KB, n_batches - b)
+        rows_a = np.zeros((KB, BP), np.int32)
+        valid_a = np.zeros((KB, BP), np.float32)
+        drop_a = np.zeros((KB, BP), np.float32)
+        # padding slots: +inf finish keys sort them past every real event
+        # (built explicitly — inf-residual arithmetic would NaN the keys)
+        hi_a = np.full((KB, BP), np.inf, np.float32)
+        lo_a = np.zeros((KB, BP), np.float32)
+        plans_a = np.zeros((KB, BP, S_eff, batch), np.int32)
+        pvalid_a = np.zeros((KB, BP, S_eff), np.float32)
+        ref_a = np.zeros((KB, BP, W), np.float32)
+        evf_a = np.zeros((KB, BP), np.float32)
+        evs_a = np.zeros((KB, BP), np.int32)
+        for j in range(nc):
+            s0 = int(plan.batch_starts[b + j])
+            e0 = int(plan.batch_starts[b + j + 1])
+            L = e0 - s0
+            # feed the device queue in heap PUSH order — the in-scan pop
+            # must genuinely re-derive the commit order
+            feed = s0 + np.argsort(plan.push_seq[s0:e0], kind="stable")
+            rows_a[j, :L] = plan.workers[feed]
+            valid_a[j, :L] = 1.0
+            drop_a[j, :L] = plan.dropped[feed]
+            hi_a[j, :L] = fin_hi_all[feed]
+            lo_a[j, :L] = fin_lo_all[feed]
+            ref_a[j, :L] = plan.refetch[feed]
+            evf_a[j, :L] = plan.evals[feed]
+            evs_a[j, :L] = slot_of[feed]
+            for r, i in enumerate(feed):
+                p = plan.plans[i]
+                if p.shape[0]:
+                    plans_a[j, r, :p.shape[0]] = p
+                    pvalid_a[j, r, :p.shape[0]] = 1.0
+        per_batch = {
+            "rows": jnp.asarray(rows_a),
+            "valid": jnp.asarray(valid_a),
+            "dropped": jnp.asarray(drop_a),
+            "fin_hi": jnp.asarray(hi_a),
+            "fin_lo": jnp.asarray(lo_a),
+            "plans": jnp.asarray(plans_a),
+            "pvalid": jnp.asarray(pvalid_a),
+            "refetch": jnp.asarray(ref_a),
+            "eval_flag": jnp.asarray(evf_a),
+            "eval_slot": jnp.asarray(evs_a),
+        }
+
+        # ---- ONE device dispatch for the whole chunk ---------------------
+        (fetched_dev, g_dev, version_dev, fetched_ver_dev, backup_dev,
+         dc_m_dev, order_seq, stale_seq, eval_seq) = trainer._call_cached(
+            sig, build, fetched_dev, g_dev, version_dev, fetched_ver_dev,
+            backup_dev, dc_m_dev, state.xs, state.ys, per_batch,
+        )
+        fused_chunks += 1
+        env.fleet.batched_calls += 1
+        env.fleet.buckets_used.add(BP)
+
+        order_np = np.asarray(order_seq)
+        stale_np = np.asarray(stale_seq)
+        eval_np = {k: np.asarray(v) for k, v in eval_seq.items()}
+        for j in range(nc):
+            s0 = int(plan.batch_starts[b + j])
+            e0 = int(plan.batch_starts[b + j + 1])
+            L = e0 - s0
+            # the device pop must reproduce the host heap replay exactly —
+            # commit order (ties included) AND the staleness integers
+            if not (
+                np.array_equal(order_np[j, :L], plan.workers[s0:e0])
+                and np.array_equal(stale_np[j, :L], plan.staleness[s0:e0])
+            ):
+                raise RuntimeError(
+                    "device event queue diverged from host heap replay"
+                )
+            for i in range(s0, e0):
+                env.account_train(idx, plan.plans[i].shape[0])
+                if not plan.dropped[i]:
+                    comm_bytes += commit_bytes
+                if plan.evals[i]:
+                    g_i = {k: eval_np[k][j, slot_of[i]] for k in eval_np}
+                    acc_time.append(
+                        (float(plan.clocks[i]), _env_accuracy(env, g_i))
+                    )
+        b += nc
+
+    global_params = {k: np.asarray(v) for k, v in g_dev.items()}
+    clock = float(plan.clocks[-1])
+    host_roundtrips = roundtrip_total() - rt_base
+    scen_rows = [(0, n_part, 0, 0)] if scen is not None else []
+    return _finalize(sim, env, acc_time, [], [], [], [1.0] * W,
+                     [dict(global_params) for _ in range(W)], comm_bytes, 0.0,
+                     clock, global_params=dict(global_params),
+                     host_roundtrips=host_roundtrips,
+                     scenario_rounds=scen_rows,
+                     flops_per_image_final=final_cost[0],
+                     blocks_per_image_final=final_cost[2],
+                     fused_chunks=fused_chunks)

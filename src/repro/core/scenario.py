@@ -33,9 +33,24 @@ through their event queue already, but they honour **client sampling**:
 ``participation`` selects a static ``max(min_participants, round(C * W))``
 subset of the slot pool (``static_participants``, drawn from the same
 dedicated RNG stream) that joins the event loop — the resident engine then
-sizes its device compute to the participants, not the slot pool.  Dropout
-and churn stay sync-only (the async timeout semantics are the event queue
-itself) and are rejected for async methods.
+sizes its device compute to the participants, not the slot pool.  They also
+honour **dropout**, with natural async semantics: each event-queue commit
+independently times out at the server with probability ``dropout`` (drawn
+from the scenario RNG stream in heap pop order, one draw per event, only
+when ``dropout > 0``).  A timed-out commit still trains (the worker did the
+work), still counts toward the worker's round quota and SSP's progress
+counters, and still refetches the current global — but its update is
+discarded: no merge, no version bump, no communicated bytes.  Churn and
+per-round schedules stay sync-only (slot replacement and scripted rounds
+reset host bookkeeping the event queue does not model) and are rejected for
+async methods.
+
+The whole async run is pre-simulated on host into an :class:`AsyncEventPlan`
+(``simulation._plan_async_events``) — the async analogue of
+:class:`ScenarioPlan`: commit order (including finish-time ties), staleness
+integers, dropout outcomes, refetch sets and virtual clocks are fixed before
+any training runs, so the per-worker, resident and fused engines consume ONE
+event stream by construction.
 
 ``ScenarioConfig.schedule`` takes explicit per-round events for tests and
 reproducible sweeps; rounds beyond the schedule fall back to full
@@ -49,6 +64,7 @@ from typing import Dict, List, Optional, Sequence
 import numpy as np
 
 __all__ = [
+    "AsyncEventPlan",
     "ScenarioConfig",
     "RoundEvents",
     "ScenarioEngine",
@@ -216,3 +232,40 @@ class ScenarioPlan:
             events=[full_participation(num_workers) for _ in range(rounds)],
             fresh_shards=[{} for _ in range(rounds)],
         )
+
+
+@dataclasses.dataclass
+class AsyncEventPlan:
+    """A whole async run's pre-simulated discrete-event stream.
+
+    Built by ``simulation._plan_async_events`` from an exact host replay of
+    the heap loop (finish-time heap with ``(time, worker)`` tie-breaking,
+    identical ``env.rng`` jitter/plan draw order, identical SSP blocking
+    walk), with training removed — possible because async workers never
+    prune, so event timing is independent of trained parameter values.  All
+    arrays are indexed by event ``i`` in HEAP POP ORDER (= commit order);
+    ``batch_starts`` delimits the window batches the engines execute.
+
+    ``push_seq`` records the order events were *pushed* into the pending
+    queue: the fused engine feeds each batch's events to the device in push
+    order and lets the device sorted-queue pop (``fused.async_pop_perm``,
+    a ``lexsort`` over split-float64 finish keys then worker index) recover
+    the commit order — which a per-chunk runtime check compares back against
+    ``workers``/``staleness``, so a divergent device pop raises instead of
+    silently reordering commits."""
+
+    workers: np.ndarray        # int64 [E]: committing worker, heap pop order
+    finishes: np.ndarray       # f64 [E]: event finish time (heap key)
+    push_seq: np.ndarray       # int64 [E]: global push counter at schedule()
+    staleness: np.ndarray      # int64 [E]: server.version - fetched_ver[w]
+    versions: np.ndarray       # int64 [E]: server version AFTER the event
+    dropped: np.ndarray        # bool [E]: commit timed out (no merge)
+    refetch: np.ndarray        # bool [E, W]: rows refetching the new global
+    evals: np.ndarray          # bool [E]: accuracy eval after this commit
+    clocks: np.ndarray         # f64 [E]: running-max virtual clock
+    batch_starts: np.ndarray   # int64 [B+1]: window-batch event offsets
+    plans: List[np.ndarray]    # per-event batch plans, env.rng draw order
+
+    @property
+    def num_events(self) -> int:
+        return len(self.workers)

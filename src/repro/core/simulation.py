@@ -44,20 +44,39 @@ per-round participation mask over the fixed worker slots — under the
 resident engine, device shapes never change, so flaky fleets keep the
 one-compile guarantee.
 
-The async schedulers batch event-queue commits that land within one virtual
-window (``SimConfig.async_window``, default 0 = fully serial) into a single
-fleet call, so ``fedasync_s``/``ssp_s``/``dcasgd_s`` stop issuing W-sized
-streams of single-job fleet calls.  Under the resident engine the async loop
-is fully stack-native: each window batch scatters the committing workers'
-refetched globals into their ``[W, ...]`` rows (masked scatter in), trains
-the batch as one bucket-sized sub-stack program, pulls the trained rows to
-host in ONE copy (stacked aggregate out), and applies the per-commit
-staleness-weighted merges (``aggregation.AsyncServer``) in finish order — no
-``extract_subparams``/``embed_params`` anywhere, so
-``SimResult.host_roundtrips == 0`` for resident async runs too.  Async
-methods honour scenario *client sampling* (a static C-fraction of the slot
-pool joins the event loop, ``ScenarioEngine.static_participants``); device
-compute is sized to the participants.
+The async schedulers' discrete-event timeline is INDEPENDENT of trained
+parameter values (async workers never prune, so channel times depend only on
+bandwidths + jitter, and SSP blocking only on commit counts).  The entire
+run is therefore pre-simulated on host by ``_plan_async_events`` into a
+``scenario.AsyncEventPlan`` — commit order (including ``(time, worker)``
+finish-tie breaking), staleness integers, dropout outcomes, refetch sets,
+window batches and virtual clocks — and every engine replays that ONE plan:
+
+  * the per-worker and resident (``masked``) engines batch event commits
+    that land within one virtual window (``SimConfig.async_window``, default
+    0 = fully serial) into a single fleet call.  Resident: each window batch
+    scatters the committing workers' refetched globals into their
+    ``[W, ...]`` rows (masked scatter in), trains the batch as one
+    bucket-sized sub-stack program, pulls the trained rows to host in ONE
+    copy (stacked aggregate out), and applies the per-commit staleness
+    merges (``aggregation.AsyncServer``) in finish order — no
+    ``extract_subparams``/``embed_params`` anywhere, so
+    ``SimResult.host_roundtrips == 0`` for resident async runs too;
+  * the ``fused`` engine (``core.fused.run_async_fused``) moves the event
+    loop itself onto the device: the pending-commit queue pop is a device
+    ``lexsort`` over sorted finish-time keys, worker clocks / staleness
+    counters / the fetched-snapshot stacks are device arrays, and whole
+    CHUNKS of window batches — refetch scatter, vmapped training, in-scan
+    ``AsyncServer``-equivalent merges — run as one ``lax.scan`` program, so
+    ``host_dispatches`` is O(events / round_fusion) instead of O(events).
+
+Async methods honour scenario *client sampling* (a static C-fraction of the
+slot pool joins the event loop, ``ScenarioEngine.static_participants``) and
+*dropout* (each commit independently times out at the server with
+probability ``dropout``: it still trains, counts and refetches, but its
+update is discarded — no merge, no version bump, no communicated bytes);
+churn and scripted schedules stay sync-only.  Device compute is sized to
+the participants.
 
 ``SimResult`` reports ``recompiles`` (jit shape-signatures compiled),
 ``batched_calls`` (device programs launched by the batched engines),
@@ -106,7 +125,12 @@ from .fleet import FleetEngine, FleetJob
 from .importance import CIG_METHODS, METHODS, ImportanceContext
 from .masks import full_index, is_nested, payload_bytes, prune_to_budget, retention, similarity
 from .pruned_rate import PrunedRateConfig, WorkerHistory, learn_pruned_rates
-from .scenario import ScenarioConfig, ScenarioEngine, full_participation
+from .scenario import (
+    AsyncEventPlan,
+    ScenarioConfig,
+    ScenarioEngine,
+    full_participation,
+)
 from .timing import HeterogeneityConfig, heterogeneity_from_times, make_bandwidths
 from .worker import LocalTrainer, local_unit_stats, make_batch_plan, plan_steps
 
@@ -168,7 +192,8 @@ class SimConfig:
     # pruned_matmul tile sizes (block_m, block_n, block_k); 128-aligned on
     # TPU, shrink for fine-grained CPU/interpret runs and small models
     compute_blocks: Tuple[int, int, int] = (128, 128, 128)
-    # client sampling / dropout / churn (sync methods only, core.scenario)
+    # client sampling / dropout / churn (core.scenario); async methods
+    # honour sampling + dropout (timed-out commits) and reject churn
     scenario: Optional[ScenarioConfig] = None
     # async engines: event-queue commits landing within this virtual window
     # batch into ONE fleet call (0.0 = serial, exactly the legacy behavior)
@@ -845,50 +870,198 @@ def _scores_for(sim: SimConfig, env: _Env, worker, prune_round, params_w, index_
 # asynchronous methods: fedasync_s / ssp_s / dcasgd_s
 # ---------------------------------------------------------------------------
 
+def _plan_async_events(
+    sim: SimConfig,
+    env: _Env,
+    scen: Optional[ScenarioEngine],
+    participants: np.ndarray,
+) -> AsyncEventPlan:
+    """Pre-simulate the entire async discrete-event run (no training).
+
+    Async workers never prune, so event timing depends only on worker
+    bandwidths + jitter draws and SSP blocking only on commit counts —
+    the heap loop can run to completion before any parameters exist.  This
+    replays the legacy loop's exact RNG/heap order: initial ``schedule``
+    per participant ascending (one jitter draw each via ``phi_from_index``;
+    the per-worker path's ``env.phi(w, fetched)`` produced bit-identical
+    draws because async shapes are always the base shapes), then per window
+    batch: heap pops (``(time, worker)`` tuple tie-break), one
+    ``make_batch_plan`` per popped row in pop order, one ``scen.rng``
+    dropout draw per popped row in pop order (ONLY when dropout > 0, so
+    dropout-free runs consume zero extra scenario RNG), then the per-commit
+    bookkeeping walk (clock running-max, staleness before the version bump,
+    SSP block/unblock with reschedule jitter draws, eval flags).
+
+    A dropped (timed-out) commit still trains, still counts toward
+    ``rounds_done``/termination, and still refetches the current global —
+    but the server never merges it: no version bump, no bytes."""
+    W = sim.num_workers
+    method = sim.method
+    idx = full_index(env.space)
+    n_part = len(participants)
+    drop_p = scen.cfg.dropout if scen is not None else 0.0
+
+    fetched_ver = np.zeros(W, np.int64)
+    rounds_done = np.zeros(W, np.int64)
+    last_push = np.zeros(W, np.int64)
+    version = 0
+    push_counter = 0
+    total_commits = n_part * sim.rounds
+    commits = 0
+    clock = 0.0
+    heap: List[Tuple[float, int]] = []
+
+    def schedule(w, now):
+        nonlocal push_counter
+        phi = env.phi_from_index(w, idx)
+        heapq.heappush(heap, (now + phi, w))
+        last_push[w] = push_counter
+        push_counter += 1
+
+    for w in participants:
+        schedule(int(w), 0.0)
+
+    workers: List[int] = []
+    finishes: List[float] = []
+    push_seq: List[int] = []
+    staleness: List[int] = []
+    versions: List[int] = []
+    dropped: List[bool] = []
+    refetch: List[np.ndarray] = []
+    evals: List[bool] = []
+    clocks: List[float] = []
+    plans: List[np.ndarray] = []
+    batch_starts: List[int] = [0]
+
+    blocked: List[int] = []
+    window = sim.async_window
+    while commits < total_commits and heap:
+        batch = [heapq.heappop(heap)]
+        while (window > 0.0 and heap
+               and len(batch) < total_commits - commits
+               and heap[0][0] <= batch[0][0] + window):
+            batch.append(heapq.heappop(heap))
+        batch_plans = [
+            make_batch_plan(
+                len(env.shards[w]), sim.batch_size, sim.local_epochs, env.rng
+            )
+            for _, w in batch
+        ]
+        drops = (
+            [bool(scen.rng.random() < drop_p) for _ in batch]
+            if drop_p > 0.0 else [False] * len(batch)
+        )
+        for (finish, w), plan, drop in zip(batch, batch_plans, drops):
+            clock = max(clock, finish)
+            s = int(version - fetched_ver[w])
+            if not drop:
+                version += 1
+            commits += 1
+            rounds_done[w] += 1
+            ref = np.zeros(W, bool)
+            ref[w] = True
+            fetched_ver[w] = version
+            if method == "ssp_s" and rounds_done[w] >= int(
+                rounds_done[participants].min()
+            ) + sim.ssp_threshold:
+                blocked.append(w)
+            elif rounds_done[w] < sim.rounds:
+                schedule(w, clock)
+            if method == "ssp_s" and blocked:
+                min_done = int(rounds_done[participants].min())
+                still = []
+                for bw in blocked:
+                    if (rounds_done[bw] < min_done + sim.ssp_threshold
+                            and rounds_done[bw] < sim.rounds):
+                        ref[bw] = True
+                        fetched_ver[bw] = version
+                        schedule(bw, clock)
+                    else:
+                        still.append(bw)
+                blocked = [b for b in still if rounds_done[b] < sim.rounds]
+            workers.append(int(w))
+            finishes.append(float(finish))
+            push_seq.append(int(last_push[w]))
+            staleness.append(s)
+            versions.append(version)
+            dropped.append(drop)
+            refetch.append(ref)
+            evals.append(commits % n_part == 0)
+            clocks.append(clock)
+            plans.append(plan)
+        batch_starts.append(commits)
+
+    return AsyncEventPlan(
+        workers=np.asarray(workers, np.int64),
+        finishes=np.asarray(finishes, np.float64),
+        push_seq=np.asarray(push_seq, np.int64),
+        staleness=np.asarray(staleness, np.int64),
+        versions=np.asarray(versions, np.int64),
+        dropped=np.asarray(dropped, bool),
+        refetch=(np.stack(refetch) if refetch else np.zeros((0, W), bool)),
+        evals=np.asarray(evals, bool),
+        clocks=np.asarray(clocks, np.float64),
+        batch_starts=np.asarray(batch_starts, np.int64),
+        plans=plans,
+    )
+
+
 def _run_async(sim: SimConfig, env: _Env) -> SimResult:
     W = sim.num_workers
     lam = sim.lam
-    method = sim.method
     if sim.resident_momentum:
         raise ValueError(
             "resident_momentum is a synchronous-round carry; the async "
             "schedulers restart momentum per commit like their per-worker "
             "twins"
         )
-    resident = sim.engine == "masked"
-    global_params = dict(env.base_params)
-    idx = full_index(env.space)
 
-    # --- scenario: async methods honour client sampling (a static C-fraction
-    # of the slot pool joins the event loop); dropout/churn stay sync-only.
+    # --- scenario: async methods honour client sampling (a static
+    # C-fraction of the slot pool joins the event loop) and dropout
+    # (timed-out commits in the pre-drawn event stream); churn and scripted
+    # schedules stay sync-only.
     scen = ScenarioEngine(sim.scenario, W) if sim.scenario is not None else None
-    if scen is not None and (
-        scen.cfg.dropout > 0.0
-        or scen.cfg.churn > 0.0
-        or scen.cfg.schedule is not None
-    ):
+    if scen is not None and scen.cfg.schedule is not None:
         raise ValueError(
-            "async schedulers support scenario client sampling only; dropout, "
-            "churn and per-round schedules apply to the synchronous methods "
-            "(the event queue already models client pacing)"
+            "async schedulers draw their own event stream; per-round "
+            "scripted schedules apply to the synchronous methods only"
+        )
+    if scen is not None and scen.cfg.churn > 0.0:
+        raise ValueError(
+            "async schedulers reject scenario churn — slot replacement "
+            "resets host bookkeeping the event queue does not model; churn "
+            "applies to the synchronous methods only"
         )
     participants = (
         scen.static_participants() if scen is not None else np.arange(W)
     )
     n_part = len(participants)
 
-    # staleness bookkeeping over the slot space (stacked ints), plus each
-    # worker's fetched global snapshot.  AsyncServer.commit always rebinds a
-    # fresh params dict, so snapshots are safe zero-copy references on the
-    # resident path; the per-worker path keeps the legacy shallow copies.
+    # --- the whole discrete-event run, pre-simulated (commit order incl.
+    # ties, staleness ints, dropout outcomes, refetch sets, clocks) — every
+    # engine replays this ONE plan, so schedules are identical by
+    # construction.
+    plan = _plan_async_events(sim, env, scen, participants)
+
+    if sim.engine == "fused":
+        from .fused import run_async_fused   # lazy: fused imports us back
+
+        return run_async_fused(sim, env, scen, participants, plan)
+
+    resident = sim.engine == "masked"
+    method = sim.method
+    global_params = dict(env.base_params)
+    idx = full_index(env.space)
+
+    # AsyncServer.commit always rebinds a fresh params dict, so fetched
+    # snapshots are safe zero-copy references on the resident path; the
+    # per-worker path keeps the legacy shallow copies.
     server = AsyncServer(
         method, global_params, W, cohort_size=n_part,
         fedasync_a=sim.fedasync_a, lr=sim.lr,
         dcasgd_lambda=sim.dcasgd_lambda, dcasgd_m=sim.dcasgd_m,
     )
     fetched = [dict(global_params) for _ in range(W)]
-    fetched_ver = np.zeros(W, np.int64)
-    rounds_done = np.zeros(W, np.int64)
 
     state = None
     pad_steps = None
@@ -900,44 +1073,20 @@ def _run_async(sim: SimConfig, env: _Env) -> SimResult:
             for w in participants
         )
 
-    total_commits = n_part * sim.rounds
-    commits = 0
-    clock = 0.0
     comm_bytes = 0.0
+    # async commits always move base-shape payloads (workers never prune)
+    commit_bytes = 2.0 * sum(
+        int(np.prod(s)) * 4 for s in env.base_shapes.values()
+    )
     acc_time = [(0.0, _env_accuracy(env, global_params))]
-    heap: List[Tuple[float, int]] = []
     rt_base = roundtrip_total()
 
-    def schedule(w, now):
-        # channel-model time; resident path derives it from the index alone
-        # (identical shapes, identical jitter draw -> identical schedules)
-        phi = env.phi_from_index(w, idx) if resident else env.phi(w, fetched[w])
-        heapq.heappush(heap, (now + phi, w))
-
-    for w in participants:
-        schedule(int(w), 0.0)
-
-    blocked: List[int] = []
-    window = sim.async_window
-    while commits < total_commits and heap:
-        # pop every event landing within one virtual window: each popped
-        # worker's training input (its last fetch) is already fixed, so
-        # batching the training into ONE fleet call is exact — commits are
-        # then applied one at a time in finish order, like the serial path.
-        batch = [heapq.heappop(heap)]
-        while (window > 0.0 and heap
-               and len(batch) < total_commits - commits
-               and heap[0][0] <= batch[0][0] + window):
-            batch.append(heapq.heappop(heap))
-        rows = [w for _, w in batch]
-        plans = [
-            make_batch_plan(
-                len(env.shards[w]), sim.batch_size, sim.local_epochs, env.rng
-            )
-            for w in rows
-        ]
-        for plan in plans:   # async workers all train at the shared full index
-            env.account_train(idx, plan.shape[0])
+    for b in range(len(plan.batch_starts) - 1):
+        s0, e0 = int(plan.batch_starts[b]), int(plan.batch_starts[b + 1])
+        rows = [int(w) for w in plan.workers[s0:e0]]
+        batch_plans = plan.plans[s0:e0]
+        for p in batch_plans:  # async workers all train at the full index
+            env.account_train(idx, p.shape[0])
         if resident:
             # masked scatter in: each batch worker's row becomes the global
             # snapshot it fetched at its last commit...
@@ -945,7 +1094,7 @@ def _run_async(sim: SimConfig, env: _Env) -> SimResult:
             # ...one bucket-sized sub-stack program trains the whole batch,
             # and the trained rows come back in ONE stacked host copy.
             _, pulled = env.fleet.train_rows(
-                state, rows, plans, lam, pad_steps=pad_steps, to_host=True
+                state, rows, batch_plans, lam, pad_steps=pad_steps, to_host=True
             )
             if pulled is None:
                 # no-step plans (local_epochs <= 0): commit the fetched
@@ -957,47 +1106,36 @@ def _run_async(sim: SimConfig, env: _Env) -> SimResult:
                 ]
         else:
             jobs = []
-            for (_, w), plan in zip(batch, plans):
+            for w, p in zip(rows, batch_plans):
                 x, y = env.shard_xy(w)
                 jobs.append(FleetJob(
-                    worker=w, params=fetched[w], index=idx, x=x, y=y, plan=plan,
+                    worker=w, params=fetched[w], index=idx, x=x, y=y, plan=p,
                 ))
             trained_batch = env.fleet.train_all(jobs, lam)
-        for (finish, w), trained in zip(batch, trained_batch):
-            clock = max(clock, finish)
-            staleness = int(server.version - fetched_ver[w])
-            global_params = server.commit(w, trained, fetched[w], staleness)
-            if not resident:
-                # per-worker path: each commit copies a full param dict
-                # across the host boundary — count it so host_roundtrips is
-                # honest in the baseline (SSP included)
-                tally_roundtrip("async_merge")
-            commits += 1
-            rounds_done[w] += 1
-            comm_bytes += 2.0 * sum(v.size * 4 for v in trained.values())
-            # refetch + maybe block (SSP)
-            fetched[w] = dict(global_params)
-            fetched_ver[w] = server.version
-            if method == "ssp_s" and rounds_done[w] >= int(
-                rounds_done[participants].min()
-            ) + sim.ssp_threshold:
-                blocked.append(w)
-            elif rounds_done[w] < sim.rounds:
-                schedule(w, clock)
-            if method == "ssp_s" and blocked:
-                min_done = int(rounds_done[participants].min())
-                still = []
-                for bw in blocked:
-                    if rounds_done[bw] < min_done + sim.ssp_threshold and rounds_done[bw] < sim.rounds:
-                        fetched[bw] = dict(global_params)
-                        fetched_ver[bw] = server.version
-                        schedule(bw, clock)
-                    else:
-                        still.append(bw)
-                blocked = [b for b in still if rounds_done[b] < sim.rounds]
-            if commits % n_part == 0:
-                acc_time.append((clock, _env_accuracy(env, global_params)))
+        for i, trained in zip(range(s0, e0), trained_batch):
+            w = int(plan.workers[i])
+            if not plan.dropped[i]:
+                global_params = server.commit(
+                    w, trained, fetched[w], int(plan.staleness[i])
+                )
+                if not resident:
+                    # per-worker path: each merged commit copies a full param
+                    # dict across the host boundary — count it so
+                    # host_roundtrips is honest in the baseline (SSP incl.)
+                    tally_roundtrip("async_merge")
+                comm_bytes += commit_bytes
+            if server.version != int(plan.versions[i]):
+                raise RuntimeError(
+                    "async replay diverged from the pre-simulated event plan"
+                )
+            for rw in np.flatnonzero(plan.refetch[i]):
+                fetched[int(rw)] = dict(global_params)
+            if plan.evals[i]:
+                acc_time.append(
+                    (float(plan.clocks[i]), _env_accuracy(env, global_params))
+                )
 
+    clock = float(plan.clocks[-1]) if plan.num_events else 0.0
     host_roundtrips = roundtrip_total() - rt_base
     scen_rows = [(0, n_part, 0, 0)] if scen is not None else []
     final_cost = env.cost_for_index(idx)
@@ -1069,11 +1207,7 @@ def run_simulation(sim: SimConfig) -> SimResult:
         else:
             result = _run_sync(sim, env)
     elif sim.method in ("fedasync_s", "ssp_s", "dcasgd_s"):
-        if sim.engine == "fused":
-            from .fused import validate_fused_config
-
-            validate_fused_config(sim)  # raises: async is not fusable
-        result = _run_async(sim, env)
+        result = _run_async(sim, env)   # routes engine == "fused" itself
     else:
         raise ValueError(f"unknown method {sim.method}")
     result.walltime_s = _time.perf_counter() - t0

@@ -1,0 +1,211 @@
+"""Fused async event-queue engine contracts (core.fused.run_async_fused).
+
+Pins down:
+  * fused == resident == per-worker equivalence for all three async
+    schedulers — identical virtual clocks and eval schedules, staleness
+    merge schedules bit-identical by plan construction (the fused driver
+    hard-errors if the device pop diverges), final params within 1e-3;
+  * the device sorted-queue pop (``async_pop_perm``) vs the host heap —
+    exact ``(finish_time, worker_index)`` ordering including tie-breaks,
+    golden-pinned with a uniform-phi fleet where EVERY first-wave finish
+    ties;
+  * host-dispatch economics: fused async runs launch O(events /
+    round_fusion) jitted programs with recompiles <= 2, strictly below the
+    resident engine's O(events);
+  * dropout under async (timed-out commits): a golden event schedule at a
+    fixed seed, engine-identical outcomes, and the churn rejection naming
+    only churn.
+"""
+import numpy as np
+import pytest
+
+from repro.core.fused import async_pop_perm, split_time_keys
+from repro.core.scenario import ScenarioConfig, ScenarioEngine
+from repro.core.simulation import (
+    SimConfig,
+    _Env,
+    _plan_async_events,
+    run_simulation,
+)
+from repro.core.timing import HeterogeneityConfig
+from repro.models.cnn import vgg_config
+
+TINY = vgg_config("vgg_tiny_afu", [8, "M", 16], num_classes=4, image_size=8)
+
+
+def _cfg(engine, method="fedasync_s", **kw):
+    W = kw.pop("num_workers", 4)
+    base = dict(
+        method=method,
+        engine=engine,
+        rounds=2,
+        num_workers=W,
+        batch_size=16,
+        cnn=TINY,
+        het=HeterogeneityConfig(num_workers=W, sigma=kw.pop("sigma", 3.0)),
+        eval_every=2,
+        seed=5,
+    )
+    base.update(kw)
+    return SimConfig(**base)
+
+
+def _assert_async_equivalent(ref, fus):
+    # identical virtual clocks: total time and every eval's (clock, ...) pair
+    assert ref.total_time == fus.total_time
+    assert len(ref.acc_time) == len(fus.acc_time)
+    for (tr, _), (tf, _) in zip(ref.acc_time, fus.acc_time):
+        assert tr == tf
+    assert ref.comm_bytes == fus.comm_bytes
+    assert ref.scenario_rounds == fus.scenario_rounds
+    for k in ref.global_params:
+        # rtol covers dcasgd's large-magnitude compensated updates, where
+        # f32-vs-f64 merge drift scales with the element (still ~1e-6 rel)
+        np.testing.assert_allclose(
+            np.asarray(ref.global_params[k], np.float32),
+            np.asarray(fus.global_params[k], np.float32),
+            atol=1e-3, rtol=1e-5, err_msg=k,
+        )
+
+
+# ---------------------------------------------------------------------------
+# equivalence: fused == resident == per-worker
+# ---------------------------------------------------------------------------
+
+def test_fused_async_matches_resident_quick():
+    res = run_simulation(_cfg("masked"))
+    fus = run_simulation(_cfg("fused"))
+    _assert_async_equivalent(res, fus)
+    assert fus.host_roundtrips == 0
+    assert fus.fused_chunks >= 1
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("method", ["fedasync_s", "ssp_s", "dcasgd_s"])
+@pytest.mark.parametrize("window", [0.0, 50.0])
+def test_fused_async_engine_equivalence(method, window):
+    kw = dict(method=method, async_window=window, rounds=3, num_workers=6)
+    seq = run_simulation(_cfg("sequential", **kw))
+    res = run_simulation(_cfg("masked", **kw))
+    fus = run_simulation(_cfg("fused", **kw))
+    _assert_async_equivalent(seq, fus)
+    _assert_async_equivalent(res, fus)
+    assert fus.host_roundtrips == 0
+    assert seq.host_roundtrips >= 6 * 3       # per-commit merges round-trip
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("method", ["fedasync_s", "ssp_s", "dcasgd_s"])
+def test_fused_async_dropout_and_sampling_equivalence(method):
+    scen = ScenarioConfig(participation=0.75, dropout=0.4, seed=3)
+    kw = dict(method=method, scenario=scen)
+    seq = run_simulation(_cfg("sequential", **kw))
+    res = run_simulation(_cfg("masked", **kw))
+    fus = run_simulation(_cfg("fused", **kw))
+    _assert_async_equivalent(seq, fus)
+    _assert_async_equivalent(res, fus)
+
+
+# ---------------------------------------------------------------------------
+# device queue pop: host-heap-exact ordering incl. tie-breaks
+# ---------------------------------------------------------------------------
+
+def test_async_pop_perm_breaks_ties_by_worker():
+    hi, lo = split_time_keys(np.asarray([5.0, 3.0, 5.0, 3.0]))
+    rows = np.asarray([3, 2, 1, 0], np.int32)
+    perm = np.asarray(async_pop_perm(hi, lo, rows))
+    # finish 3.0 pops before 5.0; equal finishes pop in worker order
+    np.testing.assert_array_equal(perm, [3, 1, 2, 0])
+
+
+def test_async_pop_perm_splits_preserve_f64_order():
+    # residual-level differences (below f32 resolution) must still order
+    t = np.asarray([1.0, 1.0 + 2**-30, 1.0 + 2**-29], np.float64)
+    hi, lo = split_time_keys(t)
+    assert len(set(hi.tolist())) == 1          # all collide at f32
+    perm = np.asarray(async_pop_perm(hi, lo, np.asarray([2, 1, 0], np.int32)))
+    np.testing.assert_array_equal(perm, [0, 1, 2])
+
+
+def test_fused_async_golden_tiebreak():
+    """Uniform phi (sigma=1, no jitter): every first-wave finish ties, and
+    the plan must pop workers in ascending slot order — the host heap's
+    ``(time, worker)`` tuple order — with the fused run reproducing it."""
+    W, kw = 8, dict(num_workers=8, sigma=1.0, time_jitter=0.0)
+    sim = _cfg("masked", **kw)
+    env = _Env(sim)
+    plan = _plan_async_events(sim, env, None, np.arange(W))
+    assert len(set(plan.finishes[:W].tolist())) == 1   # all-tied first wave
+    np.testing.assert_array_equal(
+        plan.workers, np.tile(np.arange(W), sim.rounds)
+    )
+    res = run_simulation(_cfg("masked", async_window=1000.0, **kw))
+    fus = run_simulation(_cfg("fused", async_window=1000.0, **kw))
+    _assert_async_equivalent(res, fus)
+
+
+# ---------------------------------------------------------------------------
+# host-dispatch + recompile economics
+# ---------------------------------------------------------------------------
+
+def test_fused_async_dispatches_scale_with_chunks_not_events():
+    res = run_simulation(_cfg("masked"))
+    fus = run_simulation(_cfg("fused", round_fusion=4))
+    events = 4 * 2                             # n_part * rounds
+    # the initial + per-n_part-commits accuracy evals go through the counted
+    # jit cache too (2 dispatches each), identically for every engine
+    eval_calls = (2 + 1) * 2
+    assert fus.fused_chunks == events // 4     # one launch per 4-batch chunk
+    assert fus.host_dispatches == fus.fused_chunks + eval_calls
+    # resident pays one dispatch per window batch (= per event, serial)
+    assert res.host_dispatches == events + eval_calls
+    assert fus.host_dispatches < res.host_dispatches
+    # one padded chunk signature -> at most the chunk + a tail recompile
+    assert fus.recompiles <= 2
+    assert fus.compile_walltime_s <= fus.walltime_s
+
+
+# ---------------------------------------------------------------------------
+# dropout under async: golden schedule + churn-only rejection
+# ---------------------------------------------------------------------------
+
+def test_async_dropout_golden_schedule():
+    """Pinned event stream at seed=5 / scenario seed=3, dropout=0.5: the
+    commit order, timed-out commits, staleness integers and version bumps
+    are data — any engine or planner change that shifts them fails here."""
+    sim = _cfg("masked", scenario=ScenarioConfig(dropout=0.5, seed=3))
+    env = _Env(sim)
+    scen = ScenarioEngine(sim.scenario, 4)
+    plan = _plan_async_events(sim, env, scen, scen.static_participants())
+    assert plan.workers.tolist() == [3, 2, 3, 1, 0, 2, 1, 0]
+    assert plan.dropped.tolist() == [
+        False, True, False, True, False, False, False, False,
+    ]
+    assert plan.staleness.tolist() == [0, 1, 0, 2, 2, 2, 2, 2]
+    # dropped commits never bump the server version
+    assert plan.versions.tolist() == [1, 1, 2, 2, 3, 4, 5, 6]
+    assert plan.evals.tolist() == [
+        False, False, False, True, False, False, False, True,
+    ]
+
+
+def test_async_dropout_discards_payload_but_keeps_quota():
+    scen = ScenarioConfig(dropout=0.5, seed=3)
+    clean = run_simulation(_cfg("masked"))
+    res = run_simulation(_cfg("masked", scenario=scen))
+    fus = run_simulation(_cfg("fused", scenario=scen))
+    _assert_async_equivalent(res, fus)
+    # same commit quota (same number of evals), fewer communicated bytes:
+    # 2 of the 8 golden-schedule commits timed out
+    assert len(res.acc_time) == len(clean.acc_time)
+    assert res.comm_bytes == clean.comm_bytes * (8 - 2) / 8
+
+
+def test_async_rejects_churn_naming_only_churn():
+    with pytest.raises(ValueError, match="churn") as exc:
+        run_simulation(_cfg("masked", scenario=ScenarioConfig(churn=0.2)))
+    assert "dropout" not in str(exc.value)
+    with pytest.raises(ValueError, match="schedule"):
+        run_simulation(_cfg("fused", scenario=ScenarioConfig(
+            schedule=[ScenarioEngine(ScenarioConfig(), 4).draw(1)]
+        )))

@@ -263,7 +263,9 @@ def test_resident_momentum_under_churn():
 # ---------------------------------------------------------------------------
 
 @pytest.mark.parametrize("kw,frag", [
-    (dict(method="fedasync_s"), "async"),
+    # async methods themselves fuse now (tests/test_async_fused.py); the
+    # per-commit momentum restart still rejects the resident carry
+    (dict(method="fedasync_s", resident_momentum=True), "async"),
     (dict(dgc_sparsity=0.5), "DGC"),
     (dict(importance="hrank"), "criteria"),
     (dict(compute="block_skip"), "block_skip"),

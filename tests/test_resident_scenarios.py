@@ -78,12 +78,14 @@ def test_scenario_config_validation():
         ScenarioEngine(ScenarioConfig(dropout=1.0), 4)
     with pytest.raises(ValueError):
         ScenarioEngine(ScenarioConfig(min_participants=0), 4)
-    # async methods accept client sampling but reject dropout/churn (the
-    # event queue already models pacing; see tests/test_async_resident.py)
-    with pytest.raises(ValueError):
+    # async methods accept client sampling and dropout (timed-out commits;
+    # see tests/test_async_fused.py) but reject churn — and the churn error
+    # must not blame dropout
+    with pytest.raises(ValueError, match="churn") as exc:
         run_simulation(_cfg("masked", method="fedasync_s",
-                            scenario=ScenarioConfig(dropout=0.5)))
-    with pytest.raises(ValueError):
+                            scenario=ScenarioConfig(churn=0.2)))
+    assert "dropout" not in str(exc.value)
+    with pytest.raises(ValueError, match="churn"):
         run_simulation(_cfg("masked", method="ssp_s",
                             scenario=ScenarioConfig(churn=0.2)))
     with pytest.raises(ValueError):   # scripted schedules are sync-only too
