@@ -9,6 +9,11 @@ scenario, tracking host walltime / recompiles / host round-trips of the
 resident masked engine against the sequential reference.  Results land in
 ``BENCH_scale.json`` so the perf trajectory is tracked across PRs.
 
+``shard_scale`` is the mesh-sharded fleet bench: W x n_dev over the fused
+sync engine on 8 virtual CPU devices, pinning host dispatches FLAT in device
+count and bit-identical prune indices at every mesh size
+(``BENCH_shard.json``).
+
 ``async_scale`` is the asynchronous analogue: W in {10, 50, 200} x scheduler
 (fedasync_s / ssp_s / dcasgd_s) x participation C x engine {masked, fused}.
 Rows split ``compile_walltime_s`` from steady walltime (like BENCH_fused /
@@ -368,6 +373,127 @@ def fused(out_path: str = "BENCH_fused.json", quick: bool = False) -> None:
     print(f"fused/json,{out_path},")
 
 
+def shard_scale(out_path: str = "BENCH_shard.json", quick: bool = False) -> None:
+    """Mesh-sharded fleet bench: W x n_dev grid over the fused sync engine.
+
+    The sharded engine runs the fused ``lax.scan`` chunk as one shard_map
+    program over the fleet mesh axis — per-shard ``[W_local, ...]`` stacks
+    with two-tier aggregation (per-shard ``tensordot`` partial reduce +
+    global ``psum``) — so host dispatches stay O(rounds / round_fusion)
+    while W scales with device count.  CPU CI verifies the *economics*, not
+    device speedups: the 8 "devices" are XLA virtual host devices sharing
+    one physical CPU (``--xla_force_host_platform_device_count=8``), so
+    sharding adds collective overhead without adding silicon.  Checks:
+
+      * ``host_dispatches`` FLAT in n_dev at every W (identical to the
+        single-device fused engine — sharding multiplies devices, never
+        launches);
+      * per-round prune indices BIT-identical across every mesh size;
+      * steady rounds/sec at the largest W within a noise factor of the
+        single-device fused engine (interleaved no-mesh/mesh repetitions,
+        median of per-pair ratios — "not worse" modulo virtual-device
+        collective tax; on real multi-device silicon the sharded engine is
+        where W past single-HBM capacity comes from).
+
+    Rows split ``compile_walltime_s`` from steady walltime like BENCH_fused.
+    Requires >= 8 visible devices (``main()`` injects the XLA flag before
+    jax loads when launched as ``python -m benchmarks.run shard_scale``)."""
+    import jax
+
+    from repro.core.simulation import SimConfig, run_simulation
+    from repro.core.timing import HeterogeneityConfig
+    from repro.launch.mesh import make_fleet_mesh
+    from repro.models.cnn import vgg_config
+
+    n_avail = len(jax.devices())
+    if n_avail < 2:
+        print("shard_scale/skipped,needs >= 2 devices "
+              "(set XLA_FLAGS=--xla_force_host_platform_device_count=8),")
+        return
+    cnn = vgg_config("vgg_shard", [4, "M", 8], num_classes=10, image_size=8)
+    worker_counts = (8,) if quick else (8, 64, 256)
+    device_counts = tuple(d for d in (1, 2, 4, 8) if d <= n_avail)
+    rounds = 4 if quick else 16
+    fusion = 2 if quick else 4
+    rows = []
+    meshes = {d: make_fleet_mesh(d) for d in device_counts}
+    print("name,value,derived")
+
+    def cell(W, n_dev):
+        mesh = None if n_dev == 0 else meshes[n_dev]
+        r = run_simulation(SimConfig(
+            method="adaptcl", engine="fused", rounds=rounds,
+            prune_interval=fusion, round_fusion=fusion, num_workers=W,
+            batch_size=8, cnn=cnn, eval_every=rounds, mesh=mesh,
+            het=HeterogeneityConfig(num_workers=W, sigma=5.0),
+            seed=7,
+        ))
+        assert r.host_roundtrips == 0
+        steady = max(r.walltime_s - r.compile_walltime_s, 1e-9)
+        rows.append(dict(
+            workers=W, n_dev=r.n_devices if mesh is not None else 0,
+            shard_spec=r.shard_spec, rounds=rounds, round_fusion=fusion,
+            walltime_s=r.walltime_s,
+            compile_walltime_s=r.compile_walltime_s,
+            steady_walltime_s=steady,
+            rounds_per_sec_steady=rounds / steady,
+            host_dispatches=r.host_dispatches,
+            fused_chunks=r.fused_chunks, recompiles=r.recompiles,
+            final_acc=r.final_acc,
+        ))
+        print(
+            f"shard_scale/W{W}/ndev{n_dev},{rounds / steady:.2f}rps,"
+            f"wall={r.walltime_s:.2f}s;compile={r.compile_walltime_s:.2f}s;"
+            f"dispatches={r.host_dispatches};spec={r.shard_spec};"
+            f"acc={r.final_acc:.3f}"
+        )
+        return r
+
+    hi = worker_counts[-1]
+    prune_identical, dispatches_flat = [], []
+    pair_ratios = []
+    for W in worker_counts:
+        base = cell(W, 0)   # single-device fused baseline (no mesh)
+        for n_dev in device_counts:
+            if W % n_dev:
+                continue
+            r = cell(W, n_dev)
+            prune_identical.append(r.prune_events == base.prune_events)
+            dispatches_flat.append(r.host_dispatches == base.host_dispatches)
+    n_max = max(d for d in device_counts if hi % d == 0)
+    for _ in range(1 if quick else 3):   # interleaved reps at the largest W
+        r_b = cell(hi, 0)
+        r_s = cell(hi, n_max)
+        pair_ratios.append(
+            (r_b.walltime_s - r_b.compile_walltime_s)
+            / max(r_s.walltime_s - r_s.compile_walltime_s, 1e-9)
+        )
+    ratio = sorted(pair_ratios)[len(pair_ratios) // 2]
+    checks = {
+        "host_dispatches_flat_in_n_dev": all(dispatches_flat),
+        "prune_indices_bit_identical": all(prune_identical),
+        "steady_ratio_at_max_W": ratio,           # no-mesh steady / mesh steady
+        "steady_ratio_samples": pair_ratios,
+        # virtual host devices share one CPU: require the sharded engine to
+        # stay within 2.5x of single-device steady throughput (measured
+        # ~2.1x tax — the per-round psum crosses 8 XLA host "devices" with
+        # no extra silicon behind them), not to beat it — throughput parity
+        # and the capacity win need real multi-device hardware
+        "steady_within_2_5x_of_single_device": ratio >= 0.4,
+    }
+    for k, v in checks.items():
+        print(f"shard_scale/{k},{v},")
+    with open(out_path, "w") as f:
+        json.dump({
+            "rows": rows,
+            "worker_counts": list(worker_counts),
+            "device_counts": list(device_counts),
+            "round_fusion": fusion,
+            "checks": checks,
+        }, f, indent=2)
+    print(f"shard_scale/json,{out_path},")
+
+
 def retention_sweep(out_path: str = "BENCH_retention.json", quick: bool = False) -> None:
     """Device-FLOPs-vs-retention bench: compute path x retention grid.
 
@@ -464,14 +590,17 @@ def main() -> None:
     )
     ap.add_argument(
         "command", nargs="?", default="tables",
-        choices=("tables", "scale", "async_scale", "retention_sweep", "fused"),
+        choices=("tables", "scale", "async_scale", "retention_sweep", "fused",
+                 "shard_scale"),
         help="'tables' (default) = paper-table benches; 'scale' = sync "
              "fleet-scaling grid (W x engine x scenario -> BENCH_scale.json); "
              "'async_scale' = resident async scheduler grid (W x scheduler x "
              "participation C -> BENCH_async.json); 'retention_sweep' = "
              "device FLOPs vs retention, dense vs block_skip "
              "(-> BENCH_retention.json); 'fused' = round-fusion rounds/sec + "
-             "host-dispatch grid, masked vs fused (-> BENCH_fused.json)",
+             "host-dispatch grid, masked vs fused (-> BENCH_fused.json); "
+             "'shard_scale' = mesh-sharded fused engine, W x n_dev grid on 8 "
+             "virtual CPU devices (-> BENCH_shard.json)",
     )
     ap.add_argument("--only", default=None)
     ap.add_argument("--quick", action="store_true")
@@ -488,6 +617,19 @@ def main() -> None:
         os.environ["BENCH_QUICK"] = "1"
     os.environ["BENCH_ENGINE"] = args.engine
 
+    if args.command == "shard_scale":
+        # the virtual-device flag must land before jax initialises its
+        # backend — run.py imports jax lazily inside the bench functions,
+        # so injecting here is early enough when launched as a script
+        flag = "--xla_force_host_platform_device_count=8"
+        if "jax" not in sys.modules and flag.split("=")[0] not in os.environ.get(
+            "XLA_FLAGS", ""
+        ):
+            os.environ["XLA_FLAGS"] = (
+                os.environ.get("XLA_FLAGS", "") + " " + flag
+            ).strip()
+        shard_scale(args.out or "BENCH_shard.json", quick=args.quick)
+        return
     if args.command == "scale":
         scale(args.out or "BENCH_scale.json", quick=args.quick)
         return

@@ -22,6 +22,11 @@ head through the ``kernels/pruned_matmul`` block-skip Pallas kernel, so a
 pruned worker's device FLOPs track its retention (``--compute-blocks``
 sets the tile sizes; shrink them for CPU interpret runs).
 
+``--mesh-devices N`` (with ``--engine fused``, sync methods) shards the
+resident ``[W, ...]`` stacks over an N-device fleet mesh axis — the fused
+scan runs per shard with two-tier psum aggregation; on CPU expose virtual
+devices first: ``XLA_FLAGS=--xla_force_host_platform_device_count=8``.
+
 ``--methods`` picks the frameworks to compare (first = baseline for the
 speedup line), e.g. the async schedulers on the resident engine:
 
@@ -60,6 +65,11 @@ def main():
                     metavar="BM,BN,BK",
                     help="pruned_matmul tile sizes; shrink (e.g. 128,8,8) "
                          "for fine-grained CPU/interpret runs")
+    ap.add_argument("--mesh-devices", type=int, default=0, metavar="N",
+                    help="mesh-sharded fleet: shard the [W, ...] stacks over "
+                         "N devices (fused sync engine only; W %% N == 0). "
+                         "On a CPU-only host expose virtual devices first: "
+                         "XLA_FLAGS=--xla_force_host_platform_device_count=8")
     ap.add_argument("--scenario", default=None, metavar="C,DROPOUT,CHURN",
                     help="client sampling fraction, dropout prob, churn prob")
     ap.add_argument("--methods", default="fedavg_s,adaptcl",
@@ -75,6 +85,12 @@ def main():
     if args.scenario:
         c, drop, churn = (float(v) for v in args.scenario.split(","))
         scenario = ScenarioConfig(participation=c, dropout=drop, churn=churn)
+
+    mesh = None
+    if args.mesh_devices:
+        from repro.launch.mesh import make_fleet_mesh
+
+        mesh = make_fleet_mesh(args.mesh_devices)
 
     methods = [m.strip() for m in args.methods.split(",") if m.strip()]
     results = {}
@@ -92,6 +108,7 @@ def main():
             compute_blocks=tuple(int(v) for v in args.compute_blocks.split(",")),
             scenario=scenario,
             async_window=args.async_window,
+            mesh=mesh,
         )
         r = run_simulation(sim)
         results[method] = r
@@ -99,6 +116,10 @@ def main():
               f"param_red={r.param_reduction:.1%} "
               f"(host: {r.walltime_s:.1f}s, {r.recompiles} compiles, "
               f"{r.host_roundtrips} roundtrips, engine={r.engine})")
+        if mesh is not None:
+            print(f"            mesh: {r.n_devices} devices x "
+                  f"W_local={args.workers // r.fleet_axis_size} "
+                  f"spec={r.shard_spec}")
         if args.compute == "block_skip":
             print(f"            compute=block_skip: "
                   f"flops_exec/ideal={r.flops_executed / max(r.flops_ideal, 1e-9):.3f} "

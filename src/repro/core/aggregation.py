@@ -48,6 +48,7 @@ from __future__ import annotations
 
 from typing import Dict, List, Mapping, Optional, Sequence, Tuple
 
+import jax
 import jax.numpy as jnp
 import numpy as np
 
@@ -234,26 +235,47 @@ def aggregate_by_worker_stacked(
 def aggregate_by_worker_stacked_jnp(
     param_stacks: Mapping[str, jnp.ndarray],   # {path: [W, ...]} masked stacks
     weights: jnp.ndarray,                      # [W]; 0 for non-submitters
+    axis: Optional[str] = None,
 ) -> Dict[str, jnp.ndarray]:
     """Pure-``jnp`` by-worker aggregation — the fused round engine's in-scan
     server step.  Numerics: float32 on device vs the host path's float64
-    accumulate-then-cast; the engine-equivalence tests bound the drift."""
-    return {
+    accumulate-then-cast; the engine-equivalence tests bound the drift.
+
+    ``axis`` turns this into the TWO-TIER hierarchical server of the
+    mesh-sharded fleet (edge -> regional -> global parameter servers): under
+    ``shard_map`` each device sees only its ``W_local`` rows, the local
+    ``tensordot`` is the regional server's partial reduce over its edge
+    workers, and the closing ``psum`` over the fleet mesh axis is the global
+    tier — sum over shards of per-shard weighted sums, an on-mesh
+    all-reduce, never a host gather."""
+    out = {
         path: jnp.tensordot(weights, stack, axes=1)
         for path, stack in param_stacks.items()
     }
+    if axis is not None:
+        out = {path: jax.lax.psum(v, axis) for path, v in out.items()}
+    return out
 
 
 def aggregate_by_unit_stacked_jnp(
     param_stacks: Mapping[str, jnp.ndarray],
     mask_stacks: Mapping[str, jnp.ndarray],
     submitters: jnp.ndarray,                   # [W] float 0/1
+    axis: Optional[str] = None,
 ) -> Dict[str, jnp.ndarray]:
-    """Pure-``jnp`` per-coordinate 1/w' masked mean (fused by-unit path)."""
+    """Pure-``jnp`` per-coordinate 1/w' masked mean (fused by-unit path).
+
+    Under a fleet mesh axis the numerator AND the holder-count denominator
+    each two-tier independently (per-shard partial sums, then one ``psum``
+    apiece), and only then divide — dividing per-shard would weight each
+    regional mean by its local holders instead of the global w'."""
     out: Dict[str, jnp.ndarray] = {}
     for path, stack in param_stacks.items():
         num = jnp.tensordot(submitters, stack, axes=1)
         den = jnp.tensordot(submitters, mask_stacks[path], axes=1)
+        if axis is not None:
+            num = jax.lax.psum(num, axis)
+            den = jax.lax.psum(den, axis)
         out[path] = num / jnp.maximum(den, 1.0)
     return out
 

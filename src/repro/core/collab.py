@@ -27,14 +27,7 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import PartitionSpec as P
 
-# jax moved shard_map out of experimental (and renamed check_rep->check_vma);
-# support both so the mesh path works across the versions we run on.
-if hasattr(jax, "shard_map"):
-    _shard_map, _CHECK_KW = jax.shard_map, "check_vma"
-else:  # jax <= 0.4.x
-    from jax.experimental.shard_map import shard_map as _shard_map
-
-    _CHECK_KW = "check_rep"
+from repro.sharding.compat import shard_map_compat
 
 from .aggregation import UnitMap
 from .masks import GlobalIndex
@@ -123,10 +116,9 @@ def collab_round(
 
     pspec_rep = jax.tree.map(lambda _: P(), global_params)
     pspec_masks = jax.tree.map(lambda _: P(axis), masks)
-    return _shard_map(
+    return shard_map_compat(
         worker,
         mesh=mesh,
         in_specs=(pspec_rep, pspec_masks, P(axis), P(axis)),
         out_specs=pspec_rep,
-        **{_CHECK_KW: False},
     )(global_params, masks, x, y)

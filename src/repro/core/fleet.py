@@ -76,6 +76,7 @@ from __future__ import annotations
 import dataclasses
 from typing import Dict, List, Mapping, Optional, Sequence, Tuple
 
+import jax
 import jax.numpy as jnp
 import numpy as np
 
@@ -97,6 +98,7 @@ __all__ = [
     "FleetEngine",
     "FleetState",
     "bucket_rows",
+    "global_to_shard_local",
     "gather_stack_rows",
     "scatter_stack_rows",
     "refetch_rows_jnp",
@@ -160,24 +162,86 @@ def gl_factors_from_counts(
     return {lname: jnp.sqrt(v) for lname, v in sizes.items()}
 
 
-def bucket_rows(n: int, cap: int) -> int:
+def bucket_rows(n: int, cap: int, multiple: int = 1) -> int:
     """Sub-stack row bucket for ``n`` active rows: the smallest power of two
     >= n, capped at the fleet size.  A handful of buckets covers every
-    participation pattern, which is what bounds recompiles."""
+    participation pattern, which is what bounds recompiles.
+
+    ``multiple`` (the shard count of a mesh-sharded fleet) floors the bucket:
+    a gathered sub-stack must itself divide across the fleet axis, so buckets
+    below the shard count round up to it (pow2 buckets >= a pow2 shard count
+    already divide; a sharded fleet's shard count is a device count, i.e.
+    pow2 on every mesh we build)."""
     if n < 1:
         raise ValueError(f"bucket_rows needs n >= 1, got {n}")
+    if multiple < 1:
+        raise ValueError(f"bucket_rows needs multiple >= 1, got {multiple}")
     b = 1
     while b < n:
         b <<= 1
-    return min(b, cap)
+    b = min(b, cap)
+    if b % multiple:
+        b = min(-(-b // multiple) * multiple, cap)
+        if b % multiple:
+            raise ValueError(
+                f"fleet size {cap} does not divide over {multiple} shards"
+            )
+    return b
+
+
+def global_to_shard_local(
+    rows: Sequence[int], num_workers: int, num_shards: int
+) -> Tuple[np.ndarray, np.ndarray]:
+    """Map GLOBAL worker slot ids to ``(shard, local_row)`` pairs under the
+    contiguous row layout of a fleet sharded over a mesh axis: slot ``w``
+    lives on shard ``w // W_local`` at local row ``w % W_local`` with
+    ``W_local = W / num_shards``.  This is the index algebra behind the
+    sampled-cohort gather on a sharded fleet — per-shard work is
+    ``gather(local_rows[shard_ids == s])``, never a raw global ``take`` on a
+    per-shard array (which would silently clamp out-of-shard rows).
+
+    Out-of-range slot ids and non-divisible fleets raise instead of
+    wrapping."""
+    if num_shards < 1 or num_workers % num_shards:
+        raise ValueError(
+            f"fleet of {num_workers} does not divide over {num_shards} shards"
+        )
+    rows = np.asarray(rows, np.int64)
+    if rows.size and (rows.min() < 0 or rows.max() >= num_workers):
+        raise ValueError(
+            f"slot ids {rows[(rows < 0) | (rows >= num_workers)]} outside "
+            f"[0, {num_workers})"
+        )
+    w_local = num_workers // num_shards
+    return rows // w_local, rows % w_local
+
+
+def _check_rows(rows: np.ndarray, num_rows: Optional[int]) -> np.ndarray:
+    rows = np.asarray(rows, np.int64)
+    if num_rows is not None and rows.size and (
+        rows.min() < 0 or rows.max() >= num_rows
+    ):
+        raise ValueError(
+            f"row ids {rows[(rows < 0) | (rows >= num_rows)]} outside "
+            f"[0, {num_rows}) — pass GLOBAL slot ids (use "
+            "global_to_shard_local for per-shard layouts)"
+        )
+    return rows
 
 
 def gather_stack_rows(
-    stacks: Mapping[str, jnp.ndarray], rows: np.ndarray
+    stacks: Mapping[str, jnp.ndarray],
+    rows: np.ndarray,
+    num_rows: Optional[int] = None,
 ) -> Dict[str, jnp.ndarray]:
     """Gather rows of ``[W, ...]`` stacks into a ``[B, ...]`` sub-stack
-    (``rows`` may repeat indices — bucket padding repeats row 0)."""
-    idx = jnp.asarray(np.asarray(rows, np.int64))
+    (``rows`` may repeat indices — bucket padding repeats row 0).
+
+    ``rows`` are GLOBAL slot ids; pass ``num_rows=W`` to assert that (the
+    device ``take`` clamps silently, so an out-of-range id would otherwise
+    mis-gather).  On a mesh-sharded stack the gather is a cross-shard
+    collective compiled by GSPMD — correct for any row mix."""
+    idx = jnp.asarray(_check_rows(rows, num_rows))
     return {k: jnp.take(v, idx, axis=0) for k, v in stacks.items()}
 
 
@@ -185,11 +249,13 @@ def scatter_stack_rows(
     stacks: Mapping[str, jnp.ndarray],
     rows: np.ndarray,
     sub: Mapping[str, jnp.ndarray],
+    num_rows: Optional[int] = None,
 ) -> Dict[str, jnp.ndarray]:
     """Scatter the first ``len(rows)`` rows of a sub-stack back into the
     ``[W, ...]`` stacks (the inverse of ``gather_stack_rows`` on real rows;
-    bucket-padding rows beyond ``len(rows)`` are discarded)."""
-    idx = jnp.asarray(np.asarray(rows, np.int64))
+    bucket-padding rows beyond ``len(rows)`` are discarded).  ``rows`` are
+    GLOBAL slot ids, bounds-checked like the gather."""
+    idx = jnp.asarray(_check_rows(rows, num_rows))
     n = len(rows)
     return {k: v.at[idx].set(sub[k][:n]) for k, v in stacks.items()}
 
@@ -350,11 +416,18 @@ class FleetEngine:
         base_params: Params,
         shards_x: Sequence[np.ndarray],
         shards_y: Sequence[np.ndarray],
+        sharding=None,
     ) -> "FleetState":
         """Stack W full-model replicas + their data shards on device.
 
         Shards are padded to the longest shard; batch plans only ever index
-        below each worker's true length, so the padding is never read."""
+        below each worker's true length, so the padding is never read.
+
+        ``sharding`` (a ``NamedSharding`` from ``specs.fleet_sharding``, or
+        None for the single-device layout) places every ``[W, ...]`` stack
+        row-sharded over the fleet mesh axis — the state itself is
+        sharding-agnostic: nothing downstream changes shape or dtype, rows
+        just live on ``num_shards`` devices as ``W = num_shards x W_local``."""
         W = len(shards_x)
         sizes = np.array([len(x) for x in shards_x], dtype=np.int64)
         n_max = int(sizes.max())
@@ -363,15 +436,32 @@ class FleetEngine:
         for w in range(W):
             xs[w, : sizes[w]] = shards_x[w]
             ys[w, : sizes[w]] = shards_y[w]
+        n_shards = 1
+        if sharding is not None:
+            n_shards = int(np.prod([
+                sharding.mesh.shape[a]
+                for a in jax.tree.leaves(tuple(sharding.spec))
+            ], dtype=np.int64)) or 1
+            if W % n_shards:
+                raise ValueError(
+                    f"fleet of {W} workers does not divide over the "
+                    f"{n_shards}-way fleet mesh axis"
+                )
+        put = (lambda v: jax.device_put(v, sharding)) if sharding is not None \
+            else jnp.asarray
         params = {
-            k: jnp.broadcast_to(jnp.asarray(v)[None], (W,) + tuple(v.shape))
+            k: put(np.broadcast_to(
+                np.asarray(v)[None], (W,) + tuple(v.shape)
+            ))
             for k, v in base_params.items()
         }
-        masks = {k: jnp.ones((W,) + tuple(v.shape), jnp.float32)
-                 for k, v in base_params.items()}
+        masks = {
+            k: put(np.ones((W,) + tuple(v.shape), np.float32))
+            for k, v in base_params.items()
+        }
         state = FleetState(
             params=params, masks=masks, momentum=None,
-            xs=jnp.asarray(xs), ys=jnp.asarray(ys),
+            xs=put(xs), ys=put(ys),
             shard_sizes=sizes, num_workers=W,
             gl_sizes={
                 lname: np.full((W,), s, np.float32)
@@ -379,6 +469,7 @@ class FleetEngine:
                     self.base_shapes, self.unit_map
                 ).items()
             },
+            sharding=sharding, num_shards=n_shards,
         )
         return state
 
@@ -538,7 +629,7 @@ class FleetEngine:
         schedulers' stacked aggregate out) and ``None`` otherwise."""
         W = state.num_workers
         B = len(rows)
-        bucket = bucket_rows(B, W)
+        bucket = bucket_rows(B, W, multiple=state.num_shards)
         rows = [int(w) for w in rows]
         rows_pad = rows + [rows[0]] * (bucket - B)
         stacked = self.stack_plans(
@@ -548,8 +639,8 @@ class FleetEngine:
         if stacked is None:
             return np.zeros(B, np.float32), None
         plan_stack, valid = stacked
-        sub_params = gather_stack_rows(state.params, rows_pad)
-        sub_masks = gather_stack_rows(state.masks, rows_pad)
+        sub_params = gather_stack_rows(state.params, rows_pad, num_rows=W)
+        sub_masks = gather_stack_rows(state.masks, rows_pad, num_rows=W)
         idx = jnp.asarray(np.asarray(rows_pad, np.int64))
         xs = jnp.take(state.xs, idx, axis=0)
         ys = jnp.take(state.ys, idx, axis=0)
@@ -565,10 +656,12 @@ class FleetEngine:
         )
         self.batched_calls += 1
         self.buckets_used.add(bucket)
-        state.params = scatter_stack_rows(state.params, rows, out)
+        state.params = scatter_stack_rows(state.params, rows, out, num_rows=W)
         if carry_momentum:
             # cross-round mode: the trained rows' velocity is the next carry
-            state.momentum = scatter_stack_rows(state.momentum, rows, mom_out)
+            state.momentum = scatter_stack_rows(
+                state.momentum, rows, mom_out, num_rows=W
+            )
         # otherwise state.momentum (a full-stack observational snapshot,
         # nothing reads it) is left untouched — momentum restarts per phase
         trained = (
@@ -595,7 +688,13 @@ class FleetState:
     participation-sized sub-stack phases do not update it).  ``shard_sizes``
     records true (pre-padding) shard
     lengths; ``gl_sizes`` the per-worker sqrt-group-size factors that keep
-    the group-lasso penalty equal to each physically-reconfigured twin."""
+    the group-lasso penalty equal to each physically-reconfigured twin.
+
+    ``sharding``/``num_shards`` record the mesh placement of the stacks
+    (``specs.fleet_sharding`` row-sharding over a fleet axis, or None/1 on a
+    single device): the state is sharding-AGNOSTIC — shapes, dtypes and
+    every consumer are identical either way, rows just live on
+    ``num_shards`` devices as ``W = num_shards x W_local``."""
 
     params: Dict[str, jnp.ndarray]
     masks: Dict[str, jnp.ndarray]
@@ -605,3 +704,5 @@ class FleetState:
     shard_sizes: np.ndarray
     num_workers: int
     gl_sizes: Dict[str, np.ndarray]
+    sharding: Optional[object] = None
+    num_shards: int = 1

@@ -79,8 +79,11 @@ from typing import Dict, List, Optional
 import jax
 import jax.numpy as jnp
 import numpy as np
+from jax.sharding import PartitionSpec as P
 
 from repro.models.cnn import cnn_flops_from_shapes, extract_bn_scales
+from repro.sharding.compat import shard_map_compat
+from repro.sharding.specs import fleet_sharding
 
 from repro.optim.group_lasso import group_size_sqrt_from_shapes
 
@@ -147,6 +150,20 @@ def validate_fused_config(sim) -> None:
             f"{sim.importance!r} needs host-side statistics (use "
             "engine='masked')"
         )
+    mesh = getattr(sim, "mesh", None)
+    if mesh is not None:
+        axis = sim.fleet_axis
+        if axis not in mesh.shape:
+            raise ValueError(
+                f"SimConfig.mesh axes {tuple(mesh.shape)} have no fleet "
+                f"axis {axis!r} (SimConfig.fleet_axis)"
+            )
+        n_dev = mesh.shape[axis]
+        if sim.num_workers % n_dev:
+            raise ValueError(
+                f"num_workers={sim.num_workers} does not divide over the "
+                f"{n_dev}-way {axis!r} mesh axis (W = n_dev x W_local)"
+            )
 
 
 def _static_orders(sim, env, flat: UnitFlat, cig_scores, prune_round_count):
@@ -173,7 +190,8 @@ def _static_orders(sim, env, flat: UnitFlat, cig_scores, prune_round_count):
 
 def _build_chunk_fn(trainer, unit_map, base_shapes, flat: UnitFlat, lam,
                     *, by_unit: bool, importance: str,
-                    resident_momentum: bool, has_phase_b: bool):
+                    resident_momentum: bool, has_phase_b: bool,
+                    mesh=None, fleet_axis: str = "fleet"):
     """Build the jitted chunk program: ``lax.scan`` over K fused rounds.
 
     Carry: (param stacks, mask stacks, flat presence, global params,
@@ -181,7 +199,24 @@ def _build_chunk_fn(trainer, unit_map, base_shapes, flat: UnitFlat, lam,
     between scan steps.  Per-round inputs arrive as ``[K, ...]`` tensors;
     per-round outputs (post-prune presence, post-aggregation global) come
     back stacked so the host can account payloads/clock and evaluate lazily.
-    """
+
+    **Mesh-sharded fleet** (``mesh`` set): the SAME chunk body runs under
+    ``shard_map`` over the ``fleet_axis`` mesh axis — each device scans its
+    ``W_local = W / n_dev`` rows.  Everything in a round is row-local
+    (masked broadcast-back of the replicated global, vmapped training,
+    presence pruning, device importance scores), EXCEPT aggregation, which
+    becomes the two-tier on-mesh collective
+    (``aggregate_by_*_stacked_jnp(axis=...)``: per-shard partial reduce,
+    then a global ``psum``), after which the new global is replicated on
+    every shard again.  One jit dispatch still covers the whole chunk, so
+    host dispatches stay O(R / round_fusion) while W scales with devices.
+
+    Prune-order bit-identity under sharding: removal orders for the static
+    criteria ship from host as ``[W, U]`` integer rows (importance scores
+    gathered/computed on HOST at prune events — never trained params), and
+    the device-scored criteria (l1/taylor) reduce within a row only — no
+    cross-worker collective touches a score, so sharding the row axis
+    cannot reorder a removal walk."""
     train_one = trainer.make_resident_train(unit_map, lam, carry_momentum=True)
     vm_train = jax.vmap(
         lambda p, m0, x, y, plan, valid, mask, gl:
@@ -301,12 +336,15 @@ def _build_chunk_fn(trainer, unit_map, base_shapes, flat: UnitFlat, lam,
                 (params, masks, presence, momentum),
             )
 
+            agg_axis = fleet_axis if mesh is not None else None
             if by_unit:
                 g_new = aggregate_by_unit_stacked_jnp(
-                    params, masks, inp["submitters"]
+                    params, masks, inp["submitters"], axis=agg_axis
                 )
             else:
-                g_new = aggregate_by_worker_stacked_jnp(params, inp["weights"])
+                g_new = aggregate_by_worker_stacked_jnp(
+                    params, inp["weights"], axis=agg_axis
+                )
             # dead padding rounds (real=False) keep the global untouched, so
             # every chunk shares ONE [K]-shaped compiled program
             global_p = {
@@ -324,7 +362,28 @@ def _build_chunk_fn(trainer, unit_map, base_shapes, flat: UnitFlat, lam,
         )
         return params, momentum, presence, global_p, pres_seq, glob_seq
 
-    return jax.jit(chunk)
+    if mesh is None:
+        return jax.jit(chunk)
+
+    # one lax.scan program PER SHARD: row-stacked args shard over the fleet
+    # axis (dim 0 for state, dim 1 for [K, W, ...] per-round tensors), the
+    # global and the per-round scalars replicate; outputs mirror that, with
+    # the post-psum global (and its [K, ...] eval trail) replicated.
+    fleet, rep = P(fleet_axis), P()
+    per_round_specs = {
+        "plan_a": P(None, fleet_axis), "valid_a": P(None, fleet_axis),
+        "budgets": P(None, fleet_axis), "prune_any": rep, "real": rep,
+        "weights": P(None, fleet_axis), "submitters": P(None, fleet_axis),
+    }
+    if has_phase_b:
+        per_round_specs["plan_b"] = P(None, fleet_axis)
+        per_round_specs["valid_b"] = P(None, fleet_axis)
+    return jax.jit(shard_map_compat(
+        chunk, mesh=mesh,
+        in_specs=(fleet, fleet, fleet, rep, fleet, fleet, fleet,
+                  per_round_specs, fleet),
+        out_specs=(fleet, fleet, fleet, rep, P(None, fleet_axis), rep),
+    ))
 
 
 def run_sync_fused(sim, env):
@@ -346,6 +405,10 @@ def run_sync_fused(sim, env):
     base_shapes = env.base_shapes
     flat = flatten_unit_space(env.space)
     U = flat.num_units
+    mesh = getattr(sim, "mesh", None)
+    state_sharding = (
+        fleet_sharding(mesh, sim.fleet_axis) if mesh is not None else None
+    )
 
     scen = ScenarioEngine(sim.scenario, W) if sim.scenario is not None else None
     if scen is not None:
@@ -358,7 +421,10 @@ def run_sync_fused(sim, env):
         plan_all = ScenarioPlan.full(sim.rounds, W)
 
     shard_x, shard_y = zip(*(env.shard_xy(w) for w in range(W)))
-    state = env.fleet.init_state(env.base_params, list(shard_x), list(shard_y))
+    state = env.fleet.init_state(
+        env.base_params, list(shard_x), list(shard_y),
+        sharding=state_sharding,
+    )
     if sim.resident_momentum:
         env.fleet.init_momentum(state)
 
@@ -420,10 +486,16 @@ def run_sync_fused(sim, env):
     sig_shapes = tuple(
         sorted((k, tuple(v.shape)) for k, v in state.params.items())
     )
+    mesh_sig = (
+        (sim.fleet_axis, int(mesh.shape[sim.fleet_axis]),
+         tuple(int(d.id) for d in mesh.devices.flat))
+        if mesh is not None else None
+    )
     sig = (
         sig_shapes,
         ("fused", K_pad, pad_a, pad_b, tuple(state.xs.shape), batch,
-         sim.aggregation, sim.importance, bool(sim.resident_momentum)),
+         sim.aggregation, sim.importance, bool(sim.resident_momentum),
+         mesh_sig),
         float(lam),
     )
     build = lambda: _build_chunk_fn(
@@ -432,6 +504,7 @@ def run_sync_fused(sim, env):
         importance=sim.importance,
         resident_momentum=bool(sim.resident_momentum),
         has_phase_b=pad_b > 0,
+        mesh=mesh, fleet_axis=sim.fleet_axis,
     )
 
     t = 0

@@ -70,7 +70,27 @@ __all__ = [
     "ScenarioEngine",
     "ScenarioPlan",
     "full_participation",
+    "shard_cohorts",
 ]
+
+
+def shard_cohorts(
+    rows: Sequence[int], num_workers: int, num_shards: int
+) -> List[np.ndarray]:
+    """Split a sampled cohort's GLOBAL slot ids into per-shard LOCAL row sets
+    under the mesh-sharded fleet's contiguous layout (shard ``s`` owns slots
+    ``[s*W_local, (s+1)*W_local)``).  This is the shard-aware form of cohort
+    sampling: per-shard gathers take ``out[s]`` — local indices that cannot
+    fall outside the shard — instead of raw global ids (which a per-shard
+    ``take`` would silently clamp).  Ids within each shard keep their draw
+    order."""
+    from .fleet import global_to_shard_local   # lazy: keep scenario light
+
+    shard_ids, local = global_to_shard_local(rows, num_workers, num_shards)
+    return [
+        np.asarray(local[shard_ids == s], np.int64)
+        for s in range(num_shards)
+    ]
 
 
 @dataclasses.dataclass

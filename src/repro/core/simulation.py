@@ -198,6 +198,13 @@ class SimConfig:
     # async engines: event-queue commits landing within this virtual window
     # batch into ONE fleet call (0.0 = serial, exactly the legacy behavior)
     async_window: float = 0.0
+    # mesh-sharded fleet (fused sync engine only): a 1-D device mesh with a
+    # ``fleet_axis`` axis (launch.mesh.make_fleet_mesh) shards every
+    # resident [W, ...] stack as W = n_dev x W_local and runs each scan
+    # chunk as one program PER SHARD with on-mesh two-tier aggregation
+    # (core.fused / sharding.specs.fleet_sharding).  None = single device.
+    mesh: Optional[object] = None
+    fleet_axis: str = "fleet"
     cnn: CNNConfig = dataclasses.field(default_factory=default_cnn)
     task: Optional[SyntheticImageTask] = None
     eval_every: int = 1
@@ -261,6 +268,12 @@ class SimResult:
     compile_walltime_s: float = 0.0
     # fused engine: number of lax.scan chunk programs launched
     fused_chunks: int = 0
+    # mesh the run executed on (SimConfig.mesh): total devices, fleet-axis
+    # extent, and the [W, ...] stack PartitionSpec — 1/1/None on
+    # single-device runs, so every BENCH row records its mesh
+    n_devices: int = 1
+    fleet_axis_size: int = 1
+    shard_spec: Optional[str] = None
     # every pruning event: (round, worker, {layer: retained unit ids}) —
     # what the cross-engine bit-identity tests compare round-by-round
     prune_events: List[Tuple[int, int, Dict[str, tuple]]] = dataclasses.field(
@@ -310,6 +323,16 @@ class _Env:
                 "resident_momentum needs a resident engine "
                 "(engine='masked' or 'fused') — the cross-round carry IS "
                 "the FleetState momentum stack"
+            )
+        if sim.mesh is not None and (
+            sim.engine != "fused"
+            or sim.method not in ("adaptcl", "fedavg", "fedavg_s")
+        ):
+            raise ValueError(
+                "SimConfig.mesh (the mesh-sharded fleet) requires the fused "
+                "SYNC engine (engine='fused', method in adaptcl/fedavg/"
+                "fedavg_s) — the sharded path is the per-shard lax.scan "
+                "chunk program with on-mesh aggregation (core.fused)"
             )
         self.task = sim.task or SyntheticImageTask(
             num_classes=sim.cnn.num_classes, image_size=sim.cnn.image_size,
@@ -1160,6 +1183,12 @@ def _finalize(sim, env, acc_time, het_traj, sim_traj, upd_times, retentions,
     param_sizes = [sum(v.size for v in p.values()) for p in worker_params]
     flops = [cnn_flops(p, sim.cnn) for p in worker_params]
     full_size = sum(v.size for v in env.base_params.values())
+    if sim.mesh is not None:
+        n_devices = int(np.prod(list(sim.mesh.shape.values())))
+        fleet_axis_size = int(sim.mesh.shape[sim.fleet_axis])
+        shard_spec = f"PartitionSpec({sim.fleet_axis!r})"
+    else:
+        n_devices, fleet_axis_size, shard_spec = 1, 1, None
     return SimResult(
         method=sim.method,
         acc_time=acc_time,
@@ -1182,6 +1211,9 @@ def _finalize(sim, env, acc_time, het_traj, sim_traj, upd_times, retentions,
         host_dispatches=env.trainer.dispatch_count,
         compile_walltime_s=env.trainer.compile_walltime_s,
         fused_chunks=fused_chunks,
+        n_devices=n_devices,
+        fleet_axis_size=fleet_axis_size,
+        shard_spec=shard_spec,
         prune_events=prune_events or [],
         scenario_rounds=scenario_rounds or [],
         bucket_sizes=sorted(env.fleet.buckets_used),

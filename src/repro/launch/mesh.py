@@ -11,7 +11,12 @@ from __future__ import annotations
 
 import jax
 
-__all__ = ["make_production_mesh", "make_local_mesh", "HARDWARE"]
+__all__ = [
+    "make_production_mesh",
+    "make_local_mesh",
+    "make_fleet_mesh",
+    "HARDWARE",
+]
 
 # TPU v5e hardware constants used by the roofline analysis (per chip).
 HARDWARE = {
@@ -34,3 +39,18 @@ def make_local_mesh(data: int = 1, model: int = 1):
     if data * model > n:
         data, model = n, 1
     return jax.make_mesh((data, model), ("data", "model"))
+
+
+def make_fleet_mesh(n_dev: int | None = None, axis: str = "fleet"):
+    """1-D worker-shard mesh for the resident fleet (``SimConfig.mesh``).
+
+    ``n_dev`` defaults to every visible device; on CPU use
+    ``XLA_FLAGS=--xla_force_host_platform_device_count=8`` (set before any
+    jax import) to get virtual devices.  The simulator shards its
+    ``[W, ...]`` stacks over ``axis`` as ``W = n_dev x W_local``."""
+    avail = len(jax.devices())
+    if n_dev is None:
+        n_dev = avail
+    if n_dev > avail:
+        raise ValueError(f"requested {n_dev} devices, only {avail} visible")
+    return jax.make_mesh((n_dev,), (axis,))

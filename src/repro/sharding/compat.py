@@ -1,0 +1,31 @@
+"""Version-compat shims for the sharding APIs we use.
+
+``shard_map`` moved out of ``jax.experimental`` (and its replication-check
+kwarg was renamed ``check_rep`` -> ``check_vma``) across the jax versions
+this repo runs on.  The dance lives HERE once — ``core.collab`` (workers as
+data-axis slices) and the mesh-sharded fleet path (``core.fused``) both
+import :func:`shard_map_compat` instead of inlining the probe.
+"""
+from __future__ import annotations
+
+import jax
+
+__all__ = ["shard_map_compat"]
+
+if hasattr(jax, "shard_map"):
+    _shard_map, _CHECK_KW = jax.shard_map, "check_vma"
+else:  # jax <= 0.4.x
+    from jax.experimental.shard_map import shard_map as _shard_map
+
+    _CHECK_KW = "check_rep"
+
+
+def shard_map_compat(f, mesh, in_specs, out_specs, check: bool = False):
+    """``shard_map`` across jax versions, with the replication check under
+    one boolean (``check_vma`` on current jax, ``check_rep`` on <= 0.4.x).
+    Defaults to False: our bodies close replicated globals over ``psum``
+    collectives, which the strict checker rejects on older versions."""
+    return _shard_map(
+        f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+        **{_CHECK_KW: check},
+    )

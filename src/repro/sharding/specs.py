@@ -32,7 +32,30 @@ __all__ = [
     "tree_pspecs",
     "constrain",
     "current_mesh",
+    "fleet_pspec",
+    "fleet_sharding",
 ]
+
+
+def fleet_pspec(axis: str = "fleet") -> P:
+    """PartitionSpec for the resident fleet's ``[W, ...]`` stacks: the worker
+    dimension shards over the ``axis`` mesh axis, everything downstream of it
+    stays replicated (each device holds W_local full-model rows).  A spec
+    shorter than the array rank replicates the remaining dims, so ONE spec
+    covers params / masks / momentum / data stacks of any rank."""
+    return P(axis)
+
+
+def fleet_sharding(mesh: Mesh, axis: str = "fleet") -> NamedSharding:
+    """NamedSharding placing ``[W, ...]`` stacks row-sharded over ``axis`` —
+    what makes ``core.fleet.FleetState`` sharding-agnostic: ``init_state``
+    takes this (or None for today's single-device layout) and nothing else
+    about the state changes."""
+    if axis not in mesh.shape:
+        raise ValueError(
+            f"mesh axes {tuple(mesh.shape)} have no fleet axis {axis!r}"
+        )
+    return NamedSharding(mesh, fleet_pspec(axis))
 
 
 def current_mesh():

@@ -1,12 +1,41 @@
 """Shared fixtures: every test starts from the same global RNG state, so
-stochastic helpers that fall back to the global generators are repeatable."""
+stochastic helpers that fall back to the global generators are repeatable.
+
+This conftest also forces 8 virtual CPU devices (via ``XLA_FLAGS``) so the
+mesh-sharded fleet tests (``test_sharded_fleet.py``) can build a real
+multi-device mesh on CPU-only CI.  The flag must land in the environment
+*before* jax initialises its backend, hence the import-time injection — it
+is skipped if jax is already imported (e.g. under an embedding runner), in
+which case mesh tests that need 8 devices skip themselves.
+"""
+import os
 import random
+import sys
 
 import numpy as np
 import pytest
+
+_FORCE_DEVICES = "--xla_force_host_platform_device_count=8"
+if "jax" not in sys.modules and _FORCE_DEVICES.split("=")[0] not in os.environ.get(
+    "XLA_FLAGS", ""
+):
+    os.environ["XLA_FLAGS"] = (
+        os.environ.get("XLA_FLAGS", "") + " " + _FORCE_DEVICES
+    ).strip()
 
 
 @pytest.fixture(autouse=True)
 def _seed_global_rngs():
     random.seed(0)
     np.random.seed(0)
+
+
+@pytest.fixture
+def eight_devices():
+    """Require the 8 virtual CPU devices the conftest requests; skip if the
+    backend was initialised before the flag could take effect."""
+    import jax
+
+    if len(jax.devices()) < 8:
+        pytest.skip("needs 8 visible devices (XLA_FLAGS took no effect)")
+    return jax.devices()[:8]
