@@ -584,6 +584,137 @@ def retention_sweep(out_path: str = "BENCH_retention.json", quick: bool = False)
     print(f"retention/json,{out_path},")
 
 
+def regrow_sweep(out_path: str = "BENCH_regrow.json", quick: bool = False) -> None:
+    """Mask-regrowth bench: mask-dynamics variant x engine grid.
+
+    AdaptCL's monotone pruning can strand a worker with a bad early mask;
+    FedDST-style readjustment (``SimConfig.regrow``) prunes ``alpha_t`` of
+    each worker's retained weight mass by global weight magnitude and grows
+    the same param budget back by dense-gradient magnitude every
+    ``interval`` rounds.  The grid runs prune-only against the cosine- and
+    constant-schedule regrow variants on the masked and fused engines.
+
+    The grid prunes with the ``no_adjacent`` shared-random order: regrowth
+    earns its keep when the initial mask is POOR (a random order strands
+    units the data cares about; readjustment recovers them by gradient
+    magnitude).  Under the paper's frozen CIG ranking the initial mask is
+    already near-optimal on this task and regrow is a wash — which is
+    itself the FedDST finding: readjustment substitutes for a good prior
+    ranking.
+
+    Checks pin the PR's contract: the best regrow variant recovers at least
+    the prune-only final accuracy, regrow events land in
+    ``SimResult.prune_events`` (masked == fused BIT-identical, clocks
+    exact), and the fused engine still runs O(rounds / round_fusion) chunks
+    with recompiles bounded by the chunk + grow-gradient signatures (<= 2)
+    — regrow boundaries align with the learning events here, so readjusting
+    masks adds ZERO extra chunks."""
+    from repro.core.simulation import RegrowConfig, SimConfig, run_simulation
+    from repro.core.timing import HeterogeneityConfig
+    from repro.models.cnn import vgg_config
+
+    cnn = vgg_config("vgg_regrow", [16, "M", 32], num_classes=10, image_size=8)
+    W = 5 if quick else 10
+    rounds = 6 if quick else 16
+    pi = 2 if quick else 4      # prune_interval == round_fusion == interval
+    variants = {
+        "prune_only": None,
+        "regrow_cosine": RegrowConfig(interval=pi, alpha0=0.3,
+                                      schedule="cosine"),
+        "regrow_constant": RegrowConfig(interval=pi, alpha0=0.3,
+                                        schedule="constant"),
+    }
+    rows = []
+    results = {}
+    print("name,value,derived")
+    for vname, rg in variants.items():
+        for engine in ("masked", "fused"):
+            r = run_simulation(SimConfig(
+                method="adaptcl", engine=engine, rounds=rounds,
+                prune_interval=pi, round_fusion=pi, num_workers=W,
+                batch_size=8, cnn=cnn, eval_every=rounds,
+                het=HeterogeneityConfig(num_workers=W, sigma=5.0),
+                seed=7, regrow=rg, importance="no_adjacent",
+            ))
+            results[(vname, engine)] = r
+            event_rounds = sorted({t for t, _, _ in r.prune_events})
+            rows.append(dict(
+                variant=vname, engine=engine, rounds=rounds,
+                round_fusion=pi, workers=W,
+                final_acc=r.final_acc, total_time=r.total_time,
+                comm_bytes=r.comm_bytes,
+                prune_event_count=len(r.prune_events),
+                prune_event_rounds=event_rounds,
+                host_dispatches=r.host_dispatches,
+                fused_chunks=r.fused_chunks, recompiles=r.recompiles,
+                walltime_s=r.walltime_s,
+                compile_walltime_s=r.compile_walltime_s,
+            ))
+            print(
+                f"regrow/{vname}/{engine},acc={r.final_acc:.3f},"
+                f"time={r.total_time:.1f};events={len(r.prune_events)};"
+                f"dispatches={r.host_dispatches};recompiles={r.recompiles}"
+            )
+
+    prune_only_acc = results[("prune_only", "fused")].final_acc
+    best_regrow_acc = max(
+        results[(v, "fused")].final_acc
+        for v in ("regrow_cosine", "regrow_constant")
+    )
+    fus = results[("regrow_cosine", "fused")]
+    mas = results[("regrow_cosine", "masked")]
+    checks = {
+        # readjustment must not cost accuracy vs monotone pruning
+        "best_regrow_acc": best_regrow_acc,
+        "prune_only_acc": prune_only_acc,
+        "regrow_acc_ge_prune_only": best_regrow_acc >= prune_only_acc,
+        # regrow events recorded, and engines agree on them bit-for-bit
+        "regrow_adds_events": all(
+            len(results[(v, e)].prune_events)
+            > len(results[("prune_only", e)].prune_events)
+            for v in ("regrow_cosine", "regrow_constant")
+            for e in ("masked", "fused")
+        ),
+        "events_bit_identical_masked_vs_fused": all(
+            results[(v, "masked")].prune_events
+            == results[(v, "fused")].prune_events
+            for v in variants
+        ),
+        "clocks_identical_masked_vs_fused": all(
+            results[(v, "masked")].total_time
+            == results[(v, "fused")].total_time
+            for v in variants
+        ),
+        # regrow boundaries align with learning events: still O(R/K) chunks,
+        # and only the chunk + grow-gradient programs compile
+        "fused_chunks_O_R_over_K": fus.fused_chunks == rounds // pi,
+        # dispatches = chunks + evals + ONE grow-score gradient per regrow
+        # event; evals are variant-independent, so the regrow overhead vs
+        # prune-only is exactly the regrow event count
+        "fused_dispatches_are_chunks_evals_and_grow_grads": (
+            fus.host_dispatches - fus.fused_chunks
+            - (len(fus.prune_events)
+               - len(results[("prune_only", "fused")].prune_events))
+            == results[("prune_only", "fused")].host_dispatches
+            - results[("prune_only", "fused")].fused_chunks
+        ),
+        "fused_regrow_recompiles_le_2": fus.recompiles <= 2,
+        "fused_dispatches_below_masked": (
+            fus.host_dispatches < mas.host_dispatches
+        ),
+    }
+    for k, v in checks.items():
+        print(f"regrow/{k},{v},")
+    with open(out_path, "w") as f:
+        json.dump({
+            "rows": rows,
+            "rounds": rounds,
+            "round_fusion": pi,
+            "checks": checks,
+        }, f, indent=2)
+    print(f"regrow/json,{out_path},")
+
+
 def main() -> None:
     ap = argparse.ArgumentParser(
         description=__doc__, formatter_class=argparse.RawDescriptionHelpFormatter
@@ -591,7 +722,7 @@ def main() -> None:
     ap.add_argument(
         "command", nargs="?", default="tables",
         choices=("tables", "scale", "async_scale", "retention_sweep", "fused",
-                 "shard_scale"),
+                 "shard_scale", "regrow_sweep"),
         help="'tables' (default) = paper-table benches; 'scale' = sync "
              "fleet-scaling grid (W x engine x scenario -> BENCH_scale.json); "
              "'async_scale' = resident async scheduler grid (W x scheduler x "
@@ -600,7 +731,9 @@ def main() -> None:
              "(-> BENCH_retention.json); 'fused' = round-fusion rounds/sec + "
              "host-dispatch grid, masked vs fused (-> BENCH_fused.json); "
              "'shard_scale' = mesh-sharded fused engine, W x n_dev grid on 8 "
-             "virtual CPU devices (-> BENCH_shard.json)",
+             "virtual CPU devices (-> BENCH_shard.json); 'regrow_sweep' = "
+             "FedDST mask-readjustment variants x engine "
+             "(-> BENCH_regrow.json)",
     )
     ap.add_argument("--only", default=None)
     ap.add_argument("--quick", action="store_true")
@@ -641,6 +774,9 @@ def main() -> None:
         return
     if args.command == "fused":
         fused(args.out or "BENCH_fused.json", quick=args.quick)
+        return
+    if args.command == "regrow_sweep":
+        regrow_sweep(args.out or "BENCH_regrow.json", quick=args.quick)
         return
 
     from benchmarks import tables  # import after BENCH_QUICK is set

@@ -66,6 +66,7 @@ __all__ = [
     "aggregate_by_unit_stacked",
     "aggregate_by_worker_stacked_jnp",
     "aggregate_by_unit_stacked_jnp",
+    "dgc_compress_jnp",
     "fedasync_weight",
     "AsyncServer",
     "async_commit_jnp",
@@ -278,6 +279,76 @@ def aggregate_by_unit_stacked_jnp(
             den = jax.lax.psum(den, axis)
         out[path] = num / jnp.maximum(den, 1.0)
     return out
+
+
+# --- device DGC delta compression (fused submission boundary) --------------
+
+def dgc_compress_jnp(
+    deltas: Mapping[str, jnp.ndarray],     # {path: [W, ...]} param - global*mask
+    residual: Mapping[str, jnp.ndarray],   # {path: [W, ...]} carried residuals
+    sparsity: float,                       # static Python float in (0, 1)
+    masks: Optional[Mapping[str, jnp.ndarray]],  # {path: [W, ...]} 0/1, or None
+    rows: jnp.ndarray,                     # [W] float 0/1 submitter gate
+) -> Tuple[Dict[str, jnp.ndarray], Dict[str, jnp.ndarray], jnp.ndarray, jnp.ndarray]:
+    """Pure-``jnp`` twin of ``simulation._dgc_compress_stacked`` — the fused
+    engine's in-scan top-|.| delta compressor.
+
+    Per key the accumulated delta (``delta + residual``) is flattened to a
+    ``[W, N]`` view; pruned coordinates are invalidated to ``-1.0`` so the
+    per-row keep budget covers RETAINED coordinates only, the row's
+    ``n_keep``-th largest |value| becomes the threshold, and ``>= thr``
+    keeps (ties included, exactly like the host).  Committed parts go to the
+    output, the rest carries as the new residual; ``rows == 0`` workers
+    commit nothing and keep their old residual untouched (which also makes
+    dead padding rounds of a fused chunk no-ops).
+
+    Bit-identity with the host compressor: both compute the keep budget with
+    the same float32 ops (``round(f32(sizes) * f32(1 - sparsity))``, round
+    half to even) and threshold the same float32 values — sorting picks a
+    VALUE, not an index, so host ``np.sort`` and device ``jnp.sort`` agree
+    bit-for-bit and the keep sets are identical (pinned by the host/device
+    golden test).  Returns ``(committed, new_residual, kept, total)`` with
+    ``kept``/``total`` the REALIZED per-worker committed-coordinate counts
+    (``[W]`` int32) for payload accounting.
+    """
+    W = rows.shape[0]
+    committed: Dict[str, jnp.ndarray] = {}
+    new_res: Dict[str, jnp.ndarray] = {}
+    kept = jnp.zeros((W,), jnp.int32)
+    total = jnp.zeros((W,), jnp.int32)
+    rows_b = rows > 0
+    keep_frac = jnp.float32(1.0 - sparsity)
+    for k, d in deltas.items():
+        acc = d + residual[k]
+        flat = acc.reshape(W, -1)
+        absf = jnp.abs(flat)
+        if masks is not None:
+            valid = masks[k].reshape(W, -1) > 0
+            sizes = valid.sum(axis=1).astype(jnp.int32)
+            absf = jnp.where(valid, absf, -1.0)
+        else:
+            valid = None
+            sizes = jnp.full((W,), flat.shape[1], jnp.int32)
+        n_keep = jnp.maximum(
+            1, jnp.round(sizes.astype(jnp.float32) * keep_frac).astype(jnp.int32)
+        )
+        n_keep = jnp.minimum(n_keep, jnp.maximum(sizes, 1))
+        order = jnp.sort(absf, axis=1)[:, ::-1]
+        thr = order[jnp.arange(W), n_keep - 1]
+        keep = absf >= thr[:, None]
+        if valid is not None:
+            keep = keep & valid
+        com = jnp.where(keep, flat, 0.0)
+        res = jnp.where(keep, 0.0, flat)
+        if valid is not None:
+            res = jnp.where(valid, res, 0.0)
+        old_res = residual[k].reshape(W, -1)
+        gate = rows_b[:, None]
+        committed[k] = jnp.where(gate, com, 0.0).reshape(d.shape)
+        new_res[k] = jnp.where(gate, res, old_res).reshape(d.shape)
+        kept = kept + jnp.where(rows_b, keep.sum(axis=1).astype(jnp.int32), 0)
+        total = total + jnp.where(rows_b, sizes, 0)
+    return committed, new_res, kept, total
 
 
 # --- async server merges (fedasync_s / ssp_s / dcasgd_s) -------------------

@@ -66,10 +66,30 @@ device pop order and staleness integers against the plan and raises on
 divergence, so commit schedules are bit-identical to the resident engine
 by construction — E events run in ``O(E / round_fusion)`` host dispatches.
 
+**DGC on device.**  ``dgc_sparsity > 0`` runs INSIDE the scan:
+``aggregation.dgc_compress_jnp`` top-|.|-compresses the ``[W, ...]`` delta
+stacks (delta = trained params minus the masked broadcast-back) with the
+residual accumulators carried in the scan state, and aggregation consumes
+``theta_g[None] * M + committed``.  Keep sets are bit-identical to the host
+compressor (``simulation._dgc_compress_stacked``): both compute keep
+budgets with the same float32 rounding and threshold the same float32
+values, mirroring how ``prune_order`` makes pruning host-exact.  Realized
+per-round kept/total counts come back as ``[K, W]`` scan outputs, so the
+payload factors feeding the channel model are the host path's exact
+integers.
+
+**Mask regrowth.**  FedDST-style readjustment (``SimConfig.regrow``) also
+cuts chunks: a regrow round always opens a chunk, the shared host step
+(``simulation._regrow_step``) rewrites the global indices at that boundary
+(shrink by global weight magnitude, grow back by gradient magnitude — one
+extra cached jit signature for the gradient), and the next chunk simply
+starts from the readjusted presence rows.  The chunk program is unchanged,
+so regrow costs zero recompiles.
+
 Out of scope (see ROADMAP): participation-sized sub-stack gathering inside
-a scan (fused rounds compute all W rows with validity masks), DGC delta
-compression, and the ``block_skip`` compute path under the scan
-(interpret-mode Pallas inside ``lax.scan`` is untested off-TPU).
+a scan (fused rounds compute all W rows with validity masks), and the
+``block_skip`` compute path under the scan (interpret-mode Pallas inside
+``lax.scan`` is untested off-TPU).
 """
 from __future__ import annotations
 
@@ -91,6 +111,7 @@ from .aggregation import (
     aggregate_by_unit_stacked_jnp,
     aggregate_by_worker_stacked_jnp,
     async_commit_jnp,
+    dgc_compress_jnp,
     extract_subparams,
     roundtrip_total,
     subparam_shapes,
@@ -132,12 +153,6 @@ __all__ = [
 
 def validate_fused_config(sim) -> None:
     """Reject configurations the fused engine does not express on device."""
-    if sim.dgc_sparsity > 0.0:
-        raise ValueError(
-            "engine='fused' does not support DGC delta compression (the "
-            "compressor is host NumPy at the submission boundary); use "
-            "engine='masked'"
-        )
     if sim.compute != "dense":
         raise ValueError(
             "engine='fused' supports compute='dense' only — the block_skip "
@@ -191,6 +206,7 @@ def _static_orders(sim, env, flat: UnitFlat, cig_scores, prune_round_count):
 def _build_chunk_fn(trainer, unit_map, base_shapes, flat: UnitFlat, lam,
                     *, by_unit: bool, importance: str,
                     resident_momentum: bool, has_phase_b: bool,
+                    dgc_sparsity: float = 0.0,
                     mesh=None, fleet_axis: str = "fleet"):
     """Build the jitted chunk program: ``lax.scan`` over K fused rounds.
 
@@ -282,12 +298,14 @@ def _build_chunk_fn(trainer, unit_map, base_shapes, flat: UnitFlat, lam,
                 )
         return taylor_scores_jnp(gw, flat.names, presence)
 
-    def chunk(params, momentum, presence, global_p, xs, ys, sizes,
+    use_dgc = dgc_sparsity > 0.0
+
+    def chunk(params, momentum, presence, global_p, dgc_res, xs, ys, sizes,
               per_round, orders):
         masks = masks_from_presence(presence, flat, unit_map, base_shapes)
 
         def body(carry, inp):
-            params, masks, presence, global_p, momentum = carry
+            params, masks, presence, global_p, momentum, dgc_res = carry
             # broadcast-back: masked scatter of the global into every row
             params = {k: global_p[k][None] * masks[k] for k in params}
             gl = gl_factors_from_counts(
@@ -336,14 +354,32 @@ def _build_chunk_fn(trainer, unit_map, base_shapes, flat: UnitFlat, lam,
                 (params, masks, presence, momentum),
             )
 
+            # submission boundary: DGC top-|.| delta compression on device.
+            # Deltas are vs the masked broadcast-back; submitters-gated, so
+            # dead padding rounds (submitters all 0) touch no residual.
+            if use_dgc:
+                deltas = {
+                    k: params[k] - global_p[k][None] * masks[k] for k in params
+                }
+                committed, dgc_res, kept_w, total_w = dgc_compress_jnp(
+                    deltas, dgc_res, dgc_sparsity, masks, inp["submitters"]
+                )
+                agg_in = {
+                    k: global_p[k][None] * masks[k] + committed[k]
+                    for k in params
+                }
+            else:
+                agg_in = params
+                kept_w = total_w = None
+
             agg_axis = fleet_axis if mesh is not None else None
             if by_unit:
                 g_new = aggregate_by_unit_stacked_jnp(
-                    params, masks, inp["submitters"], axis=agg_axis
+                    agg_in, masks, inp["submitters"], axis=agg_axis
                 )
             else:
                 g_new = aggregate_by_worker_stacked_jnp(
-                    params, inp["weights"], axis=agg_axis
+                    agg_in, inp["weights"], axis=agg_axis
                 )
             # dead padding rounds (real=False) keep the global untouched, so
             # every chunk shares ONE [K]-shaped compiled program
@@ -352,15 +388,16 @@ def _build_chunk_fn(trainer, unit_map, base_shapes, flat: UnitFlat, lam,
                              global_p[k])
                 for k in global_p
             }
-            return (params, masks, presence, global_p, momentum), (
-                presence, global_p
+            return (params, masks, presence, global_p, momentum, dgc_res), (
+                presence, global_p, kept_w, total_w
             )
 
-        carry0 = (params, masks, presence, global_p, momentum)
-        (params, masks, presence, global_p, momentum), (pres_seq, glob_seq) = (
-            jax.lax.scan(body, carry0, per_round)
-        )
-        return params, momentum, presence, global_p, pres_seq, glob_seq
+        carry0 = (params, masks, presence, global_p, momentum, dgc_res)
+        (params, masks, presence, global_p, momentum, dgc_res), (
+            pres_seq, glob_seq, kept_seq, total_seq
+        ) = jax.lax.scan(body, carry0, per_round)
+        return (params, momentum, presence, global_p, dgc_res,
+                pres_seq, glob_seq, kept_seq, total_seq)
 
     if mesh is None:
         return jax.jit(chunk)
@@ -378,11 +415,16 @@ def _build_chunk_fn(trainer, unit_map, base_shapes, flat: UnitFlat, lam,
     if has_phase_b:
         per_round_specs["plan_b"] = P(None, fleet_axis)
         per_round_specs["valid_b"] = P(None, fleet_axis)
+    # kept/total [K, W] scan outputs shard like the presence trail; the DGC
+    # residual stacks join the fleet-sharded state (all row-local math).
+    # When DGC is off those slots are empty pytrees and the specs are inert.
+    kt = P(None, fleet_axis)
     return jax.jit(shard_map_compat(
         chunk, mesh=mesh,
-        in_specs=(fleet, fleet, fleet, rep, fleet, fleet, fleet,
+        in_specs=(fleet, fleet, fleet, rep, fleet, fleet, fleet, fleet,
                   per_round_specs, fleet),
-        out_specs=(fleet, fleet, fleet, rep, P(None, fleet_axis), rep),
+        out_specs=(fleet, fleet, fleet, rep, fleet, P(None, fleet_axis), rep,
+                   kt, kt),
     ))
 
 
@@ -393,10 +435,16 @@ def run_sync_fused(sim, env):
     are WHERE things run (rounds on device in scan chunks, accounting on
     host after each chunk), never WHAT is computed.
     """
-    from .simulation import _env_accuracy, _finalize   # lazy: no import cycle
+    from .simulation import (   # lazy: no import cycle
+        _env_accuracy,
+        _finalize,
+        _regrow_round,
+        _regrow_step,
+    )
 
     validate_fused_config(sim)
     W = sim.num_workers
+    use_dgc = sim.dgc_sparsity > 0.0
     adapt = sim.method == "adaptcl"
     sparse = sim.method in ("fedavg_s", "adaptcl")
     lam = sim.lam if sparse else 0.0
@@ -445,6 +493,17 @@ def run_sync_fused(sim, env):
     global_params = {k: np.asarray(v) for k, v in env.base_params.items()}
     global_dev = {k: jnp.asarray(v) for k, v in global_params.items()}
     sizes_dev = jnp.asarray(np.asarray(state.shard_sizes, np.int32))
+    # DGC residual accumulators live on device, carried across chunks like
+    # the momentum stacks ({} when DGC is off: an empty pytree)
+    dgc_res_dev = (
+        {
+            k: jnp.zeros((W,) + tuple(s), jnp.float32)
+            for k, s in env.base_shapes.items()
+        }
+        if use_dgc else {}
+    )
+    if use_dgc and state_sharding is not None:
+        dgc_res_dev = jax.device_put(dgc_res_dev, state_sharding)
 
     indices = [full_index(env.space) for _ in range(W)]
     histories = [WorkerHistory() for _ in range(W)]
@@ -495,7 +554,7 @@ def run_sync_fused(sim, env):
         sig_shapes,
         ("fused", K_pad, pad_a, pad_b, tuple(state.xs.shape), batch,
          sim.aggregation, sim.importance, bool(sim.resident_momentum),
-         mesh_sig),
+         float(sim.dgc_sparsity), mesh_sig),
         float(lam),
     )
     build = lambda: _build_chunk_fn(
@@ -504,6 +563,7 @@ def run_sync_fused(sim, env):
         importance=sim.importance,
         resident_momentum=bool(sim.resident_momentum),
         has_phase_b=pad_b > 0,
+        dgc_sparsity=float(sim.dgc_sparsity),
         mesh=mesh, fleet_axis=sim.fleet_axis,
     )
 
@@ -524,12 +584,40 @@ def run_sync_fused(sim, env):
                     state.momentum = {
                         k: v.at[w].set(0.0) for k, v in state.momentum.items()
                     }
-        # ---- chunk extent: learning events and churn rounds cut ----------
+                if use_dgc:     # fresh slot: no carried residual
+                    dgc_res_dev = {
+                        k: v.at[w].set(0.0) for k, v in dgc_res_dev.items()
+                    }
+        # ---- FedDST mask readjustment at the chunk boundary (host).  The
+        # chunk-extent cut below guarantees a regrow round is always round
+        # t+1 of some chunk, so the shared host step runs here and the chunk
+        # simply starts from the readjusted presence rows.  Params need no
+        # touch-up (the in-scan broadcast-back re-masks them); momentum rows
+        # must drop newly-removed units explicitly when resident.
+        if _regrow_round(sim, t + 1):
+            regrown = _regrow_step(sim, env, global_params, indices, t + 1)
+            for w, idx_w in regrown:
+                prune_events.append((
+                    t + 1, int(w),
+                    {k: tuple(map(int, v)) for k, v in idx_w.items()},
+                ))
+            if regrown and sim.resident_momentum:
+                pres_now = jnp.asarray(np.stack([
+                    presence_from_index(indices[w], flat) for w in range(W)
+                ]))
+                m_now = masks_from_presence(
+                    pres_now, flat, unit_map, base_shapes
+                )
+                state.momentum = {
+                    k: v * m_now[k] for k, v in state.momentum.items()
+                }
+        # ---- chunk extent: learning events, churn and regrow rounds cut --
         n = min(K_pad, sim.rounds - t)
         if adapt:
             n = min(n, sim.prune_interval - (t % sim.prune_interval))
         for j in range(1, n):
-            if plan_all.events[t + j].joined.any():
+            if (plan_all.events[t + j].joined.any()
+                    or _regrow_round(sim, t + j + 1)):
                 n = j
                 break
         rounds_this = list(range(t + 1, t + n + 1))
@@ -630,11 +718,13 @@ def run_sync_fused(sim, env):
         momentum_arg = state.momentum if sim.resident_momentum else {}
 
         # ---- ONE device dispatch for the whole chunk ---------------------
-        (state.params, mom_out, _, global_dev, pres_seq, glob_seq) = (
+        (state.params, mom_out, _, global_dev, dgc_res_dev,
+         pres_seq, glob_seq, kept_seq, total_seq) = (
             trainer._call_cached(
                 sig, build,
                 state.params, momentum_arg, presence_dev, global_dev,
-                state.xs, state.ys, sizes_dev, per_round, orders_dev,
+                dgc_res_dev, state.xs, state.ys, sizes_dev, per_round,
+                orders_dev,
             )
         )
         if sim.resident_momentum:
@@ -645,6 +735,9 @@ def run_sync_fused(sim, env):
 
         pres_seq_np = np.asarray(pres_seq)                     # [K, W, U]
         glob_seq_np = {k: np.asarray(v) for k, v in glob_seq.items()}
+        if use_dgc:                                            # [K, W] ints
+            kept_np = np.asarray(kept_seq)
+            total_np = np.asarray(total_seq)
 
         # ---- post-chunk host accounting (payloads, clock, ledger, eval) --
         for j, rnd in enumerate(rounds_this):
@@ -665,13 +758,21 @@ def run_sync_fused(sim, env):
             phis = np.full(W, np.nan)
             for w in active_ws:
                 bytes_w, flops_w = _bytes_flops(indices[w])
+                # the host path's exact DGC payload factor, rebuilt from the
+                # realized on-device kept/total integers (submitters only —
+                # non-submitters pay full price, matching _run_sync)
+                pf = 1.0
+                if use_dgc and ev.submitters[w]:
+                    pf = 1.25 * float(kept_np[j, w]) / max(
+                        float(total_np[j, w]), 1.0
+                    )
                 phi_w = env.phi_from_cost(
-                    w, bytes_w, flops_w, 1.0, jitters[j, w]
+                    w, bytes_w, flops_w, pf, jitters[j, w]
                 )
                 phis[w] = phi_w
                 interval_phis[w].append(phi_w)
                 if ev.submitters[w]:
-                    comm_bytes += 2.0 * bytes_w
+                    comm_bytes += 2.0 * pf * bytes_w
             sub_phis = phis[ev.submitters]
             round_time = float(sub_phis.max())
             if ev.dropped.any() and scen is not None:

@@ -40,6 +40,7 @@ __all__ = [
     "l1_scores_jnp",
     "taylor_scores_jnp",
     "flat_scores_jnp",
+    "grad_magnitude_scores",
 ]
 
 Scores = Dict[str, np.ndarray]
@@ -161,6 +162,33 @@ def _hrank(ctx: ImportanceContext) -> Scores:
     if ctx.activations is None:
         raise ValueError("hrank needs activations")
     return {k: np.asarray(v, np.float64) for k, v in ctx.activations.items()}
+
+
+def grad_magnitude_scores(
+    grads: Mapping[str, np.ndarray],
+    unit_map: Mapping[str, Sequence],
+    unit_counts: Mapping[str, int],
+) -> Scores:
+    """FedDST/RigL grow signal: per-unit group sums of |grad|.
+
+    ``grads`` are DENSE (unmasked) gradients in base coordinates — pruned
+    slots carry real gradient signal, which is exactly what regrowth ranks.
+    Accumulated in float64 so host grow orders are reproducible regardless
+    of the device's accumulation dtype."""
+    acc: Dict[str, np.ndarray] = {
+        k: np.zeros(n, np.float64) for k, n in unit_counts.items()
+    }
+    for path, entries in unit_map.items():
+        g = grads.get(path)
+        if g is None:
+            continue
+        g = np.abs(np.asarray(g, np.float64))
+        for lname, axis in entries:
+            if lname not in acc:
+                continue
+            axes = tuple(i for i in range(g.ndim) if i != axis)
+            acc[lname] += g.sum(axis=axes)
+    return acc
 
 
 METHODS: Dict[str, ImportanceMethod] = {

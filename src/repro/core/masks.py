@@ -48,6 +48,9 @@ __all__ = [
     "prune_order",
     "prune_budget_units",
     "prune_presence_rows",
+    "grow_order",
+    "regrow_index",
+    "regrow_presence_rows",
     "similarity",
     "is_nested",
     "take_units",
@@ -331,6 +334,84 @@ def prune_presence_rows(
         (_, _, pres), _ = jax.lax.scan(
             body, (jnp.int32(0), counts, pres), order
         )
+        return pres
+
+    return jax.vmap(one)(presence, orders, budgets)
+
+
+# --- FedDST-style regrowth: grow orders + host/device greedy ---------------
+
+def grow_order(scores: Mapping[str, np.ndarray], flat: UnitFlat) -> np.ndarray:
+    """[U] grow-order permutation: DESCENDING score, same tie-break.
+
+    The mirror image of ``prune_order``: regrowth adds the highest-scored
+    absent units first (FedDST grows by gradient magnitude), ties broken by
+    the ascending ``(layer_name, unit)`` rank so host and device walk the
+    identical sequence.  Implemented as a lexsort over the negated float64
+    scores — negation is exact in IEEE, so equal scores stay equal and the
+    tie-break still decides."""
+    flat_scores = np.concatenate([
+        np.asarray(scores[name], np.float64)[: flat.sizes[l]]
+        for l, name in enumerate(flat.names)
+    ])
+    if flat_scores.shape[0] != flat.num_units:
+        raise ValueError("scores do not cover the unit space")
+    return np.lexsort((flat.tiebreak, -flat_scores)).astype(np.int32)
+
+
+def regrow_index(
+    index: GlobalIndex,
+    scores: Mapping[str, np.ndarray],
+    budget_params: int,
+    space: UnitSpace,
+) -> GlobalIndex:
+    """Host greedy regrowth: add absent units in descending-score order
+    until ``budget_params`` parameters have been re-added.
+
+    The exact mirror of ``prune_to_budget``'s greedy: walk the global grow
+    order, add a unit iff the budget is not yet met and the unit is absent.
+    ``budget_params`` is an integer (the parameter mass a preceding shrink
+    removed), so no float comparison can diverge between host and device."""
+    if budget_params <= 0:
+        return {k: np.asarray(v, np.int64).copy() for k, v in index.items()}
+    flat = flatten_unit_space(space)
+    order = grow_order(scores, flat)
+    present = presence_from_index(index, flat) > 0
+    added = 0
+    for u in order:
+        if added >= budget_params:
+            break
+        u = int(u)
+        if present[u]:
+            continue
+        present[u] = True
+        added += int(flat.costs[u])
+    return index_from_presence(present.astype(np.float32), flat)
+
+
+def regrow_presence_rows(
+    presence: jnp.ndarray,       # [W, U] float32 0/1
+    orders: jnp.ndarray,         # [W, U] int32 grow order per worker
+    budgets: jnp.ndarray,        # [W] int32 parameter budgets to re-add
+    flat: UnitFlat,
+) -> jnp.ndarray:
+    """Device replay of ``regrow_index`` over worker rows (pure ``jnp``).
+
+    A ``lax.scan`` walks each worker's grow order: a slot is added iff the
+    budget is not yet met and the worker does not retain it — the exact host
+    greedy.  ``budgets == 0`` rows come back unchanged (workers that did not
+    shrink, or the padding rows of a stacked call)."""
+    costs = jnp.asarray(flat.costs)
+
+    def one(pres, order, budget):
+        def body(carry, u):
+            added, pres = carry
+            can = (added < budget) & (pres[u] == 0)
+            pres = pres.at[u].add(jnp.where(can, 1.0, 0.0))
+            added = added + jnp.where(can, costs[u], 0)
+            return (added, pres), None
+
+        (_, pres), _ = jax.lax.scan(body, (jnp.int32(0), pres), order)
         return pres
 
     return jax.vmap(one)(presence, orders, budgets)

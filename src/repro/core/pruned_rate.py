@@ -112,14 +112,18 @@ def inverse_interpolate_gamma(
     history: WorkerHistory, phi_target: float, max_history: int = 8
 ) -> float:
     """gamma_target = f^{-1}(phi_target) via Newton interpolation (Eq. 2)."""
-    phis, gammas = _dedupe_nodes(history.phis, history.gammas)
+    # The Runge guard keeps the *most recent* pruning checkpoints, so the
+    # history must be truncated by recency BEFORE _dedupe_nodes sorts the
+    # nodes by ascending phi (sorting first would keep the largest-phi nodes
+    # — stale early measurements — forever).
+    phis, gammas = _dedupe_nodes(
+        history.phis[-max_history:], history.gammas[-max_history:]
+    )
     if len(phis) == 0:
         raise ValueError("empty history")
     if len(phis) == 1:
         # Single point: proportional model through the origin.
         return gammas[0] * phi_target / phis[0]
-    phis = phis[-max_history:]
-    gammas = gammas[-max_history:]
     coef = newton_divided_differences(phis, gammas)
     return newton_eval(coef, phis, phi_target)
 

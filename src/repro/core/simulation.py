@@ -122,8 +122,21 @@ from .aggregation import (
     tally_roundtrip,
 )
 from .fleet import FleetEngine, FleetJob
-from .importance import CIG_METHODS, METHODS, ImportanceContext
-from .masks import full_index, is_nested, payload_bytes, prune_to_budget, retention, similarity
+from .importance import (
+    CIG_METHODS,
+    METHODS,
+    ImportanceContext,
+    grad_magnitude_scores,
+)
+from .masks import (
+    full_index,
+    is_nested,
+    payload_bytes,
+    prune_to_budget,
+    regrow_index,
+    retention,
+    similarity,
+)
 from .pruned_rate import PrunedRateConfig, WorkerHistory, learn_pruned_rates
 from .scenario import (
     AsyncEventPlan,
@@ -134,7 +147,9 @@ from .scenario import (
 from .timing import HeterogeneityConfig, heterogeneity_from_times, make_bandwidths
 from .worker import LocalTrainer, local_unit_stats, make_batch_plan, plan_steps
 
-__all__ = ["SimConfig", "SimResult", "run_simulation", "default_cnn"]
+__all__ = [
+    "SimConfig", "SimResult", "RegrowConfig", "run_simulation", "default_cnn",
+]
 
 _DATA_DEP_IMPORTANCE = ("l1", "taylor", "fpgm", "hrank")
 
@@ -142,6 +157,42 @@ _DATA_DEP_IMPORTANCE = ("l1", "taylor", "fpgm", "hrank")
 def default_cnn() -> CNNConfig:
     """Small VGG used by the CPU-budget simulations (same family as VGG16)."""
     return vgg_config("vgg_sim", [32, "M", 64, "M", 64], num_classes=10, image_size=16)
+
+
+@dataclasses.dataclass(frozen=True)
+class RegrowConfig:
+    """FedDST-style mask readjustment (arXiv:2112.09824; ROADMAP item 4).
+
+    Every ``interval`` rounds, each worker with retention < 1 prunes
+    ``alpha_t`` of its retained parameters by GLOBAL weight magnitude, then
+    grows the exact same parameter budget back from its absent units, ranked
+    by gradient magnitude of the dense model at the aggregated global on the
+    worker's own shard (the RigL/FedDST grow signal — pruned slots carry
+    real gradients there).  ``alpha_t`` follows FedDST's cosine anneal
+    ``0.5 * alpha0 * (1 + cos(pi * (t-1) / T))`` (``schedule="cosine"``) or
+    stays at ``alpha0`` (``schedule="constant"``).
+
+    Readjustment happens at the START of a round, BEFORE broadcast-back, so
+    grown units inherit their global values for free on the resident engines
+    (``theta_g[None] * M`` scatters into the fresh mask) — a mask-row
+    rewrite with zero recompiles.  Retention is ~unchanged (the grow budget
+    equals the shrink's removed mass, overshoot < one unit cost), so Alg. 2
+    pruned-rate histories keep monotone gammas up to that sliver — the
+    recency-capped Newton guard absorbs the rest."""
+
+    interval: int = 4          # R_adj: rounds between mask readjustments
+    alpha0: float = 0.3        # initial readjust fraction
+    schedule: str = "cosine"   # "cosine" | "constant"
+
+    def __post_init__(self):
+        if self.interval < 1:
+            raise ValueError(f"regrow interval {self.interval} must be >= 1")
+        if not (0.0 < self.alpha0 < 1.0):
+            raise ValueError(f"regrow alpha0 {self.alpha0} outside (0, 1)")
+        if self.schedule not in ("cosine", "constant"):
+            raise ValueError(
+                f"regrow schedule {self.schedule!r} not in cosine/constant"
+            )
 
 
 @dataclasses.dataclass
@@ -172,6 +223,10 @@ class SimConfig:
     # (1-sparsity) fraction of each weight delta; the rest accumulates
     # locally until it crosses the threshold (momentum-factor-masking lite).
     dgc_sparsity: float = 0.0
+    # FedDST-style mask regrowth (RegrowConfig); None = monotone pruning
+    # only.  Applies to the synchronous methods under every engine; regrow
+    # rounds cut fused chunks so the readjustment runs at a host boundary.
+    regrow: Optional[RegrowConfig] = None
     # local-training engine: "sequential" | "bucketed" | "masked" | "fused"
     # (core.fleet; "fused" = the resident stacks PLUS chunked on-device
     # round fusion, core.fused)
@@ -323,6 +378,14 @@ class _Env:
                 "resident_momentum needs a resident engine "
                 "(engine='masked' or 'fused') — the cross-round carry IS "
                 "the FleetState momentum stack"
+            )
+        if sim.regrow is not None and sim.method not in (
+            "adaptcl", "fedavg", "fedavg_s"
+        ):
+            raise ValueError(
+                "SimConfig.regrow (FedDST mask readjustment) applies to the "
+                "synchronous methods only — async workers never prune, so "
+                "there is nothing to regrow"
             )
         if sim.mesh is not None and (
             sim.engine != "fused"
@@ -485,15 +548,23 @@ def _dgc_compress(delta: Dict[str, np.ndarray], residual: Dict[str, np.ndarray],
             total += d.size
             continue
         flat = np.abs(d).ravel()
-        n_keep = max(1, int(round(flat.size * (1.0 - sparsity))))
+        # keep budget in float32 — the SAME rounding the device compressor
+        # (aggregation.dgc_compress_jnp) performs, so keep sets can't diverge
+        # on half-integer budgets
+        n_keep = max(
+            1, int(np.round(np.float32(flat.size) * np.float32(1.0 - sparsity)))
+        )
         if n_keep >= flat.size:
             committed[k], new_res[k] = d, np.zeros_like(d)
+            kept += flat.size
         else:
             thr = np.partition(flat, flat.size - n_keep)[flat.size - n_keep]
             mask = np.abs(d) >= thr
             committed[k] = d * mask
             new_res[k] = d * (1.0 - mask)
-        kept += n_keep
+            # ties at the threshold all commit (>=), so count the REALIZED
+            # mask — n_keep undercounts exactly when |delta| values collide
+            kept += int(mask.sum())
         total += flat.size
     # payload: kept values + their indices (~1.25x values, as in DGC)
     return committed, new_res, 1.25 * kept / max(total, 1)
@@ -538,7 +609,13 @@ def _dgc_compress_stacked(
         else:
             valid = None
             sizes = np.full(W, flat.shape[1])
-        n_keep = np.maximum(1, np.round(sizes * (1.0 - sparsity)).astype(np.int64))
+        # float32 keep budgets, matching aggregation.dgc_compress_jnp exactly
+        n_keep = np.maximum(
+            1,
+            np.round(
+                sizes.astype(np.float32) * np.float32(1.0 - sparsity)
+            ).astype(np.int64),
+        )
         n_keep = np.minimum(n_keep, np.maximum(sizes, 1))
         order = np.sort(absf, axis=1)[:, ::-1]
         thr = order[np.arange(W), n_keep - 1]
@@ -553,10 +630,101 @@ def _dgc_compress_stacked(
         rowsf = rows[:, None]
         committed[k] = np.where(rowsf, com, 0.0).reshape(d.shape).astype(d.dtype)
         new_res[k] = np.where(rowsf, res, old_res).reshape(d.shape).astype(d.dtype)
-        kept += np.where(rows, n_keep, 0)
+        # realized per-row commit counts: ties at the threshold all pass the
+        # >= test, and a fully-masked row (sizes == 0) commits nothing — the
+        # keep mask already reflects both, n_keep reflects neither
+        kept += np.where(rows, keep.sum(axis=1), 0)
         total += np.where(rows, sizes, 0)
     factors = np.where(rows, 1.25 * kept / np.maximum(total, 1), 1.0)
     return committed, new_res, factors
+
+
+def _regrow_alpha(cfg: RegrowConfig, t: int, rounds: int) -> float:
+    """Readjust fraction in force at the start of round t (FedDST anneal)."""
+    if cfg.schedule == "constant":
+        return cfg.alpha0
+    return float(
+        0.5 * cfg.alpha0 * (1.0 + np.cos(np.pi * (t - 1) / max(rounds, 1)))
+    )
+
+
+def _regrow_round(sim: SimConfig, t: int) -> bool:
+    """Does a mask readjustment fire at the START of round t?  Every
+    ``interval`` completed rounds — so the first possible event is the start
+    of round ``interval + 1``, operating on a freshly aggregated global."""
+    return (
+        sim.regrow is not None
+        and t > 1
+        and (t - 1) % sim.regrow.interval == 0
+    )
+
+
+def _weight_magnitude_scores(params, unit_map, unit_counts) -> Dict[str, np.ndarray]:
+    """Per-unit L2 group norms of a base-coordinate param dict (float64) —
+    the shrink half of the readjustment ranks retained units by the GLOBAL
+    model's weight magnitude, so the order is one shared host computation
+    per regrow round, identical for every engine."""
+    acc = {k: np.zeros(n, np.float64) for k, n in unit_counts.items()}
+    for path, entries in unit_map.items():
+        arr = params.get(path)
+        if arr is None:
+            continue
+        sq = np.asarray(arr, np.float64) ** 2
+        for lname, axis in entries:
+            if lname not in acc:
+                continue
+            axes = tuple(i for i in range(sq.ndim) if i != axis)
+            acc[lname] += sq.sum(axis=axes)
+    return {k: np.sqrt(v) for k, v in acc.items()}
+
+
+def _regrow_step(
+    sim: SimConfig, env: _Env, global_params, indices, t: int
+) -> List[Tuple[int, Dict[str, np.ndarray]]]:
+    """One FedDST mask readjustment at the start of round t (host math).
+
+    Per worker with retention < 1: ``prune_to_budget`` removes ``alpha_t``
+    of the retained parameter mass by global weight magnitude, then
+    ``regrow_index`` adds the SAME integer parameter budget back from the
+    absent units, ranked by |grad| of the dense model at the global on the
+    worker's shard head (``trainer.gradient`` — one extra jit signature,
+    cached across all regrow events).  Consumes NO ``env.rng`` draws, so
+    the plan/jitter streams — and therefore everything a regrow-disabled
+    run computes — are untouched.
+
+    Returns ``[(worker, new_index)]`` for the readjusted workers; the
+    caller records them in ``prune_events`` and refreshes device masks."""
+    cfg = sim.regrow
+    alpha_t = _regrow_alpha(cfg, t, sim.rounds)
+    if alpha_t <= 0.0:
+        return []
+    shrink_scores = None
+    out: List[Tuple[int, Dict[str, np.ndarray]]] = []
+    for w in range(sim.num_workers):
+        if retention(indices[w], env.space) >= 1.0:
+            continue   # full model: no absent units to grow back
+        if shrink_scores is None:
+            shrink_scores = _weight_magnitude_scores(
+                global_params, env.unit_map, env.space.unit_counts
+            )
+        shrunk = prune_to_budget(indices[w], shrink_scores, alpha_t, env.space)
+        budget = sum(
+            (len(indices[w][l.name]) - len(shrunk[l.name])) * l.unit_param_cost
+            for l in env.space.layers
+        )
+        if budget <= 0:
+            continue
+        x, y = env.shard_xy(w)
+        grads = env.trainer.gradient(
+            {k: np.asarray(v, np.float32) for k, v in global_params.items()},
+            env.unit_map, x[:64], y[:64],
+        )
+        grow_scores = grad_magnitude_scores(
+            grads, env.unit_map, env.space.unit_counts
+        )
+        indices[w] = regrow_index(shrunk, grow_scores, budget, env.space)
+        out.append((w, indices[w]))
+    return out
 
 
 def _run_sync(sim: SimConfig, env: _Env) -> SimResult:
@@ -646,6 +814,19 @@ def _run_sync(sim: SimConfig, env: _Env) -> SimResult:
             scen_rows.append((
                 t, len(active_ws), int(events.dropped.sum()), int(events.joined.sum()),
             ))
+
+        # --- FedDST mask readjustment at the round start, BEFORE
+        # broadcast-back: grown units inherit their global values for free.
+        # On the resident engine this is a pure mask-row rewrite.
+        if _regrow_round(sim, t):
+            regrown = _regrow_step(sim, env, global_params, indices, t)
+            for w, idx_w in regrown:
+                prune_events.append((
+                    t, int(w),
+                    {k: tuple(map(int, v)) for k, v in idx_w.items()},
+                ))
+            if resident and regrown:
+                env.fleet.refresh_masks(state, indices)
 
         # --- batch plans, drawn in worker order up front so the batch
         # sequences (and therefore the trained models) are identical across

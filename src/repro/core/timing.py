@@ -60,6 +60,8 @@ def heterogeneity_from_times(phis: Sequence[float]) -> float:
 
 def heterogeneity_closed_form(W: int, sigma: float) -> float:
     """Eq. 8 — H for the uniform spread used in the experiments."""
+    if W < 2:
+        return 0.0  # a lone worker is its own fastest peer (matches Eq. 4)
     ws = np.arange(1, W, dtype=np.float64)  # w = 1..W-1 (worker W is fastest)
     return float(1.0 - np.mean(1.0 / (1.0 + (sigma - 1.0) / (W - 1) * (W - ws))))
 
@@ -77,6 +79,10 @@ def make_bandwidths(
     if bmax is None:
         bmax = 2.0 * model_bytes / (cfg.comm_ratio * max(t_train, 1e-9))
     phi_fast = 2.0 * model_bytes / bmax + t_train
+    if W == 1:
+        # Degenerate fleet: the spread term (W - w) is identically zero, so
+        # phi_1 = phi_fast and B_1 = bmax exactly.
+        return [bmax]
     bws = []
     for w in range(1, W + 1):
         phi_w = phi_fast * (1.0 + (sigma - 1.0) / (W - 1) * (W - w))

@@ -1,7 +1,12 @@
 """Data partition (Non-IID, §IV-A) + channel model (Eq. 6/7) tests."""
 import numpy as np
 
-from repro.core.timing import HeterogeneityConfig, make_bandwidths
+from repro.core.timing import (
+    HeterogeneityConfig,
+    heterogeneity_closed_form,
+    heterogeneity_from_times,
+    make_bandwidths,
+)
 from repro.data.synthetic import SyntheticImageTask, batch_iterator, partition_noniid
 
 
@@ -58,3 +63,32 @@ def test_eq6_eq7_bandwidths_roundtrip():
     assert np.argmin(phis) == len(phis) - 1            # worker W fastest
     diffs = np.diff(sorted(phis))
     assert np.allclose(diffs, diffs[0], rtol=1e-6)     # uniform spread (Eq. 6)
+
+
+def test_single_worker_fleet_guards():
+    """Regression: W=1 used to divide by (W-1) in Eq. 6/8.  A lone worker is
+    its own fastest peer — zero heterogeneity, bandwidth exactly B_max."""
+    cfg = HeterogeneityConfig(num_workers=1, sigma=2.0, bandwidth_max=5e6)
+    bws = make_bandwidths(cfg, 2.0e6, 1.0)
+    assert bws == [5e6]
+    # auto-scaled B_max path (bandwidth_max=None) must not divide by zero either
+    auto = make_bandwidths(HeterogeneityConfig(num_workers=1), 2.0e6, 1.0)
+    assert len(auto) == 1 and np.isfinite(auto[0]) and auto[0] > 0
+    assert heterogeneity_closed_form(1, sigma=2.0) == 0.0
+    assert heterogeneity_from_times([3.7]) == 0.0
+
+
+def test_single_worker_simulation_smoke():
+    """A W=1 fleet runs end to end (it used to crash in make_bandwidths)."""
+    from repro.core.simulation import SimConfig, run_simulation
+    from repro.models.cnn import vgg_config
+
+    tiny = vgg_config("vgg_tiny_w1", [8, "M", 16], num_classes=4, image_size=8)
+    res = run_simulation(SimConfig(
+        cnn=tiny, method="adaptcl", rounds=4, prune_interval=2,
+        num_workers=1, batch_size=16, eval_every=2, seed=3,
+        het=HeterogeneityConfig(num_workers=1),
+    ))
+    assert res.final_acc > 0.3
+    assert all(h == 0.0 for _, h in res.het_traj)
+    assert res.retentions == [1.0]      # its own fastest peer: never prunes

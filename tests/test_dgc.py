@@ -123,6 +123,92 @@ def test_stacked_mask_awareness():
     assert factors[0] == pytest.approx(1.25 * 4 / 8)
 
 
+@pytest.mark.parametrize("sparsity", [0.3, 0.5, 0.9])
+def test_realized_kept_counts_on_threshold_ties(sparsity):
+    """Payload accounting property: the reported factor counts the REALIZED
+    commits.  Quantized |delta| values collide massively at the threshold,
+    and ties all pass the >= test — so the factor must equal
+    1.25 * nnz(committed) / total, never the nominal keep budget."""
+    rng = np.random.default_rng(8)
+    W = 3
+    delta = {
+        "w": rng.choice([-2.0, -1.0, 1.0, 2.0], size=(W, 16)).astype(np.float32)
+    }
+    zeros = {k: np.zeros_like(v) for k, v in delta.items()}
+    committed, _, factors = _dgc_compress_stacked(delta, zeros, sparsity)
+    for w in range(W):
+        nnz = np.count_nonzero(committed["w"][w])
+        assert factors[w] == pytest.approx(1.25 * nnz / 16)
+        # the per-worker compressor reports the same realized count
+        c_ref, _, f_ref = _dgc_compress({"w": delta["w"][w]}, {}, sparsity)
+        assert np.count_nonzero(c_ref["w"]) == nnz
+        assert f_ref == pytest.approx(factors[w])
+
+
+def test_fully_masked_row_commits_nothing():
+    """A worker whose mask is all-zero for a tensor has keep budget 0 there —
+    the threshold sentinel (-1) must not let anything through."""
+    rng = np.random.default_rng(9)
+    W = 2
+    delta = {"w": rng.normal(size=(W, 8)).astype(np.float32)}
+    masks = {"w": np.ones((W, 8), np.float32)}
+    masks["w"][1] = 0.0
+    zeros = {k: np.zeros_like(v) for k, v in delta.items()}
+    committed, new_res, factors = _dgc_compress_stacked(
+        delta, zeros, 0.5, masks=masks
+    )
+    assert not committed["w"][1].any()
+    assert not new_res["w"][1].any()
+    assert factors[0] > 0.0
+
+
+def test_device_compressor_bit_identical_to_host():
+    """aggregation.dgc_compress_jnp vs _dgc_compress_stacked: identical f32
+    keep budgets + thresholds-by-value mean the keep SETS are bit-identical,
+    even under adversarial |delta| ties, masks, and row gating — the same
+    contract that makes device pruning host-exact."""
+    from repro.core.aggregation import dgc_compress_jnp
+    import jax.numpy as jnp
+
+    rng = np.random.default_rng(10)
+    W = 4
+    delta = {
+        # quantized values: massive tie collisions at any threshold
+        "a/w": rng.choice([-2.0, -1.0, 0.5, 1.0, 2.0], size=(W, 3, 3, 2, 4))
+        .astype(np.float32),
+        "b/w": rng.normal(size=(W, 8)).astype(np.float32),
+    }
+    residual = {k: rng.normal(size=v.shape).astype(np.float32) * 0.1
+                for k, v in delta.items()}
+    masks = {k: (rng.random(v.shape) < 0.7).astype(np.float32)
+             for k, v in delta.items()}
+    masks["b/w"][2] = 0.0                       # one fully-masked row
+    rows = np.array([True, True, False, True])
+
+    for sparsity in (0.3, 0.7, 0.95):
+        c_h, r_h, factors = _dgc_compress_stacked(
+            delta, residual, sparsity, masks=masks, rows=rows
+        )
+        c_d, r_d, kept, total = dgc_compress_jnp(
+            {k: jnp.asarray(v) for k, v in delta.items()},
+            {k: jnp.asarray(v) for k, v in residual.items()},
+            sparsity,
+            {k: jnp.asarray(v) for k, v in masks.items()},
+            jnp.asarray(rows),
+        )
+        kept, total = np.asarray(kept), np.asarray(total)
+        for k in delta:
+            np.testing.assert_array_equal(c_h[k], np.asarray(c_d[k]),
+                                          err_msg=f"committed {k} s={sparsity}")
+            np.testing.assert_array_equal(r_h[k], np.asarray(r_d[k]),
+                                          err_msg=f"residual {k} s={sparsity}")
+        # realized counts rebuild the host factors exactly
+        np.testing.assert_allclose(
+            np.where(rows, 1.25 * kept / np.maximum(total, 1), 1.0),
+            factors, rtol=0, atol=0,
+        )
+
+
 def test_stacked_rows_gate_commits():
     """Non-submitting rows commit nothing and keep their residual untouched."""
     rng = np.random.default_rng(7)

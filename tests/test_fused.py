@@ -20,15 +20,18 @@ import pytest
 from repro.core.masks import (
     flatten_unit_space,
     full_index,
+    grow_order,
     index_from_presence,
     presence_from_index,
     prune_budget_units,
     prune_order,
     prune_presence_rows,
     prune_to_budget,
+    regrow_index,
+    regrow_presence_rows,
 )
 from repro.core.scenario import ScenarioConfig
-from repro.core.simulation import SimConfig, run_simulation
+from repro.core.simulation import RegrowConfig, SimConfig, run_simulation
 from repro.core.timing import HeterogeneityConfig
 from repro.models.cnn import build_unit_space, init_cnn, vgg_config
 
@@ -259,6 +262,117 @@ def test_resident_momentum_under_churn():
 
 
 # ---------------------------------------------------------------------------
+# device DGC + FedDST mask regrowth
+# ---------------------------------------------------------------------------
+
+def test_fused_dgc_matches_resident():
+    # device top-|.| keep sets are bit-identical to the host compressor, so
+    # clocks, comm bytes AND prune indices line up exactly
+    res = _sim("masked", dgc_sparsity=0.5)
+    fus = _sim("fused", dgc_sparsity=0.5)
+    _assert_equivalent(res, fus)
+    assert res.comm_bytes == fus.comm_bytes
+    dense = _sim("masked")
+    assert fus.comm_bytes < dense.comm_bytes   # compression actually engaged
+    assert fus.total_time < dense.total_time   # ... and the channel saw it
+
+
+def test_fused_regrow_matches_sequential_and_resident():
+    # interval=3 does NOT align with prune_interval=2: regrow rounds (4, 7)
+    # must cut chunks mid-interval and stay bit-identical anyway
+    rg = RegrowConfig(interval=3, alpha0=0.3)
+    seq = _sim("sequential", rounds=8, regrow=rg)
+    res = _sim("masked", rounds=8, regrow=rg)
+    fus = _sim("fused", rounds=8, regrow=rg, round_fusion=4)
+    _assert_equivalent(seq, fus)
+    _assert_equivalent(res, fus)
+    event_rounds = {t for t, _, _ in fus.prune_events}
+    assert {4, 7} <= event_rounds              # regrow events recorded
+    # regrow adds exactly ONE extra signature (the grow-score gradient)
+    assert fus.recompiles <= 2
+
+
+@pytest.mark.slow
+def test_fused_regrow_with_dgc_and_momentum():
+    # the full stack at once: readjusted masks + device DGC + resident
+    # momentum (regrown units must restart at zero velocity in both engines)
+    kw = dict(
+        rounds=8, regrow=RegrowConfig(interval=2, alpha0=0.4),
+        dgc_sparsity=0.5, resident_momentum=True, round_fusion=4,
+    )
+    res = _sim("masked", **kw)
+    fus = _sim("fused", **kw)
+    _assert_equivalent(res, fus)
+    assert res.comm_bytes == fus.comm_bytes
+
+
+def test_regrow_swaps_units_at_near_constant_budget():
+    # regrow swaps units, it does not change the budget: the grow greedy
+    # restores exactly the removed param mass, within one unit's cost of
+    # overshoot (the last grown unit may cross the integer budget)
+    space = _space()
+    flat = flatten_unit_space(space)
+    rng = np.random.default_rng(11)
+    scores = {l.name: rng.normal(size=l.num_units) for l in space.layers}
+    idx = prune_to_budget(full_index(space), scores, 0.4, space)
+    shrink = {l.name: rng.normal(size=l.num_units) for l in space.layers}
+    shrunk = prune_to_budget(idx, shrink, 0.3, space)
+    budget = sum(
+        (len(idx[l.name]) - len(shrunk[l.name])) * l.unit_param_cost
+        for l in space.layers
+    )
+    assert budget > 0
+    grow = {l.name: rng.normal(size=l.num_units) for l in space.layers}
+    regrown = regrow_index(shrunk, grow, budget, space)
+
+    def mass(i):
+        return sum(
+            len(i[l.name]) * l.unit_param_cost for l in space.layers
+        )
+
+    overshoot = mass(regrown) - mass(idx)
+    assert 0 <= overshoot < int(max(flat.costs))
+    # ...and it actually SWAPPED units (grow scores != shrink scores)
+    assert any(
+        set(regrown[l.name]) != set(idx[l.name]) for l in space.layers
+    )
+
+
+def test_regrow_rejected_for_async():
+    with pytest.raises(ValueError, match="regrow"):
+        _sim("sequential", method="fedasync_s",
+             regrow=RegrowConfig(interval=2))
+
+
+def test_device_regrow_matches_host_golden():
+    """masks.regrow_presence_rows replays masks.regrow_index exactly —
+    descending-score grow order, integer param budgets, tie-breaking — the
+    grow-side mirror of test_device_prune_matches_host_golden."""
+    space = _space()
+    flat = flatten_unit_space(space)
+    rng = np.random.default_rng(7)
+    prune_scores = {l.name: rng.normal(size=l.num_units) for l in space.layers}
+    idx = prune_to_budget(full_index(space), prune_scores, 0.5, space)
+    # integer scores: massive grow-order ties, the (layer, unit) break decides
+    grow_scores = {
+        l.name: rng.integers(0, 3, l.num_units).astype(np.float64)
+        for l in space.layers
+    }
+    order = grow_order(grow_scores, flat)
+    for budget in (0, 3, 17, 10**6):
+        host = regrow_index(idx, grow_scores, budget, space)
+        pres = presence_from_index(idx, flat)[None]
+        out = np.asarray(regrow_presence_rows(
+            pres, order[None], np.asarray([budget], np.int32), flat
+        ))[0]
+        dev = index_from_presence(out, flat)
+        for lname in host:
+            np.testing.assert_array_equal(
+                host[lname], dev[lname], err_msg=f"budget={budget} {lname}"
+            )
+
+
+# ---------------------------------------------------------------------------
 # unsupported-config guards
 # ---------------------------------------------------------------------------
 
@@ -266,7 +380,6 @@ def test_resident_momentum_under_churn():
     # async methods themselves fuse now (tests/test_async_fused.py); the
     # per-commit momentum restart still rejects the resident carry
     (dict(method="fedasync_s", resident_momentum=True), "async"),
-    (dict(dgc_sparsity=0.5), "DGC"),
     (dict(importance="hrank"), "criteria"),
     (dict(compute="block_skip"), "block_skip"),
 ])

@@ -37,6 +37,25 @@ def test_inverse_interpolation_linear_channel():
     assert abs(g - 0.35) < 1e-9
 
 
+def test_history_cap_truncates_by_recency_not_phi():
+    """Regression: the Runge guard must keep the most RECENT checkpoints.
+
+    The old code sorted the nodes by ascending phi first and applied the
+    ``max_history`` cap afterwards, so the largest-phi nodes — the stale
+    early measurements from the unpruned model — survived forever while
+    fresh small-phi checkpoints were dropped.  A worker whose channel has
+    settled onto a clean linear law must interpolate through its recent
+    window only."""
+    h = WorkerHistory()
+    # stale round-1 outlier: congested channel, wildly off the settled law
+    h.record(1.0, 500.0)
+    # 8 recent checkpoints on the settled channel phi(gamma) = 2 + 8*gamma
+    for g in np.linspace(0.9, 0.2, 8):
+        h.record(float(g), 2.0 + 8.0 * float(g))
+    g = inverse_interpolate_gamma(h, phi_target=2.0 + 8.0 * 0.35, max_history=8)
+    assert abs(g - 0.35) < 1e-6
+
+
 def test_bootstrap_rate_formula():
     # never-pruned workers use P = (phi - phi_min) / (alpha * phi)
     cfg = PrunedRateConfig(alpha=2.0, rho_min=0.0)

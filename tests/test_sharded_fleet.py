@@ -130,6 +130,22 @@ def test_sharded_by_unit_aggregation(eight_devices):
     _assert_equivalent(seq, shd)
 
 
+@pytest.mark.slow
+def test_sharded_dgc_and_regrow(eight_devices):
+    # device DGC is all row-local math (per-row top-|.| over the shard's own
+    # residual stacks) and regrow is a host boundary step — neither crosses
+    # rows, so keep sets, payload clocks and grow events survive sharding
+    # bit-for-bit
+    from repro.core.simulation import RegrowConfig
+
+    kw = dict(dgc_sparsity=0.5, regrow=RegrowConfig(interval=2, alpha0=0.3),
+              eval_every=6)
+    fus = _sim("fused", **kw)
+    shd = _sim("fused", mesh=_mesh(4), **kw)
+    _assert_equivalent(fus, shd)
+    assert fus.comm_bytes == shd.comm_bytes
+
+
 # ---------------------------------------------------------------------------
 # host-dispatch economics: flat in device count
 # ---------------------------------------------------------------------------
