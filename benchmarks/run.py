@@ -715,6 +715,184 @@ def regrow_sweep(out_path: str = "BENCH_regrow.json", quick: bool = False) -> No
     print(f"regrow/json,{out_path},")
 
 
+def world_model(out_path: str = "BENCH_world.json", quick: bool = False) -> None:
+    """Fault-injection world-model bench: accuracy vs flakiness x engine.
+
+    Runs the scripted fault families (core.faults) — capability drift,
+    crash/recovery, a shard-aligned regional outage, a diurnal
+    participation wave, and all four combined — on the masked and fused
+    engines, and doubles as the regression harness for the fault layer:
+
+    * ``faults=None`` vs an all-inactive ``FaultConfig()`` is BIT-identical
+      (same prune events, clocks, accuracy: the overlay consumes zero
+      extra RNG draws when off);
+    * under every fault world masked == fused: exact virtual clocks,
+      bit-identical prune events, identical fault ledgers, acc within
+      1e-3;
+    * fused dispatch economics survive the faults: crash/outage/wave ride
+      in-scan (chunk count unchanged vs fault-free), only drift boundaries
+      cut extra chunks, recompiles <= 2;
+    * the accuracy-vs-flakiness grid is sane: no fault world beats the
+      fault-free run by more than eval noise, and the outage world
+      actually skipped starved rounds without hanging.
+    """
+    from repro.core.faults import (
+        CrashConfig, DriftConfig, FaultConfig, OutageConfig, WaveConfig,
+    )
+    from repro.core.scenario import ScenarioConfig
+    from repro.core.simulation import SimConfig, run_simulation
+    from repro.core.timing import HeterogeneityConfig
+    from repro.models.cnn import vgg_config
+
+    cnn = vgg_config("vgg_world", [16, "M", 32], num_classes=10, image_size=8)
+    W = 5 if quick else 10
+    rounds = 6 if quick else 16
+    pi = 2 if quick else 4      # prune_interval == round_fusion
+    drift_round = pi + 1        # mid-interval: re-learning is drift-triggered
+    dark = W // 2               # regional outage: slots [0, dark) go dark
+    worlds = {
+        "fault_free": dict(seed=3),
+        "drift": dict(seed=3, faults=FaultConfig(
+            drift=DriftConfig(worker=1, round=drift_round, factor=3.0))),
+        "crash": dict(seed=3, faults=FaultConfig(
+            crash=CrashConfig(rate=0.15, outage_rounds=2,
+                              recovery_rounds=1))),
+        "outage": dict(seed=3, min_participants=W - dark + 1,
+                       faults=FaultConfig(outage=OutageConfig(
+                           start=pi + 1, length=2, slot_lo=0,
+                           slot_hi=dark))),
+        "wave": dict(seed=3, participation=0.8, faults=FaultConfig(
+            wave=WaveConfig(amplitude=0.5, period=max(2, rounds // 2)))),
+        "combined": dict(seed=3, min_participants=2, participation=0.9,
+                         faults=FaultConfig(
+                             drift=DriftConfig(worker=0, round=drift_round,
+                                               factor=2.0, mode="ramp",
+                                               ramp_rounds=3),
+                             crash=CrashConfig(rate=0.1),
+                             outage=OutageConfig(start=rounds - 2, length=2,
+                                                 slot_lo=0, slot_hi=dark),
+                             wave=WaveConfig(amplitude=0.4,
+                                             period=max(2, rounds // 2)))),
+    }
+    ledger_fields = ("drift_events", "rounds_degraded", "rounds_skipped",
+                     "workers_recovered", "retry_total")
+
+    def run(engine, scen_kw):
+        return run_simulation(SimConfig(
+            method="adaptcl", engine=engine, rounds=rounds,
+            prune_interval=pi, round_fusion=pi, num_workers=W,
+            batch_size=8, cnn=cnn, eval_every=rounds,
+            het=HeterogeneityConfig(num_workers=W, sigma=5.0),
+            seed=7, scenario=ScenarioConfig(**scen_kw),
+        ))
+
+    rows = []
+    results = {}
+    print("name,value,derived")
+    for wname, scen_kw in worlds.items():
+        for engine in ("masked", "fused"):
+            r = run(engine, scen_kw)
+            results[(wname, engine)] = r
+            led = {f: getattr(r, f) for f in ledger_fields}
+            rows.append(dict(
+                world=wname, engine=engine, rounds=rounds, round_fusion=pi,
+                workers=W, final_acc=r.final_acc, total_time=r.total_time,
+                comm_bytes=r.comm_bytes,
+                prune_event_count=len(r.prune_events),
+                host_dispatches=r.host_dispatches,
+                fused_chunks=r.fused_chunks, recompiles=r.recompiles,
+                walltime_s=r.walltime_s,
+                compile_walltime_s=r.compile_walltime_s,
+                **led,
+            ))
+            print(
+                f"world/{wname}/{engine},acc={r.final_acc:.3f},"
+                f"time={r.total_time:.1f};skipped={r.rounds_skipped};"
+                f"degraded={r.rounds_degraded};recovered={r.workers_recovered};"
+                f"dispatches={r.host_dispatches};recompiles={r.recompiles}"
+            )
+
+    # the regression leg: an all-inactive FaultConfig must be invisible
+    inert = run("fused", dict(seed=3, faults=FaultConfig()))
+    free = results[("fault_free", "fused")]
+    acc_free = free.final_acc
+    acc_slack = 0.08            # eval noise band on this tiny fixture
+    checks = {
+        "faultfree_bit_identical": (
+            inert.final_acc == acc_free
+            and inert.total_time == free.total_time
+            and inert.prune_events == free.prune_events
+        ),
+        # clocks / prune events / ledgers EXACT; accuracy within the eval
+        # noise band (f32 device vs f64 host aggregation flips a handful of
+        # boundary test examples on this fixture — the strict 1e-3 contract
+        # lives in tests/test_faults.py on the 4-class fixture)
+        "engines_equivalent": all(
+            results[(wn, "masked")].total_time
+            == results[(wn, "fused")].total_time
+            and results[(wn, "masked")].prune_events
+            == results[(wn, "fused")].prune_events
+            and abs(results[(wn, "masked")].final_acc
+                    - results[(wn, "fused")].final_acc) <= 0.02
+            and all(getattr(results[(wn, "masked")], f)
+                    == getattr(results[(wn, "fused")], f)
+                    for f in ledger_fields)
+            for wn in worlds
+        ),
+        # crash/outage/wave ride in-scan: chunk count == the fault-free
+        # run's R/K; only drift boundaries may cut extras (ramp: <= 3)
+        "fused_chunks_O_R_over_K": all(
+            results[(wn, "fused")].fused_chunks == rounds // pi
+            for wn in ("fault_free", "crash", "outage", "wave")
+        ),
+        "drift_cuts_bounded": (
+            results[("drift", "fused")].fused_chunks <= rounds // pi + 1
+            and results[("combined", "fused")].fused_chunks
+            <= rounds // pi + 3
+        ),
+        "fused_recompiles_le_2": all(
+            results[(wn, "fused")].recompiles <= 2 for wn in worlds
+        ),
+        # accuracy-vs-flakiness: a hostile world never BEATS the fault-free
+        # run beyond eval noise, and the flakiest world still converges
+        "acc_flakiness_guard": all(
+            results[(wn, "fused")].final_acc <= acc_free + acc_slack
+            for wn in worlds
+        ),
+        "faulty_worlds_still_converge": all(
+            results[(wn, "fused")].final_acc >= 2.0 / cnn.num_classes
+            for wn in worlds
+        ),
+        # each family left its signature in the ledger — and completed
+        "drift_triggered_relearning": (
+            results[("drift", "fused")].drift_events >= 1
+        ),
+        "crash_recovered_workers": (
+            results[("crash", "fused")].workers_recovered >= 1
+        ),
+        "outage_skipped_not_hung": (
+            results[("outage", "fused")].rounds_skipped >= 1
+            and len(results[("outage", "fused")].scenario_rounds) == rounds
+        ),
+        "wave_varies_cohort": len({
+            n for _, n, _, _ in results[("wave", "fused")].scenario_rounds
+        }) > 1,
+        "faultfree_ledger_zero": all(
+            getattr(free, f) == 0 for f in ledger_fields
+        ),
+    }
+    for k, v in checks.items():
+        print(f"world/{k},{v},")
+    with open(out_path, "w") as f:
+        json.dump({
+            "rows": rows,
+            "rounds": rounds,
+            "round_fusion": pi,
+            "checks": checks,
+        }, f, indent=2)
+    print(f"world/json,{out_path},")
+
+
 def main() -> None:
     ap = argparse.ArgumentParser(
         description=__doc__, formatter_class=argparse.RawDescriptionHelpFormatter
@@ -722,7 +900,7 @@ def main() -> None:
     ap.add_argument(
         "command", nargs="?", default="tables",
         choices=("tables", "scale", "async_scale", "retention_sweep", "fused",
-                 "shard_scale", "regrow_sweep"),
+                 "shard_scale", "regrow_sweep", "world_model"),
         help="'tables' (default) = paper-table benches; 'scale' = sync "
              "fleet-scaling grid (W x engine x scenario -> BENCH_scale.json); "
              "'async_scale' = resident async scheduler grid (W x scheduler x "
@@ -733,7 +911,8 @@ def main() -> None:
              "'shard_scale' = mesh-sharded fused engine, W x n_dev grid on 8 "
              "virtual CPU devices (-> BENCH_shard.json); 'regrow_sweep' = "
              "FedDST mask-readjustment variants x engine "
-             "(-> BENCH_regrow.json)",
+             "(-> BENCH_regrow.json); 'world_model' = fault-injection "
+             "accuracy-vs-flakiness grid x engine (-> BENCH_world.json)",
     )
     ap.add_argument("--only", default=None)
     ap.add_argument("--quick", action="store_true")
@@ -777,6 +956,9 @@ def main() -> None:
         return
     if args.command == "regrow_sweep":
         regrow_sweep(args.out or "BENCH_regrow.json", quick=args.quick)
+        return
+    if args.command == "world_model":
+        world_model(args.out or "BENCH_world.json", quick=args.quick)
         return
 
     from benchmarks import tables  # import after BENCH_QUICK is set

@@ -1,0 +1,246 @@
+"""Fault-injection world model: scripted hostile-world events for the simulator.
+
+AdaptCL's core claim is adaptation *without prior capability information* —
+but a static world (phi fixed at init, i.i.d. dropout) never exercises the
+adaptation loop.  This module scripts four fault families into the scenario
+layer (``ScenarioConfig.faults``) so the prune-rate learner and every fleet
+engine can be tested against a hostile, *replayable* world:
+
+* **capability drift** (:class:`DriftConfig`) — one worker's update time
+  jumps or ramps by ``factor`` at ``round`` (deterministic, zero RNG).  A
+  drift change forces a prune-rate re-learning event: the server re-enters
+  Alg. 2 at the end of the drift round with the drifted worker's stale
+  (gamma, phi) history invalidated (``WorkerHistory.invalidate`` — the old
+  measurements describe a capability that no longer exists).
+* **crash / recovery** (:class:`CrashConfig`) — each online worker crashes
+  per round with probability ``rate`` (drawn from the DEDICATED fault RNG
+  stream), goes offline for ``outage_rounds`` rounds, and returns *stale*:
+  it refetches the current global (sync: the ordinary broadcast-back),
+  restarts momentum and DGC residuals, re-enters with its LAST mask, and
+  spends ``recovery_rounds`` re-joining — it trains and refetches but does
+  not count toward aggregation (retry/backoff accounting:
+  ``SimResult.retry_total``).  Under the async schedulers a crashed commit
+  delays the worker's next schedule by ``outage_rounds`` nominal update
+  times; it returns against a bumped server version (larger staleness).
+* **coordinated regional outage** (:class:`OutageConfig`) — a contiguous
+  slot range (alignable to the mesh-sharded fleet's contiguous layout via
+  :meth:`OutageConfig.for_shard` / ``scenario.shard_cohorts``) drops for a
+  window of rounds.  The server degrades gracefully: if the surviving
+  submitters still number >= ``min_participants`` the round aggregates the
+  partial cohort (``rounds_degraded``); otherwise the round is SKIPPED —
+  the virtual clock still advances by the straggler deadline, nothing
+  trains, the global is untouched, and no engine hangs or raises
+  (``rounds_skipped``).
+* **diurnal participation wave** (:class:`WaveConfig`) — time-varying
+  participation ``C(t) = C * (1 + amplitude * sin(2*pi*(t-1)/period))``
+  (deterministic, zero RNG).
+
+**Engine-identical by construction.**  Deterministic families (drift,
+outage, wave) are pure functions of (config, round); the stochastic family
+(crash) draws from a dedicated fault RNG stream
+(``ScenarioEngine.fault_rng``, seeded ``cfg.seed + 40961``) consumed once
+per round in round order — so the lazy sync loop, ``draw_all``'s pre-drawn
+plan, and the async event planner all replay the identical fault stream,
+and a ``faults=None`` run consumes ZERO extra draws on every stream
+(bit-identical to the pre-feature simulator, pinned by
+``tests/test_faults.py``).
+
+The per-round outcome rides on :class:`scenario.RoundEvents` (``offline``,
+``recovered``, ``recovering``, ``drift_mult``, ``skip``, ``degraded``
+fields, all ``None``/``False`` when faults are off), and the run-level
+fault ledger (``SimResult.drift_events`` / ``rounds_degraded`` /
+``rounds_skipped`` / ``workers_recovered`` / ``retry_total``) is computed
+by :func:`fault_ledger` from the events alone — one shared pure function,
+so sequential / masked / fused ledgers cannot diverge.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional, Sequence
+
+import numpy as np
+
+from .timing import drift_multiplier
+
+__all__ = [
+    "CrashConfig",
+    "DriftConfig",
+    "FaultConfig",
+    "OutageConfig",
+    "WaveConfig",
+    "fault_ledger",
+]
+
+
+@dataclasses.dataclass(frozen=True)
+class DriftConfig:
+    """One worker's capability drifts: phi multiplies by ``factor``.
+
+    ``mode="jump"`` switches at ``round``; ``mode="ramp"`` interpolates the
+    multiplier linearly over ``ramp_rounds`` rounds starting at ``round``.
+    ``factor > 1`` = the worker got slower, ``< 1`` = faster."""
+
+    worker: int = 0
+    round: int = 1          # first round the drifted capability is in force
+    factor: float = 2.0     # update-time multiplier after the drift
+    mode: str = "jump"      # "jump" | "ramp"
+    ramp_rounds: int = 1
+
+    def __post_init__(self):
+        if self.worker < 0:
+            raise ValueError(f"drift worker {self.worker} must be >= 0")
+        if self.round < 1:
+            raise ValueError(f"drift round {self.round} must be >= 1")
+        if not (self.factor > 0.0):
+            raise ValueError(f"drift factor {self.factor} must be > 0")
+        if self.mode not in ("jump", "ramp"):
+            raise ValueError(f"drift mode {self.mode!r} not in jump/ramp")
+        if self.ramp_rounds < 1:
+            raise ValueError(
+                f"drift ramp_rounds {self.ramp_rounds} must be >= 1"
+            )
+
+    def mult_at(self, round_t: int) -> float:
+        """Update-time multiplier in force at 1-based round ``round_t``."""
+        return drift_multiplier(
+            round_t, self.round, self.factor,
+            ramp_rounds=self.ramp_rounds if self.mode == "ramp" else 1,
+        )
+
+
+@dataclasses.dataclass(frozen=True)
+class CrashConfig:
+    """Per-round worker crashes with offline span + staged recovery."""
+
+    rate: float = 0.05        # P(online worker crashes this round)
+    outage_rounds: int = 2    # rounds fully offline after a crash
+    recovery_rounds: int = 1  # re-join rounds: train + refetch, no aggregation
+
+    def __post_init__(self):
+        if not (0.0 <= self.rate < 1.0):
+            raise ValueError(f"crash rate {self.rate} outside [0, 1)")
+        if self.outage_rounds < 1:
+            raise ValueError(
+                f"crash outage_rounds {self.outage_rounds} must be >= 1"
+            )
+        if self.recovery_rounds < 0:
+            raise ValueError(
+                f"crash recovery_rounds {self.recovery_rounds} must be >= 0"
+            )
+
+
+@dataclasses.dataclass(frozen=True)
+class OutageConfig:
+    """A contiguous slot range offline for rounds [start, start + length)."""
+
+    start: int = 1        # first affected round (1-based)
+    length: int = 1       # rounds the region stays dark
+    slot_lo: int = 0      # first affected worker slot
+    slot_hi: int = 1      # one past the last affected slot
+
+    def __post_init__(self):
+        if self.start < 1:
+            raise ValueError(f"outage start {self.start} must be >= 1")
+        if self.length < 1:
+            raise ValueError(f"outage length {self.length} must be >= 1")
+        if not (0 <= self.slot_lo < self.slot_hi):
+            raise ValueError(
+                f"outage slots [{self.slot_lo}, {self.slot_hi}) must be a "
+                "non-empty ascending range"
+            )
+
+    @staticmethod
+    def for_shard(
+        start: int, length: int, shard: int, num_workers: int, num_shards: int
+    ) -> "OutageConfig":
+        """Outage covering mesh shard ``shard``'s contiguous slot range.
+
+        Matches the mesh-sharded fleet's layout (shard ``s`` owns slots
+        ``[s * W_local, (s+1) * W_local)`` — the same algebra as
+        ``scenario.shard_cohorts`` / ``fleet.global_to_shard_local``), so a
+        "regional" outage takes out exactly one shard's row block."""
+        if num_shards < 1 or num_workers % num_shards:
+            raise ValueError(
+                f"num_workers={num_workers} does not divide into "
+                f"{num_shards} shards"
+            )
+        if not (0 <= shard < num_shards):
+            raise ValueError(f"shard {shard} outside [0, {num_shards})")
+        w_local = num_workers // num_shards
+        return OutageConfig(
+            start=start, length=length,
+            slot_lo=shard * w_local, slot_hi=(shard + 1) * w_local,
+        )
+
+    def covers(self, round_t: int) -> bool:
+        return self.start <= round_t < self.start + self.length
+
+
+@dataclasses.dataclass(frozen=True)
+class WaveConfig:
+    """Diurnal participation wave: C(t) = C * (1 + amp * sin(2pi (t-1)/T))."""
+
+    amplitude: float = 0.5
+    period: int = 8
+
+    def __post_init__(self):
+        if not (0.0 < self.amplitude < 1.0):
+            raise ValueError(
+                f"wave amplitude {self.amplitude} outside (0, 1)"
+            )
+        if self.period < 2:
+            raise ValueError(f"wave period {self.period} must be >= 2")
+
+    def factor_at(self, round_t: int) -> float:
+        return float(
+            1.0 + self.amplitude * np.sin(
+                2.0 * np.pi * (round_t - 1) / self.period
+            )
+        )
+
+
+@dataclasses.dataclass(frozen=True)
+class FaultConfig:
+    """The scripted fault world (``ScenarioConfig.faults``).
+
+    Every family is optional; ``FaultConfig()`` (all ``None``) is
+    bit-identical to ``faults=None`` — zero extra RNG draws on any stream."""
+
+    drift: Optional[DriftConfig] = None
+    crash: Optional[CrashConfig] = None
+    outage: Optional[OutageConfig] = None
+    wave: Optional[WaveConfig] = None
+
+    @property
+    def any_active(self) -> bool:
+        return any(
+            f is not None
+            for f in (self.drift, self.crash, self.outage, self.wave)
+        )
+
+
+def fault_ledger(events: Sequence) -> Dict[str, int]:
+    """The run-level fault ledger from a round-events sequence.
+
+    One pure function of the (engine-independent) per-round events, used by
+    every sync engine — so ``SimResult`` ledgers are identical across
+    sequential / masked / fused by construction.  All zeros when no faults
+    ran.  ``retry_total`` counts re-join attempts: rounds a recovering
+    worker trained without counting toward aggregation."""
+    led = dict(
+        drift_events=0, rounds_degraded=0, rounds_skipped=0,
+        workers_recovered=0, retry_total=0,
+    )
+    for ev in events:
+        led["drift_events"] += int(getattr(ev, "drift_changed", False))
+        led["rounds_skipped"] += int(getattr(ev, "skip", False))
+        led["rounds_degraded"] += int(getattr(ev, "degraded", False))
+        rec = getattr(ev, "recovered", None)
+        if rec is not None:
+            led["workers_recovered"] += int(np.asarray(rec).sum())
+        ring = getattr(ev, "recovering", None)
+        if ring is not None:
+            led["retry_total"] += int(
+                (np.asarray(ring) & np.asarray(ev.active)).sum()
+            )
+    return led

@@ -566,6 +566,20 @@ class FleetEngine:
         mode (``SimConfig.resident_momentum``)."""
         state.momentum = {k: jnp.zeros_like(v) for k, v in state.params.items()}
 
+    def zero_momentum_rows(self, state: "FleetState", rows: Sequence[int]):
+        """Restart momentum for a set of worker rows in place.
+
+        The one momentum-reset primitive behind both slot churn and
+        crash-recovery re-entry: a returning worker refetches the global
+        (the ordinary ``scatter_global`` broadcast-back) but must not reuse
+        velocity accumulated against pre-crash parameters."""
+        if state.momentum is None or not len(rows):
+            return
+        idx = jnp.asarray(np.asarray(rows, np.int64))
+        state.momentum = {
+            k: v.at[idx].set(0.0) for k, v in state.momentum.items()
+        }
+
     def train_rounds(
         self,
         state: "FleetState",

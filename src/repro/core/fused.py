@@ -116,6 +116,7 @@ from .aggregation import (
     roundtrip_total,
     subparam_shapes,
 )
+from .faults import fault_ledger
 from .fleet import gl_factors_from_counts, masks_from_presence, refetch_rows_jnp
 from .importance import (
     DEVICE_METHODS,
@@ -306,6 +307,23 @@ def _build_chunk_fn(trainer, unit_map, base_shapes, flat: UnitFlat, lam,
 
         def body(carry, inp):
             params, masks, presence, global_p, momentum, dgc_res = carry
+            # crash recovery at the round start, in-scan: rows flagged in
+            # inp["recov"] re-enter with their last mask but restart
+            # velocity/DGC residuals (they were accumulated against
+            # pre-crash parameters).  All-zero on fault-free rounds, so the
+            # compiled program is shared and the fault-free math unchanged.
+            if resident_momentum or use_dgc:
+                keep = 1.0 - inp["recov"]
+                if resident_momentum:
+                    momentum = {
+                        k: v * keep.reshape((-1,) + (1,) * (v.ndim - 1))
+                        for k, v in momentum.items()
+                    }
+                if use_dgc:
+                    dgc_res = {
+                        k: v * keep.reshape((-1,) + (1,) * (v.ndim - 1))
+                        for k, v in dgc_res.items()
+                    }
             # broadcast-back: masked scatter of the global into every row
             params = {k: global_p[k][None] * masks[k] for k in params}
             gl = gl_factors_from_counts(
@@ -411,6 +429,7 @@ def _build_chunk_fn(trainer, unit_map, base_shapes, flat: UnitFlat, lam,
         "plan_a": P(None, fleet_axis), "valid_a": P(None, fleet_axis),
         "budgets": P(None, fleet_axis), "prune_any": rep, "real": rep,
         "weights": P(None, fleet_axis), "submitters": P(None, fleet_axis),
+        "recov": P(None, fleet_axis),
     }
     if has_phase_b:
         per_round_specs["plan_b"] = P(None, fleet_axis)
@@ -440,6 +459,7 @@ def run_sync_fused(sim, env):
         _finalize,
         _regrow_round,
         _regrow_step,
+        _skip_round_time,
     )
 
     validate_fused_config(sim)
@@ -611,13 +631,19 @@ def run_sync_fused(sim, env):
                 state.momentum = {
                     k: v * m_now[k] for k, v in state.momentum.items()
                 }
-        # ---- chunk extent: learning events, churn and regrow rounds cut --
+        # ---- chunk extent: learning events, churn, regrow and capability
+        # drift rounds cut.  A drift-change round must be the LAST round of
+        # its chunk (the cut fires when the PREVIOUS round drifted), so the
+        # drift-triggered re-learning runs at the chunk boundary exactly
+        # where the lazy loop runs it.  Outage/skip rounds do NOT cut —
+        # they ride in-scan as dead rounds (real=False).
         n = min(K_pad, sim.rounds - t)
         if adapt:
             n = min(n, sim.prune_interval - (t % sim.prune_interval))
         for j in range(1, n):
             if (plan_all.events[t + j].joined.any()
-                    or _regrow_round(sim, t + j + 1)):
+                    or _regrow_round(sim, t + j + 1)
+                    or (scen is not None and scen.drift_changed(t + j))):
                 n = j
                 break
         rounds_this = list(range(t + 1, t + n + 1))
@@ -634,6 +660,8 @@ def run_sync_fused(sim, env):
         weights = np.zeros((K_pad, W), np.float32)
         submit_m = np.zeros((K_pad, W), np.float32)
         jitters = np.ones((K_pad, W))
+        recov = np.zeros((K_pad, W), np.float32)
+        drmat = np.ones((K_pad, W))
         steps_a = np.zeros((K_pad, W), np.int64)
         steps_b = np.zeros((K_pad, W), np.int64)
         active_list: List[List[int]] = []
@@ -648,6 +676,24 @@ def run_sync_fused(sim, env):
                     rnd, len(active_ws),
                     int(ev.dropped.sum()), int(ev.joined.sum()),
                 ))
+            # crash recovery rides the scan: a 1.0 in recov[j, w] zeroes the
+            # worker's momentum/DGC-residual rows at the top of round j's
+            # scan step — the in-scan mirror of the lazy loop's host-side
+            # zero_momentum_rows/residual reset.  Applies on skip rounds too
+            # (the lazy loop does its recovery bookkeeping before skipping).
+            if ev.recovered is not None:
+                recov[j] = ev.recovered.astype(np.float32)
+            if (scen is not None and scen.cfg.faults is not None
+                    and scen.cfg.faults.drift is not None):
+                drmat[j] = scen.drift_mults(rnd)
+            if ev.skip:
+                # degraded-floor round: rides the scan as a dead round
+                # (real=False, all-zero valid/submitters → the global carry
+                # passes through untouched).  The lazy skip branch draws no
+                # plans/jitter and resets no pending rates, so neither does
+                # this one: zero env.rng draws either way.
+                prune_now_rounds.append(np.zeros(W, bool))
+                continue
             pa: List[Optional[np.ndarray]] = [None] * W
             pb: List[Optional[np.ndarray]] = [None] * W
             pn = np.zeros(W, bool)
@@ -711,6 +757,7 @@ def run_sync_fused(sim, env):
             "real": jnp.asarray(real),
             "weights": jnp.asarray(weights),
             "submitters": jnp.asarray(submit_m),
+            "recov": jnp.asarray(recov),
         }
         if pad_b > 0:
             per_round["plan_b"] = jnp.asarray(plans_b.astype(np.int32))
@@ -744,6 +791,18 @@ def run_sync_fused(sim, env):
             ev = plan_all.events[rnd - 1]
             active_ws = active_list[j]
             pn = prune_now_rounds[j]
+            if ev.skip:
+                # degraded floor: the global is untouched (dead scan round),
+                # the virtual clock waits out the straggler deadline, no
+                # update times land.  Evals still fire — glob_seq[j] is the
+                # pass-through carry, identical to the lazy skip branch's
+                # unchanged global_params.
+                clock += _skip_round_time(env, scen, indices, rnd)
+                upd_times.append([float("nan")] * W)
+                if rnd % sim.eval_every == 0:
+                    g_j = {k: v[j] for k, v in glob_seq_np.items()}
+                    acc_time.append((clock, _env_accuracy(env, g_j)))
+                continue
             for w in active_ws:     # ledger phase A at the pre-prune index
                 env.account_train(indices[w], int(steps_a[j, w]))
             for w in active_ws:
@@ -766,8 +825,11 @@ def run_sync_fused(sim, env):
                     pf = 1.25 * float(kept_np[j, w]) / max(
                         float(total_np[j, w]), 1.0
                     )
+                # jitter x drift multiplied HERE (one float product) so the
+                # value is bit-identical to the lazy path's
+                # phi_from_cost(..., jmult * time_mult)
                 phi_w = env.phi_from_cost(
-                    w, bytes_w, flops_w, pf, jitters[j, w]
+                    w, bytes_w, flops_w, pf, jitters[j, w] * drmat[j, w]
                 )
                 phis[w] = phi_w
                 interval_phis[w].append(phi_w)
@@ -788,8 +850,12 @@ def run_sync_fused(sim, env):
         global_params = {k: np.array(v[n - 1]) for k, v in glob_seq_np.items()}
         t += n
 
-        # ---- learning event at the chunk boundary (host Newton math) -----
-        if adapt and t % sim.prune_interval == 0:
+        # ---- learning event at the chunk boundary (host Newton math).
+        # Drift-change rounds always cut their chunk (see the extent rule),
+        # so a drift-triggered re-learning fires HERE, exactly one round
+        # after the capability changed — same timing as the lazy loop.
+        drift_now = scen is not None and scen.drift_changed(t)
+        if adapt and (t % sim.prune_interval == 0 or drift_now):
             t0 = _time.perf_counter()
             prune_round_count += 1
             if cig_scores is None and sim.importance == "cig_bnscalor":
@@ -797,10 +863,15 @@ def run_sync_fused(sim, env):
                     unit_counts=env.space.unit_counts,
                     scales=extract_bn_scales(global_params, sim.cnn),
                 ))
+            if drift_now:
+                histories[sim.scenario.faults.drift.worker].invalidate()
+            mults = scen.drift_mults(t) if scen is not None else np.ones(W)
             gammas_now = [retention(indices[w], env.space) for w in range(W)]
             phis_now = [
                 float(np.mean(interval_phis[w])) if interval_phis[w]
-                else env.phi_from_index(w, indices[w], jitter=False)
+                else env.phi_from_index(
+                    w, indices[w], jitter=False, time_mult=float(mults[w])
+                )
                 for w in range(W)
             ]
             for w in range(W):
@@ -833,6 +904,7 @@ def run_sync_fused(sim, env):
         flops_per_image_final=float(np.mean([c[0] for c in final_costs])),
         blocks_per_image_final=float(np.mean([c[2] for c in final_costs])),
         prune_events=prune_events, fused_chunks=fused_chunks,
+        fault_ledger=fault_ledger(plan_all.events),
     )
 
 
@@ -1014,7 +1086,8 @@ def run_async_fused(sim, env, scen, participants, plan):
                          ),
                          flops_per_image_final=final_cost[0],
                          blocks_per_image_final=final_cost[2],
-                         fused_chunks=0)
+                         fused_chunks=0,
+                         fault_ledger=plan.fault_ledger)
 
     shard_x, shard_y = zip(*(env.shard_xy(w) for w in range(W)))
     state = env.fleet.init_state(env.base_params, list(shard_x), list(shard_y))
@@ -1169,4 +1242,5 @@ def run_async_fused(sim, env, scen, participants, plan):
                      scenario_rounds=scen_rows,
                      flops_per_image_final=final_cost[0],
                      blocks_per_image_final=final_cost[2],
-                     fused_chunks=fused_chunks)
+                     fused_chunks=fused_chunks,
+                     fault_ledger=plan.fault_ledger)

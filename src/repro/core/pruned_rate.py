@@ -66,6 +66,15 @@ class WorkerHistory:
         # as "pruned before" once it has >=2 distinct retention levels.
         return len({round(g, 12) for g in self.gammas}) >= 2
 
+    def invalidate(self) -> None:
+        """Drop the history: the worker's capability changed (fault-injection
+        capability drift), so every recorded (gamma, phi) pair describes a
+        machine that no longer exists.  The next ``learn_pruned_rates`` call
+        re-enters Alg. 2 through the bootstrap path, exactly as if the
+        worker had never been profiled."""
+        self.gammas.clear()
+        self.phis.clear()
+
 
 def newton_divided_differences(xs: Sequence[float], ys: Sequence[float]) -> np.ndarray:
     """Return Newton divided-difference coefficients c_0..c_n for nodes xs.

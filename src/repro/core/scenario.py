@@ -63,8 +63,11 @@ from typing import Dict, List, Optional, Sequence
 
 import numpy as np
 
+from .faults import FaultConfig
+
 __all__ = [
     "AsyncEventPlan",
+    "FaultConfig",
     "ScenarioConfig",
     "RoundEvents",
     "ScenarioEngine",
@@ -95,15 +98,30 @@ def shard_cohorts(
 
 @dataclasses.dataclass
 class RoundEvents:
-    """One round's participation outcome over the fixed worker slots."""
+    """One round's participation outcome over the fixed worker slots.
+
+    The fault fields default to ``None``/``False`` and stay that way on a
+    fault-free run, so pre-feature three-field constructions (tests,
+    scripted schedules) and the fault-free fast path are untouched."""
 
     active: np.ndarray    # bool [W]: sampled to train this round
     dropped: np.ndarray   # bool [W]: subset of active that never reports
     joined: np.ndarray    # bool [W]: slot churned at round start (fresh worker)
+    # --- fault overlay (core.faults), None/False when faults are off ---
+    offline: Optional[np.ndarray] = None    # bool [W]: crashed / region dark
+    recovered: Optional[np.ndarray] = None  # bool [W]: back online this round
+    recovering: Optional[np.ndarray] = None  # bool [W]: re-joining, no aggreg.
+    drift_mult: Optional[np.ndarray] = None  # f64 [W]: update-time multiplier
+    skip: bool = False          # round skipped: submitters < min_participants
+    degraded: bool = False      # aggregated a fault-reduced partial cohort
+    drift_changed: bool = False  # drift multiplier changed at this round
 
     @property
     def submitters(self) -> np.ndarray:
-        return self.active & ~self.dropped
+        sub = self.active & ~self.dropped
+        if self.recovering is not None:
+            sub = sub & ~self.recovering
+        return sub
 
 
 def full_participation(num_workers: int) -> RoundEvents:
@@ -122,6 +140,10 @@ class ScenarioConfig:
     seed: int = 0
     # explicit per-round events (tests / reproducible sweeps); overrides draws
     schedule: Optional[Sequence[RoundEvents]] = None
+    # scripted fault world (core.faults): capability drift, crash/recovery,
+    # regional outages, participation waves.  None => pre-feature behavior,
+    # bit for bit (zero extra RNG draws on any stream).
+    faults: Optional[FaultConfig] = None
 
 
 class ScenarioEngine:
@@ -140,9 +162,40 @@ class ScenarioEngine:
             raise ValueError(f"churn {cfg.churn} outside [0, 1)")
         if cfg.min_participants < 1:
             raise ValueError(f"min_participants {cfg.min_participants} must be >= 1")
+        if cfg.timeout_factor < 1.0:
+            raise ValueError(
+                f"timeout_factor {cfg.timeout_factor} must be >= 1.0: the "
+                "straggler deadline is a multiplier on the slowest received "
+                "update, and a factor below 1 would end the round before "
+                "its own submitters finish"
+            )
+        if cfg.faults is not None:
+            if cfg.faults.drift is not None and cfg.faults.drift.worker >= num_workers:
+                raise ValueError(
+                    f"drift worker {cfg.faults.drift.worker} outside the "
+                    f"{num_workers}-slot pool"
+                )
+            if cfg.faults.outage is not None and cfg.faults.outage.slot_hi > num_workers:
+                raise ValueError(
+                    f"outage slots [{cfg.faults.outage.slot_lo}, "
+                    f"{cfg.faults.outage.slot_hi}) outside the "
+                    f"{num_workers}-slot pool"
+                )
         self.cfg = cfg
         self.W = num_workers
         self.rng = np.random.default_rng(cfg.seed + 9173)
+        # Dedicated fault stream: crash draws come from here (one [W] vector
+        # per round, round order), NEVER from self.rng — so enabling faults
+        # does not perturb the sampling/dropout/churn stream, and a
+        # fault-free run consumes zero draws from either stream for faults.
+        self.fault_rng = np.random.default_rng(cfg.seed + 40961)
+        self._faults_on = cfg.faults is not None and cfg.faults.any_active
+        # crash/outage state machine: worker w is offline while
+        # round < _offline_until[w], then re-joining (trains, refetches, not
+        # aggregated) while round < _recover_until[w].
+        self._offline_until = np.zeros(num_workers, dtype=np.int64)
+        self._recover_until = np.zeros(num_workers, dtype=np.int64)
+        self._prev_offline = np.zeros(num_workers, dtype=bool)
 
     def draw(self, round_t: int) -> RoundEvents:
         """Events for 1-based round ``round_t``."""
@@ -163,24 +216,104 @@ class ScenarioEngine:
                     # same invariant as the random path: the timeout never
                     # starves the round of all submitters
                     ev.dropped[np.flatnonzero(ev.active)[0]] = False
-                return ev
-            return full_participation(W)
-        joined = self.rng.random(W) < cfg.churn
-        k = self.cohort_size()
-        active = np.zeros(W, dtype=bool)
-        active[self.rng.choice(W, size=k, replace=False)] = True
-        dropped = active & (self.rng.random(W) < cfg.dropout)
-        if dropped.all() or not (active & ~dropped).any():
-            # straggler timeout never starves the round: keep one submitter
-            dropped[np.flatnonzero(active)[0]] = False
-        return RoundEvents(active=active, dropped=dropped, joined=joined)
+            else:
+                ev = full_participation(W)
+        else:
+            joined = self.rng.random(W) < cfg.churn
+            k = self.cohort_size(round_t)
+            active = np.zeros(W, dtype=bool)
+            active[self.rng.choice(W, size=k, replace=False)] = True
+            dropped = active & (self.rng.random(W) < cfg.dropout)
+            if dropped.all() or not (active & ~dropped).any():
+                # straggler timeout never starves the round: keep one submitter
+                dropped[np.flatnonzero(active)[0]] = False
+            ev = RoundEvents(active=active, dropped=dropped, joined=joined)
+        if self._faults_on:
+            ev = self._apply_faults(round_t, ev)
+        return ev
 
-    def cohort_size(self) -> int:
+    def _apply_faults(self, round_t: int, ev: RoundEvents) -> RoundEvents:
+        """Overlay the scripted fault world onto one round's base draw.
+
+        Runs AFTER the base draw so the sampling/dropout/churn stream is
+        byte-identical with or without faults; the only stochastic family
+        (crash) draws one [W] vector per round from the dedicated
+        ``fault_rng``.  The fault state machine advances here — ``draw``
+        must be called once per round in order (both the lazy loop and
+        ``draw_all`` do)."""
+        faults = self.cfg.faults
+        base_active = ev.active.copy()
+        outage_now = np.zeros(self.W, dtype=bool)
+        if faults.outage is not None and faults.outage.covers(round_t):
+            outage_now[faults.outage.slot_lo:faults.outage.slot_hi] = True
+        if faults.crash is not None:
+            crash_now = self.fault_rng.random(self.W) < faults.crash.rate
+            # only currently-online workers can crash (a dark region or an
+            # already-crashed worker has nothing left to lose this round)
+            crash_now &= (round_t >= self._offline_until) & ~outage_now
+            hit = np.flatnonzero(crash_now)
+            self._offline_until[hit] = round_t + faults.crash.outage_rounds
+            self._recover_until[hit] = (
+                self._offline_until[hit] + faults.crash.recovery_rounds
+            )
+        offline = (round_t < self._offline_until) | outage_now
+        recovered = ~offline & self._prev_offline
+        recovering = ~offline & (round_t < self._recover_until)
+        self._prev_offline = offline
+        ev.offline = offline
+        ev.recovered = recovered
+        ev.recovering = recovering
+        ev.active = ev.active & ~offline
+        ev.dropped = ev.dropped & ev.active
+        ev.joined = ev.joined & ~offline
+        if faults.drift is not None:
+            ev.drift_mult = self.drift_mults(round_t)
+            ev.drift_changed = self.drift_changed(round_t)
+        n_sub = int(ev.submitters.sum())
+        if n_sub < self.cfg.min_participants:
+            # graceful degradation floor: too few survivors to aggregate —
+            # skip the round (virtual clock still advances, global untouched)
+            ev.skip = True
+        else:
+            ev.degraded = bool(
+                (base_active & offline).any() or (ev.active & recovering).any()
+            )
+        return ev
+
+    def drift_mults(self, round_t: int) -> np.ndarray:
+        """Per-worker update-time multipliers in force at ``round_t``.
+
+        Pure in ``round_t`` (no state, no RNG) so the fused engine's
+        chunk-boundary scan can probe future rounds without perturbing the
+        stream."""
+        mults = np.ones(self.W, dtype=np.float64)
+        drift = self.cfg.faults.drift if self.cfg.faults is not None else None
+        if drift is not None:
+            mults[drift.worker] = drift.mult_at(round_t)
+        return mults
+
+    def drift_changed(self, round_t: int) -> bool:
+        """True when the drift multiplier changes AT ``round_t`` — the
+        trigger for prune-rate re-learning (re-enter Alg. 2)."""
+        drift = self.cfg.faults.drift if self.cfg.faults is not None else None
+        if drift is None or round_t < 1:
+            return False
+        return drift.mult_at(round_t) != drift.mult_at(round_t - 1)
+
+    def cohort_size(self, round_t: Optional[int] = None) -> int:
         """Sampled cohort size: ``clip(round(C * W), min_participants, W)`` —
         the ONE formula behind both the sync per-round draw and the async
-        static cohort, so the two can't diverge."""
+        static cohort, so the two can't diverge.  With a diurnal wave fault
+        and a round index, C becomes the time-varying C(t)."""
         cfg = self.cfg
-        return int(np.clip(round(cfg.participation * self.W),
+        part = cfg.participation
+        if (
+            round_t is not None
+            and cfg.faults is not None
+            and cfg.faults.wave is not None
+        ):
+            part = min(part * cfg.faults.wave.factor_at(round_t), 1.0)
+        return int(np.clip(round(part * self.W),
                            cfg.min_participants, self.W))
 
     def static_participants(self) -> np.ndarray:
@@ -285,6 +418,9 @@ class AsyncEventPlan:
     clocks: np.ndarray         # f64 [E]: running-max virtual clock
     batch_starts: np.ndarray   # int64 [B+1]: window-batch event offsets
     plans: List[np.ndarray]    # per-event batch plans, env.rng draw order
+    # crash-fault accounting baked at plan time (None when faults are off);
+    # both async engines surface it verbatim, so ledgers cannot diverge
+    fault_ledger: Optional[Dict[str, int]] = None
 
     @property
     def num_events(self) -> int:

@@ -137,6 +137,7 @@ from .masks import (
     retention,
     similarity,
 )
+from .faults import fault_ledger
 from .pruned_rate import PrunedRateConfig, WorkerHistory, learn_pruned_rates
 from .scenario import (
     AsyncEventPlan,
@@ -334,6 +335,14 @@ class SimResult:
     prune_events: List[Tuple[int, int, Dict[str, tuple]]] = dataclasses.field(
         default_factory=list
     )
+    # fault-injection ledger (core.faults.fault_ledger): all zeros on
+    # fault-free runs; identical across engines under the same fault stream
+    # since every engine derives it from the one shared event sequence
+    drift_events: int = 0        # drift-multiplier changes (re-learning triggers)
+    rounds_degraded: int = 0     # rounds aggregating a fault-reduced cohort
+    rounds_skipped: int = 0      # rounds skipped: submitters < min_participants
+    workers_recovered: int = 0   # offline->online transitions
+    retry_total: int = 0         # re-join rounds trained without aggregation
     # final global model (base coordinates) — test/analysis hook
     global_params: Optional[Dict[str, np.ndarray]] = None
 
@@ -474,7 +483,8 @@ class _Env:
         )
 
     def phi_from_index(
-        self, worker: int, index, payload_factor: float = 1.0, jitter: bool = True
+        self, worker: int, index, payload_factor: float = 1.0, jitter: bool = True,
+        time_mult: float = 1.0,
     ) -> float:
         """Channel-model time from the global index alone — the resident
         engine's path: payload bytes and FLOPs derive from the reconfigured
@@ -484,9 +494,12 @@ class _Env:
             subparam_shapes(index, self.unit_map, self.base_shapes),
             payload_factor,
             jitter,
+            time_mult,
         )
 
-    def _phi_from_shapes(self, worker, shapes, payload_factor, jitter=True) -> float:
+    def _phi_from_shapes(
+        self, worker, shapes, payload_factor, jitter=True, time_mult=1.0
+    ) -> float:
         sim = self.sim
         bytes_raw = sum(int(np.prod(s)) * 4 for s in shapes.values())
         flops_w = cnn_flops_from_shapes(shapes, sim.cnn)
@@ -494,7 +507,12 @@ class _Env:
             float(np.exp(self.rng.normal(0, sim.time_jitter)))
             if jitter and sim.time_jitter > 0 else 1.0
         )
-        return self.phi_from_cost(worker, bytes_raw, flops_w, payload_factor, jmult)
+        # capability drift folds into the same multiplicative slot as the
+        # jitter, so the fused path (which pre-draws jitters and multiplies
+        # the drift curve in on host) reproduces the product bit for bit
+        return self.phi_from_cost(
+            worker, bytes_raw, flops_w, payload_factor, jmult * time_mult
+        )
 
     def phi_from_cost(
         self, worker: int, bytes_raw: int, flops_w: float,
@@ -727,6 +745,20 @@ def _regrow_step(
     return out
 
 
+def _skip_round_time(env: _Env, scen: ScenarioEngine, indices, round_t: int) -> float:
+    """Virtual-clock advance for a SKIPPED round (too few fault survivors to
+    aggregate): the server waits out the full straggler deadline —
+    ``timeout_factor`` x the slowest nominal update time at the current
+    sub-models — then moves on.  Jitter-free and RNG-free, so the lazy and
+    fused engines advance identical clocks without consuming any stream."""
+    mults = scen.drift_mults(round_t)
+    phis = [
+        env.phi_from_index(w, indices[w], jitter=False, time_mult=float(mults[w]))
+        for w in range(len(indices))
+    ]
+    return scen.cfg.timeout_factor * max(phis)
+
+
 def _run_sync(sim: SimConfig, env: _Env) -> SimResult:
     W = sim.num_workers
     sparse = sim.method in ("fedavg_s", "adaptcl")
@@ -778,12 +810,51 @@ def _run_sync(sim: SimConfig, env: _Env) -> SimResult:
     server_overhead = 0.0
     acc_time, het_traj, sim_traj, upd_times = [], [], [], []
     scen_rows: List[Tuple[int, int, int, int]] = []
+    events_log: List = []
     acc0 = _env_accuracy(env, global_params)
     acc_time.append((0.0, acc0))
     rt_base = roundtrip_total()    # host extract/embed round-trips in the loop
 
+    def _learn_rates(t: int, drift_trigger: bool):
+        """One Alg. 2 server step (pruning-interval boundary OR a capability
+        drift event).  Drift re-learning invalidates the drifted worker's
+        (gamma, phi) history first — those pairs describe a capability that
+        no longer exists — so it re-enters through the bootstrap path."""
+        nonlocal prune_round_count, cig_scores, pending_rates, interval_phis
+        prune_round_count += 1
+        if cig_scores is None and sim.importance == "cig_bnscalor":
+            cig_scores = METHODS["cig_bnscalor"](ImportanceContext(
+                unit_counts=env.space.unit_counts,
+                scales=extract_bn_scales(global_params, sim.cnn),
+            ))
+        if drift_trigger:
+            histories[sim.scenario.faults.drift.worker].invalidate()
+        mults = scen.drift_mults(t) if scen is not None else np.ones(W)
+        gammas_now = [retention(indices[w], env.space) for w in range(W)]
+        phis_now = [
+            float(np.mean(interval_phis[w])) if interval_phis[w]
+            else env.phi_from_index(
+                w, indices[w], jitter=False, time_mult=float(mults[w])
+            )
+            for w in range(W)
+        ]
+        for w in range(W):
+            histories[w].record(gammas_now[w], phis_now[w])
+        if sim.fixed_pruned_rates is not None:
+            k = prune_round_count - 1
+            rates = (
+                sim.fixed_pruned_rates[k]
+                if k < len(sim.fixed_pruned_rates)
+                else [0.0] * W
+            )
+        else:
+            rates = learn_pruned_rates(histories, gammas_now, phis_now, sim.rate_cfg)
+        pending_rates = list(rates)
+        interval_phis = [[] for _ in range(W)]
+
     for t in range(1, sim.rounds + 1):
         events = scen.draw(t) if scen is not None else full_participation(W)
+        events_log.append(events)
         # --- churn: replaced slots restart as fresh full-model workers.
         if events.joined.any():
             for w in np.flatnonzero(events.joined):
@@ -809,6 +880,19 @@ def _run_sync(sim: SimConfig, env: _Env) -> SimResult:
                         }
             if resident:
                 env.fleet.refresh_masks(state, indices)
+        # --- crash recovery: a returning worker refetches the current global
+        # (the ordinary broadcast-back covers that) and re-enters with its
+        # LAST mask and history, but velocity/residuals accumulated against
+        # pre-crash parameters restart at zero.
+        if events.recovered is not None and events.recovered.any():
+            rec_ws = [int(w) for w in np.flatnonzero(events.recovered)]
+            for w in rec_ws:
+                dgc_residuals[w] = {}
+                if dgc_res_stack is not None:
+                    for k in dgc_res_stack:
+                        dgc_res_stack[k][w] = 0.0
+            if resident and sim.resident_momentum:
+                env.fleet.zero_momentum_rows(state, rec_ws)
         active_ws = [int(w) for w in np.flatnonzero(events.active)]
         if scen is not None:
             scen_rows.append((
@@ -827,6 +911,23 @@ def _run_sync(sim: SimConfig, env: _Env) -> SimResult:
                 ))
             if resident and regrown:
                 env.fleet.refresh_masks(state, indices)
+
+        # --- graceful degradation floor: too few fault survivors to
+        # aggregate.  Nothing trains, the global is untouched, and the
+        # virtual clock waits out the straggler deadline — then the round
+        # ends (no hang, no exception).  Server-side steps that do not need
+        # submissions (Alg. 2 at an interval boundary, evals) still run, so
+        # the fused engine's chunk boundaries see the same state.
+        if events.skip:
+            clock += _skip_round_time(env, scen, indices, t)
+            upd_times.append([float("nan")] * W)
+            t0 = _time.perf_counter()
+            if adapt and (t % sim.prune_interval == 0 or events.drift_changed):
+                _learn_rates(t, events.drift_changed)
+            server_overhead += _time.perf_counter() - t0
+            if t % sim.eval_every == 0:
+                acc_time.append((clock, _env_accuracy(env, global_params)))
+            continue
 
         # --- batch plans, drawn in worker order up front so the batch
         # sequences (and therefore the trained models) are identical across
@@ -951,13 +1052,17 @@ def _run_sync(sim: SimConfig, env: _Env) -> SimResult:
                 worker_params[w] = {k: received[k] + committed_w[k] for k in delta}
 
         phis = np.full(W, np.nan)
+        dm = events.drift_mult
         for w in active_ws:
             pf = float(payload[w]) if submitters[w] else 1.0
             if resident:
                 shapes_w = subparam_shapes(indices[w], env.unit_map, env.base_shapes)
             else:
                 shapes_w = {k: v.shape for k, v in worker_params[w].items()}
-            phi_w = env._phi_from_shapes(w, shapes_w, pf)
+            phi_w = env._phi_from_shapes(
+                w, shapes_w, pf,
+                time_mult=float(dm[w]) if dm is not None else 1.0,
+            )
             phis[w] = phi_w
             interval_phis[w].append(phi_w)
             if submitters[w]:
@@ -1001,32 +1106,8 @@ def _run_sync(sim: SimConfig, env: _Env) -> SimResult:
                 )
         global_params = {k: v.astype(np.float32) for k, v in global_params.items()}
 
-        if adapt and t % sim.prune_interval == 0:
-            prune_round_count += 1
-            if cig_scores is None and sim.importance == "cig_bnscalor":
-                cig_scores = METHODS["cig_bnscalor"](ImportanceContext(
-                    unit_counts=env.space.unit_counts,
-                    scales=extract_bn_scales(global_params, sim.cnn),
-                ))
-            gammas_now = [retention(indices[w], env.space) for w in range(W)]
-            phis_now = [
-                float(np.mean(interval_phis[w])) if interval_phis[w]
-                else env.phi_from_index(w, indices[w], jitter=False)
-                for w in range(W)
-            ]
-            for w in range(W):
-                histories[w].record(gammas_now[w], phis_now[w])
-            if sim.fixed_pruned_rates is not None:
-                k = prune_round_count - 1
-                rates = (
-                    sim.fixed_pruned_rates[k]
-                    if k < len(sim.fixed_pruned_rates)
-                    else [0.0] * W
-                )
-            else:
-                rates = learn_pruned_rates(histories, gammas_now, phis_now, sim.rate_cfg)
-            pending_rates = list(rates)
-            interval_phis = [[] for _ in range(W)]
+        if adapt and (t % sim.prune_interval == 0 or events.drift_changed):
+            _learn_rates(t, events.drift_changed)
         server_overhead += _time.perf_counter() - t0
 
         if t % sim.eval_every == 0:
@@ -1042,7 +1123,8 @@ def _run_sync(sim: SimConfig, env: _Env) -> SimResult:
                      scenario_rounds=scen_rows,
                      flops_per_image_final=float(np.mean([c[0] for c in final_costs])),
                      blocks_per_image_final=float(np.mean([c[2] for c in final_costs])),
-                     prune_events=prune_events)
+                     prune_events=prune_events,
+                     fault_ledger=fault_ledger(events_log))
 
 
 def _scores_for(sim: SimConfig, env: _Env, worker, prune_round, params_w, index_w,
@@ -1104,6 +1186,18 @@ def _plan_async_events(
     idx = full_index(env.space)
     n_part = len(participants)
     drop_p = scen.cfg.dropout if scen is not None else 0.0
+    # crash/recovery faults under async: one dedicated fault_rng draw per
+    # popped commit in pop order (ONLY when crash is enabled, mirroring the
+    # dropout stream discipline).  A crashed worker's commit still lands —
+    # the crash takes it dark AFTER reporting — and its next schedule is
+    # delayed by ``outage_rounds`` nominal (jitter-free) update times, so it
+    # returns against a bumped server version with naturally larger
+    # staleness.  No extra env.rng draws, so fault-free plans are untouched.
+    crash = (
+        scen.cfg.faults.crash
+        if scen is not None and scen.cfg.faults is not None else None
+    )
+    n_crashes = 0
 
     fetched_ver = np.zeros(W, np.int64)
     rounds_done = np.zeros(W, np.int64)
@@ -1155,7 +1249,13 @@ def _plan_async_events(
             [bool(scen.rng.random() < drop_p) for _ in batch]
             if drop_p > 0.0 else [False] * len(batch)
         )
-        for (finish, w), plan, drop in zip(batch, batch_plans, drops):
+        crashes = (
+            [bool(scen.fault_rng.random() < crash.rate) for _ in batch]
+            if crash is not None else [False] * len(batch)
+        )
+        for (finish, w), plan, drop, crashed in zip(
+            batch, batch_plans, drops, crashes
+        ):
             clock = max(clock, finish)
             s = int(version - fetched_ver[w])
             if not drop:
@@ -1165,12 +1265,18 @@ def _plan_async_events(
             ref = np.zeros(W, bool)
             ref[w] = True
             fetched_ver[w] = version
+            delay = 0.0
+            if crashed:
+                n_crashes += 1
+                delay = crash.outage_rounds * env.phi_from_index(
+                    w, idx, jitter=False
+                )
             if method == "ssp_s" and rounds_done[w] >= int(
                 rounds_done[participants].min()
             ) + sim.ssp_threshold:
                 blocked.append(w)
             elif rounds_done[w] < sim.rounds:
-                schedule(w, clock)
+                schedule(w, clock + delay)
             if method == "ssp_s" and blocked:
                 min_done = int(rounds_done[participants].min())
                 still = []
@@ -1207,6 +1313,11 @@ def _plan_async_events(
         clocks=np.asarray(clocks, np.float64),
         batch_starts=np.asarray(batch_starts, np.int64),
         plans=plans,
+        fault_ledger=(
+            dict(drift_events=0, rounds_degraded=0, rounds_skipped=0,
+                 workers_recovered=n_crashes, retry_total=n_crashes)
+            if crash is not None else None
+        ),
     )
 
 
@@ -1236,6 +1347,29 @@ def _run_async(sim: SimConfig, env: _Env) -> SimResult:
             "resets host bookkeeping the event queue does not model; churn "
             "applies to the synchronous methods only"
         )
+    if scen is not None and scen.cfg.faults is not None:
+        f = scen.cfg.faults
+        if f.outage is not None:
+            raise ValueError(
+                "async schedulers reject the outage fault family — a "
+                "coordinated regional blackout is a synchronous-round "
+                "concept (outage is sync-only for now); crash/recovery "
+                "faults are supported under the async schedulers"
+            )
+        if f.drift is not None:
+            raise ValueError(
+                "async schedulers reject the drift fault family — "
+                "capability drift exists to trigger prune-rate re-learning "
+                "and async workers never prune; drift applies to the "
+                "synchronous methods only"
+            )
+        if f.wave is not None:
+            raise ValueError(
+                "async schedulers reject the wave fault family — async "
+                "client sampling is a static cohort drawn once at run "
+                "start, not a per-round C(t); wave applies to the "
+                "synchronous methods only"
+            )
     participants = (
         scen.static_participants() if scen is not None else np.arange(W)
     )
@@ -1349,7 +1483,8 @@ def _run_async(sim: SimConfig, env: _Env) -> SimResult:
                      host_roundtrips=host_roundtrips,
                      scenario_rounds=scen_rows,
                      flops_per_image_final=final_cost[0],
-                     blocks_per_image_final=final_cost[2])
+                     blocks_per_image_final=final_cost[2],
+                     fault_ledger=plan.fault_ledger)
 
 
 def _finalize(sim, env, acc_time, het_traj, sim_traj, upd_times, retentions,
@@ -1357,7 +1492,7 @@ def _finalize(sim, env, acc_time, het_traj, sim_traj, upd_times, retentions,
               global_params=None, host_roundtrips=0,
               scenario_rounds=None, flops_per_image_final=0.0,
               blocks_per_image_final=0.0, prune_events=None,
-              fused_chunks=0) -> SimResult:
+              fused_chunks=0, fault_ledger=None) -> SimResult:
     accs = np.array([a for _, a in acc_time])
     times = np.array([t for t, _ in acc_time])
     best = int(np.argmax(accs))
@@ -1397,6 +1532,7 @@ def _finalize(sim, env, acc_time, het_traj, sim_traj, upd_times, retentions,
         shard_spec=shard_spec,
         prune_events=prune_events or [],
         scenario_rounds=scenario_rounds or [],
+        **(fault_ledger or {}),
         bucket_sizes=sorted(env.fleet.buckets_used),
         compute=sim.compute,
         flops_executed=env.flops_executed,

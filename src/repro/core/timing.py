@@ -28,11 +28,30 @@ import numpy as np
 
 __all__ = [
     "HeterogeneityConfig",
+    "drift_multiplier",
     "heterogeneity_from_times",
     "heterogeneity_closed_form",
     "make_bandwidths",
     "ChannelModel",
 ]
+
+
+def drift_multiplier(
+    round_t: int, start_round: int, factor: float, ramp_rounds: int = 1
+) -> float:
+    """Capability-drift update-time multiplier at 1-based round ``round_t``.
+
+    Before ``start_round`` the multiplier is 1; from
+    ``start_round + ramp_rounds - 1`` on it is ``factor``; a ramp
+    interpolates linearly in between (``ramp_rounds == 1`` is a jump).
+    Pure and deterministic — every engine computes the identical drift
+    curve without consuming any RNG stream."""
+    if round_t < start_round:
+        return 1.0
+    if ramp_rounds <= 1 or round_t >= start_round + ramp_rounds - 1:
+        return float(factor)
+    frac = (round_t - start_round + 1) / float(ramp_rounds)
+    return float(1.0 + (factor - 1.0) * frac)
 
 
 @dataclasses.dataclass(frozen=True)

@@ -1,0 +1,404 @@
+"""Fault-injection world model contracts (core.faults).
+
+Pins down:
+  * fault-free bit-identity — ``faults=None`` and an all-inactive
+    ``FaultConfig()`` produce byte-identical runs (prune events, update
+    times, virtual clocks, accuracy) because the fault overlay consumes
+    ZERO draws from any RNG stream when off;
+  * every fault family unfolds identically under sequential, masked and
+    fused engines: same ledgers, bit-identical clocks and prune indices,
+    accuracy within 1e-3;
+  * graceful degradation — a regional outage that starves
+    ``min_participants`` skips rounds (virtual clock advances, global
+    untouched, no hang, no exception) and survivors above the floor
+    aggregate a partial cohort;
+  * capability drift triggers Alg. 2 re-learning within one round of the
+    jump, through the bootstrap path (history invalidated);
+  * crash/recovery — returning workers re-enter with their last mask but
+    restart momentum/DGC residuals, and sit out ``recovery_rounds`` before
+    counting toward aggregation;
+  * async schedulers support crash/recovery and reject outage/drift/wave
+    by field name;
+  * fused dispatch economics hold under faults: chunks cut only at
+    drift boundaries (crash/outage/wave ride in-scan), recompiles <= 2.
+"""
+import numpy as np
+import pytest
+
+from repro.core.faults import (
+    CrashConfig,
+    DriftConfig,
+    FaultConfig,
+    OutageConfig,
+    WaveConfig,
+    fault_ledger,
+)
+from repro.core.scenario import ScenarioConfig, ScenarioEngine
+from repro.core.simulation import SimConfig, run_simulation
+from repro.core.timing import HeterogeneityConfig, drift_multiplier
+from repro.models.cnn import vgg_config
+
+TINY = vgg_config("vgg_tiny_flt", [8, "M", 16], num_classes=4, image_size=8)
+
+LEDGER_FIELDS = (
+    "drift_events", "rounds_degraded", "rounds_skipped",
+    "workers_recovered", "retry_total",
+)
+
+DRIFT = FaultConfig(drift=DriftConfig(worker=1, round=3, factor=3.0))
+CRASH = FaultConfig(crash=CrashConfig(rate=0.25, outage_rounds=2,
+                                      recovery_rounds=1))
+OUTAGE = FaultConfig(outage=OutageConfig(start=3, length=2,
+                                         slot_lo=0, slot_hi=3))
+WAVE = FaultConfig(wave=WaveConfig(amplitude=0.6, period=4))
+COMBINED = FaultConfig(
+    drift=DriftConfig(worker=0, round=3, factor=2.0, mode="ramp",
+                      ramp_rounds=3),
+    crash=CrashConfig(rate=0.15),
+    outage=OutageConfig(start=5, length=2, slot_lo=2, slot_hi=5),
+    wave=WaveConfig(amplitude=0.4, period=5),
+)
+
+
+def _sim(engine, **kw):
+    base = dict(
+        method="adaptcl",
+        engine=engine,
+        rounds=8,
+        prune_interval=2,
+        num_workers=5,
+        batch_size=16,
+        cnn=TINY,
+        het=HeterogeneityConfig(num_workers=5, sigma=3.0),
+        eval_every=2,
+        seed=5,
+    )
+    base.update(kw)
+    return run_simulation(SimConfig(**base))
+
+
+def _ledger(r):
+    return {f: getattr(r, f) for f in LEDGER_FIELDS}
+
+
+def _assert_engines_match(ref, other):
+    assert abs(ref.final_acc - other.final_acc) <= 1e-3
+    assert ref.prune_events == other.prune_events
+    assert ref.scenario_rounds == other.scenario_rounds
+    np.testing.assert_allclose(
+        np.array(ref.update_times), np.array(other.update_times),
+        rtol=0, atol=0, equal_nan=True,
+    )
+    assert ref.total_time == pytest.approx(other.total_time, abs=1e-9)
+    assert _ledger(ref) == _ledger(other)
+
+
+# ---------------------------------------------------------------------------
+# config validation
+# ---------------------------------------------------------------------------
+
+def test_fault_config_validation():
+    with pytest.raises(ValueError):
+        DriftConfig(factor=0.0)
+    with pytest.raises(ValueError):
+        DriftConfig(mode="teleport")
+    with pytest.raises(ValueError):
+        DriftConfig(mode="ramp", ramp_rounds=0)
+    with pytest.raises(ValueError):
+        CrashConfig(rate=1.0)
+    with pytest.raises(ValueError):
+        CrashConfig(outage_rounds=0)
+    with pytest.raises(ValueError):
+        CrashConfig(recovery_rounds=-1)
+    with pytest.raises(ValueError):
+        OutageConfig(start=1, length=0, slot_lo=0, slot_hi=1)
+    with pytest.raises(ValueError):
+        OutageConfig(start=1, length=1, slot_lo=2, slot_hi=2)
+    with pytest.raises(ValueError):
+        WaveConfig(amplitude=1.0)
+    with pytest.raises(ValueError):
+        WaveConfig(period=1)
+    # engine-level: fault targets must fit the worker pool
+    with pytest.raises(ValueError, match="drift worker"):
+        ScenarioEngine(ScenarioConfig(
+            faults=FaultConfig(drift=DriftConfig(worker=7))), 4)
+    with pytest.raises(ValueError, match="outage slots"):
+        ScenarioEngine(ScenarioConfig(
+            faults=FaultConfig(outage=OutageConfig(
+                start=1, length=1, slot_lo=0, slot_hi=9))), 4)
+    assert not FaultConfig().any_active
+    assert FaultConfig(wave=WaveConfig()).any_active
+
+
+def test_drift_multiplier_jump_and_ramp():
+    assert drift_multiplier(2, 3, 4.0) == 1.0
+    assert drift_multiplier(3, 3, 4.0) == 4.0
+    assert drift_multiplier(9, 3, 4.0) == 4.0
+    # ramp: linear from start_round to start_round + ramp_rounds - 1
+    ramp = [drift_multiplier(t, 3, 4.0, ramp_rounds=3) for t in (2, 3, 4, 5, 6)]
+    assert ramp == [1.0, 2.0, 3.0, 4.0, 4.0]
+    d = DriftConfig(worker=0, round=3, factor=4.0, mode="ramp", ramp_rounds=3)
+    assert [d.mult_at(t) for t in (2, 3, 4, 5)] == [1.0, 2.0, 3.0, 4.0]
+    j = DriftConfig(worker=0, round=3, factor=4.0, mode="jump", ramp_rounds=9)
+    assert j.mult_at(3) == 4.0                  # jump ignores ramp_rounds
+
+
+def test_outage_for_shard_aligns_with_mesh_layout():
+    # shard s of a W=8 fleet over 4 shards owns slots [2s, 2s+2)
+    o = OutageConfig.for_shard(start=2, length=3, shard=1,
+                               num_workers=8, num_shards=4)
+    assert (o.slot_lo, o.slot_hi) == (2, 4)
+    assert not o.covers(1) and o.covers(2) and o.covers(4) and not o.covers(5)
+
+
+# ---------------------------------------------------------------------------
+# fault-free bit-identity: the overlay is invisible when off
+# ---------------------------------------------------------------------------
+
+def test_inactive_faultconfig_is_bit_identical_to_none():
+    base = dict(participation=0.8, dropout=0.2, seed=2)
+    a = _sim("sequential", scenario=ScenarioConfig(**base))
+    b = _sim("sequential", scenario=ScenarioConfig(faults=FaultConfig(), **base))
+    assert a.final_acc == b.final_acc
+    assert a.total_time == b.total_time
+    assert a.prune_events == b.prune_events
+    np.testing.assert_array_equal(
+        np.array(a.update_times), np.array(b.update_times)
+    )
+    assert _ledger(b) == {f: 0 for f in LEDGER_FIELDS}
+
+
+def test_fault_stream_leaves_base_draws_untouched():
+    """Enabling faults must not perturb the sampling/dropout/churn stream:
+    crash draws come from a dedicated fault RNG, and drift/outage/wave are
+    deterministic — so the BASE masks match the fault-free run draw for
+    draw (the overlay only intersects them with the offline set)."""
+    cfg = dict(participation=0.8, dropout=0.3, churn=0.1, seed=7)
+    plain = ScenarioEngine(ScenarioConfig(**cfg), 6)
+    faulty = ScenarioEngine(ScenarioConfig(
+        faults=FaultConfig(crash=CrashConfig(rate=0.4, outage_rounds=1)),
+        **cfg), 6)
+    for t in range(1, 12):
+        ep, ef = plain.draw(t), faulty.draw(t)
+        on = ~ef.offline
+        np.testing.assert_array_equal(ep.active & on, ef.active)
+        np.testing.assert_array_equal(ep.joined & on, ef.joined)
+        assert not (ef.active & ef.offline).any()
+
+
+# ---------------------------------------------------------------------------
+# engine equivalence under every fault family
+# ---------------------------------------------------------------------------
+
+FAMILIES = {
+    "drift": dict(seed=3, faults=DRIFT),
+    "crash": dict(seed=3, faults=CRASH),
+    "outage": dict(seed=3, min_participants=4, faults=OUTAGE),
+    "wave": dict(seed=3, participation=0.7, faults=WAVE),
+    "combined": dict(seed=3, min_participants=4, participation=0.9,
+                     faults=COMBINED),
+}
+
+
+@pytest.mark.parametrize("family", ["drift", "outage"])
+def test_fault_families_engine_equivalent_quick(family):
+    scen = ScenarioConfig(**FAMILIES[family])
+    seq = _sim("sequential", scenario=scen)
+    fus = _sim("fused", scenario=scen)
+    _assert_engines_match(seq, fus)
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("family", sorted(FAMILIES))
+def test_fault_families_engine_equivalent(family):
+    scen = ScenarioConfig(**FAMILIES[family])
+    seq = _sim("sequential", scenario=scen)
+    res = _sim("masked", scenario=scen)
+    fus = _sim("fused", scenario=scen)
+    _assert_engines_match(seq, res)
+    _assert_engines_match(seq, fus)
+
+
+# ---------------------------------------------------------------------------
+# goldens: drift re-learning, degradation floor, crash/recovery
+# ---------------------------------------------------------------------------
+
+def test_drift_triggers_relearning_within_one_interval():
+    """Worker 1 slows 3x at round 3 — MID-interval under PI=2, where the
+    regular cadence learns at rounds 2/4/6 (pruning 3/5/7).  The drift
+    trigger re-runs Alg. 2 AT round 3 with worker 1's history invalidated,
+    so the drift run prunes worker 1 at round 4 — a round where the
+    fault-free run never prunes anyone."""
+    r = _sim("fused", scenario=ScenarioConfig(seed=3, faults=DRIFT))
+    assert r.drift_events == 1
+    assert r.rounds_skipped == 0
+    assert any(rnd == 4 and w == 1 for rnd, w, _ in r.prune_events), \
+        r.prune_events
+    no_fault = _sim("fused", scenario=ScenarioConfig(seed=3))
+    assert not any(rnd == 4 for rnd, _, _ in no_fault.prune_events), \
+        no_fault.prune_events
+
+
+def test_outage_below_floor_skips_and_advances():
+    """Slots 0-2 go dark for rounds 3-4 with min_participants=4: the two
+    rounds are skipped (global untouched, NaN update-time rows), the
+    virtual clock still advances through them, and the run completes."""
+    scen = ScenarioConfig(seed=3, min_participants=4, faults=OUTAGE)
+    r = _sim("sequential", scenario=scen)
+    assert r.rounds_skipped == 2
+    assert r.rounds_degraded == 0            # below-floor rounds never aggregate
+    ut = np.array(r.update_times)
+    assert np.isnan(ut[2]).all() and np.isnan(ut[3]).all()
+    assert not np.isnan(ut[4]).all()         # survivors resume after the window
+    # the skipped rounds still cost wall-clock: strictly fewer aggregations
+    # but a clock that moved past the straggler deadline both times
+    assert r.total_time > 0.0
+    assert r.workers_recovered == 3          # the dark region returns at once
+    assert len(r.scenario_rounds) == 8       # no round vanished from the log
+
+
+def test_outage_above_floor_degrades_gracefully():
+    """Same outage with min_participants=1: survivors aggregate a partial
+    cohort — rounds are degraded, not skipped."""
+    scen = ScenarioConfig(seed=3, min_participants=1, faults=OUTAGE)
+    r = _sim("sequential", scenario=scen)
+    assert r.rounds_skipped == 0
+    assert r.rounds_degraded >= 2
+    ut = np.array(r.update_times)
+    # dark slots show no update time; survivors do
+    assert np.isnan(ut[2, :3]).all() and np.isfinite(ut[2, 3:]).any()
+
+
+def test_crash_recovery_ledger_and_reentry():
+    r = _sim("sequential", scenario=ScenarioConfig(seed=3, faults=CRASH))
+    assert r.workers_recovered > 0
+    # every recovered worker sits out recovery_rounds=1 before aggregating
+    assert r.retry_total == r.workers_recovered
+    assert r.rounds_degraded > 0
+    assert r.rounds_skipped == 0             # min_participants=1 never starves
+
+
+def test_fault_ledger_pure_function():
+    eng = ScenarioEngine(ScenarioConfig(seed=3, min_participants=4,
+                                        faults=OUTAGE), 5)
+    events = [eng.draw(t) for t in range(1, 9)]
+    led = fault_ledger(events)
+    assert led["rounds_skipped"] == 2
+    assert led["workers_recovered"] == 3
+    # plain pre-feature events (no fault fields) ledger to all-zero
+    from repro.core.scenario import full_participation
+    assert fault_ledger([full_participation(4)]) == {
+        f: 0 for f in LEDGER_FIELDS
+    }
+
+
+# ---------------------------------------------------------------------------
+# fused dispatch economics under faults
+# ---------------------------------------------------------------------------
+
+def test_fused_chunks_cut_only_at_drift_boundaries():
+    # crash faults ride in-scan: same chunk count as the fault-free run
+    free = _sim("fused", scenario=ScenarioConfig(seed=3))
+    crash = _sim("fused", scenario=ScenarioConfig(seed=3, faults=CRASH))
+    assert crash.fused_chunks == free.fused_chunks
+    assert crash.recompiles <= 2
+    # a single jump adds at most one extra boundary
+    drift = _sim("fused", scenario=ScenarioConfig(seed=3, faults=DRIFT))
+    assert drift.fused_chunks <= free.fused_chunks + 1
+    assert drift.recompiles <= 2
+
+
+# ---------------------------------------------------------------------------
+# async: crash supported, outage/drift/wave rejected by name
+# ---------------------------------------------------------------------------
+
+def _async(engine, scen, method="fedasync_s"):
+    return run_simulation(SimConfig(
+        method=method, engine=engine, rounds=3, num_workers=5,
+        batch_size=16, cnn=TINY,
+        het=HeterogeneityConfig(num_workers=5, sigma=3.0),
+        eval_every=2, seed=5, scenario=scen,
+    ))
+
+
+def test_async_crash_engine_equivalent():
+    scen = ScenarioConfig(seed=3, faults=FaultConfig(
+        crash=CrashConfig(rate=0.3, outage_rounds=2)))
+    res = _async("masked", scen)
+    fus = _async("fused", scen)
+    assert res.total_time == fus.total_time
+    assert [t for t, _ in res.acc_time] == [t for t, _ in fus.acc_time]
+    assert _ledger(res) == _ledger(fus)
+    assert res.workers_recovered > 0
+    for k in res.global_params:
+        np.testing.assert_allclose(
+            np.asarray(res.global_params[k], np.float32),
+            np.asarray(fus.global_params[k], np.float32),
+            atol=1e-3, rtol=1e-5, err_msg=k,
+        )
+    # a crash delays the worker's next commit, so the run's virtual clock
+    # stretches past the crash-free one
+    free = _async("masked", ScenarioConfig(seed=3))
+    assert res.total_time > free.total_time
+
+
+def test_async_faultfree_bit_identical():
+    a = _async("masked", ScenarioConfig(seed=3))
+    b = _async("masked", ScenarioConfig(seed=3, faults=FaultConfig()))
+    assert a.final_acc == b.final_acc and a.total_time == b.total_time
+    assert _ledger(b) == {f: 0 for f in LEDGER_FIELDS}
+
+
+@pytest.mark.parametrize("method", ["fedasync_s", "ssp_s", "dcasgd_s"])
+def test_async_rejects_sync_only_families_by_name(method):
+    with pytest.raises(ValueError, match="outage") as exc:
+        _async("masked", ScenarioConfig(faults=OUTAGE), method=method)
+    assert "drift" not in str(exc.value) and "wave" not in str(exc.value)
+    with pytest.raises(ValueError, match="drift") as exc:
+        _async("masked", ScenarioConfig(faults=DRIFT), method=method)
+    assert "outage" not in str(exc.value) and "wave" not in str(exc.value)
+    with pytest.raises(ValueError, match="wave") as exc:
+        _async("masked", ScenarioConfig(faults=WAVE), method=method)
+    assert "outage" not in str(exc.value) and "drift" not in str(exc.value)
+
+
+# ---------------------------------------------------------------------------
+# mesh-sharded fleet: the same fault world on 1/2/4 devices
+# ---------------------------------------------------------------------------
+
+@pytest.mark.slow
+@pytest.mark.parametrize("n_dev", [1, 2, 4])
+def test_fault_world_identical_on_mesh(n_dev, eight_devices):
+    from repro.launch.mesh import make_fleet_mesh
+
+    scen = ScenarioConfig(seed=3, min_participants=3, faults=FaultConfig(
+        drift=DriftConfig(worker=0, round=3, factor=2.0, mode="ramp",
+                          ramp_rounds=3),
+        crash=CrashConfig(rate=0.15),
+        outage=OutageConfig(start=5, length=2, slot_lo=2, slot_hi=4),
+        wave=WaveConfig(amplitude=0.4, period=5),
+    ))
+    seq = _sim("sequential", scenario=scen, num_workers=4,
+               het=HeterogeneityConfig(num_workers=4, sigma=3.0))
+    shd = _sim("fused", scenario=scen, num_workers=4,
+               het=HeterogeneityConfig(num_workers=4, sigma=3.0),
+               mesh=make_fleet_mesh(n_dev))
+    _assert_engines_match(seq, shd)
+
+
+@pytest.mark.slow
+def test_shard_aligned_outage_on_mesh(eight_devices):
+    """OutageConfig.for_shard blacks out exactly one mesh shard's slots;
+    the surviving shards aggregate and the run matches the host engine."""
+    from repro.launch.mesh import make_fleet_mesh
+
+    out = OutageConfig.for_shard(start=3, length=2, shard=0,
+                                 num_workers=4, num_shards=2)
+    scen = ScenarioConfig(seed=3, faults=FaultConfig(outage=out))
+    seq = _sim("sequential", scenario=scen, num_workers=4,
+               het=HeterogeneityConfig(num_workers=4, sigma=3.0))
+    shd = _sim("fused", scenario=scen, num_workers=4,
+               het=HeterogeneityConfig(num_workers=4, sigma=3.0),
+               mesh=make_fleet_mesh(2))
+    _assert_engines_match(seq, shd)
+    assert seq.rounds_degraded >= 2

@@ -153,6 +153,62 @@ def test_scenario_stream_identical_across_engines(C, dropout, churn, W, seed):
     assert np.array_equal(a2.static_participants(), b2.static_participants())
 
 
+@settings(max_examples=25, deadline=None)
+@given(
+    crash_rate=st.floats(0.0, 0.8),
+    out_start=st.integers(1, 6),
+    out_len=st.integers(1, 3),
+    drift_round=st.integers(1, 8),
+    factor=st.floats(0.25, 5.0),
+    W=st.integers(2, 16),
+    minp=st.integers(1, 4),
+    seed=st.integers(0, 12),
+)
+def test_fault_stream_engine_independent(crash_rate, out_start, out_len,
+                                         drift_round, factor, W, minp, seed):
+    """The scripted fault world is a pure function of (config, W): two
+    independent engines replay the identical fault stream draw for draw —
+    which is why sequential/masked/fused (and any mesh) see the same
+    faults.  Invariants: offline workers never train or submit, a skipped
+    round has fewer submitters than the floor, recovered rounds follow
+    offline rounds, and the ledger is reproducible."""
+    from repro.core.faults import (
+        CrashConfig, DriftConfig, FaultConfig, OutageConfig, fault_ledger,
+    )
+
+    cfg = ScenarioConfig(
+        dropout=0.2, min_participants=min(minp, W), seed=seed,
+        faults=FaultConfig(
+            drift=DriftConfig(worker=W - 1, round=drift_round, factor=factor),
+            crash=CrashConfig(rate=crash_rate, outage_rounds=2,
+                              recovery_rounds=1),
+            outage=OutageConfig(start=out_start, length=out_len,
+                                slot_lo=0, slot_hi=max(1, W // 2)),
+        ),
+    )
+    a, b = ScenarioEngine(cfg, W), ScenarioEngine(cfg, W)
+    ea_all, eb_all, prev_off = [], [], np.zeros(W, bool)
+    for t in range(1, 10):
+        ea, eb = a.draw(t), b.draw(t)
+        eb_all.append(eb)
+        for f in ("active", "dropped", "joined", "offline", "recovered",
+                  "recovering"):
+            np.testing.assert_array_equal(getattr(ea, f), getattr(eb, f))
+        assert (ea.skip, ea.degraded, ea.drift_changed) == \
+            (eb.skip, eb.degraded, eb.drift_changed)
+        assert not (ea.active & ea.offline).any()
+        assert not (ea.submitters & ea.offline).any()
+        if ea.skip:
+            assert int(ea.submitters.sum()) < cfg.min_participants
+        assert not (ea.recovered & ~prev_off).any()
+        prev_off = ea.offline.copy()
+        ea_all.append(ea)
+    assert fault_ledger(ea_all) == fault_ledger(eb_all)
+    drift = cfg.faults.drift
+    assert a.drift_mults(drift_round)[drift.worker] == pytest.approx(factor)
+    assert a.drift_mults(max(1, drift_round - 1))[0] == 1.0
+
+
 @settings(max_examples=40, deadline=None)
 @given(
     W=st.integers(1, 12),

@@ -78,6 +78,11 @@ def test_scenario_config_validation():
         ScenarioEngine(ScenarioConfig(dropout=1.0), 4)
     with pytest.raises(ValueError):
         ScenarioEngine(ScenarioConfig(min_participants=0), 4)
+    # a sub-1 straggler deadline would end rounds before their own
+    # submitters finish; rejected by name at engine construction
+    with pytest.raises(ValueError, match="timeout_factor"):
+        ScenarioEngine(ScenarioConfig(timeout_factor=0.9), 4)
+    ScenarioEngine(ScenarioConfig(timeout_factor=1.0), 4)   # boundary is legal
     # async methods accept client sampling and dropout (timed-out commits;
     # see tests/test_async_fused.py) but reject churn — and the churn error
     # must not blame dropout
