@@ -893,6 +893,305 @@ def world_model(out_path: str = "BENCH_world.json", quick: bool = False) -> None
     print(f"world/json,{out_path},")
 
 
+def robust_world(out_path: str = "BENCH_robust.json", quick: bool = False) -> None:
+    """Robust-aggregation bench: Byzantine/lossy-channel worlds x defense.
+
+    The adversarial counterpart of ``world_model``: a fixed 20% Byzantine
+    cohort emitting ``-10 x delta`` commits (``ByzantineConfig``, mode
+    ``scale``) and a lossy channel (drop / duplicate / corrupt delivery,
+    ``ChannelConfig``) against the robust server layer
+    (``RobustAggConfig``: per-commit norm clip, coordinate-wise trimmed
+    mean, MAD-outlier quarantine).  Headline checks:
+
+    * under plain-mean aggregation the Byzantine world COLLAPSES
+      (accuracy near chance), while trimmed-mean + clip + quarantine
+      recovers to >= mean + 10 points and within 5 points of fault-free;
+    * masked == fused stays EXACT under every robust world — virtual
+      clocks, prune events, and the full fault ledger (retries, lost /
+      duplicate / corrupt commits, quarantined commits) bit-identical;
+    * the fused engine still runs O(rounds / round_fusion) chunks with
+      recompiles <= 2 — the whole attack -> defense -> aggregate round
+      (``aggregation.robust_submission_step_jnp``) rides inside the
+      ``lax.scan`` chunk;
+    * the degenerate 1-device mesh runs the same trimmed-mean via
+      ``all_gather``-along-fleet and lands BIT-identical global params to
+      the no-mesh fused engine.
+    """
+    import numpy as np
+
+    from repro.core.aggregation import QuarantineConfig, RobustAggConfig
+    from repro.core.faults import ByzantineConfig, ChannelConfig, FaultConfig
+    from repro.core.scenario import ScenarioConfig
+    from repro.core.simulation import SimConfig, run_simulation
+    from repro.core.timing import HeterogeneityConfig
+    from repro.launch.mesh import make_fleet_mesh
+    from repro.models.cnn import vgg_config
+
+    cnn = vgg_config("vgg_robust", [16, "M", 32], num_classes=10, image_size=8)
+    W = 5 if quick else 10
+    rounds = 6 if quick else 16
+    pi = 2 if quick else 4      # prune_interval == round_fusion
+    byz_workers = tuple(range(max(1, W // 5)))   # fixed 20% compromised set
+    byz = FaultConfig(byzantine=ByzantineConfig(
+        workers=byz_workers, mode="scale", scale=-10.0))
+    chan = FaultConfig(channel=ChannelConfig(
+        drop=0.15, dup=0.15, corrupt=0.1, corrupt_std=10.0))
+    # clip ~= the honest per-commit norm on this fixture (~1.0): attackers
+    # get crushed to honest magnitude before the trim; probation outlasts
+    # the run, so a quarantined slot never re-enters.  The long probation
+    # also keeps the exact-ledger contract OFF the readmission boundary:
+    # each engine's f32 training stream differs at the last bit, and a
+    # strike decision within an ulp of the 3*MAD threshold would flip a
+    # re-entry cycle — with no readmission churn the pinned fixture stays
+    # strike-for-strike identical across engines
+    defense = RobustAggConfig(
+        clip=1.0, trim=0.2, quarantine=QuarantineConfig(probation=100))
+    worlds = {
+        "fault_free": (None, None),
+        "byz_mean": (byz, None),
+        "byz_robust": (byz, defense),
+        "channel_mean": (chan, None),
+        "channel_robust": (chan, defense),
+    }
+    ledger_fields = ("drift_events", "rounds_degraded", "rounds_skipped",
+                     "workers_recovered", "retry_total", "byz_commits",
+                     "lost_commits", "dup_commits", "corrupt_commits",
+                     "quarantined_commits")
+
+    def run(engine, faults, robust, mesh=None):
+        return run_simulation(SimConfig(
+            method="adaptcl", engine=engine, rounds=rounds,
+            prune_interval=pi, round_fusion=pi, num_workers=W,
+            batch_size=8, cnn=cnn, eval_every=rounds, mesh=mesh,
+            het=HeterogeneityConfig(num_workers=W, sigma=5.0),
+            seed=7, robust=robust,
+            scenario=ScenarioConfig(seed=3, faults=faults),
+        ))
+
+    rows = []
+    results = {}
+    print("name,value,derived")
+    for wname, (faults, robust) in worlds.items():
+        for engine in ("masked", "fused"):
+            r = run(engine, faults, robust)
+            results[(wname, engine)] = r
+            led = {f: getattr(r, f) for f in ledger_fields}
+            rows.append(dict(
+                world=wname, engine=engine, rounds=rounds, round_fusion=pi,
+                workers=W, byz_workers=list(byz_workers),
+                final_acc=r.final_acc, total_time=r.total_time,
+                comm_bytes=r.comm_bytes,
+                prune_event_count=len(r.prune_events),
+                host_dispatches=r.host_dispatches,
+                fused_chunks=r.fused_chunks, recompiles=r.recompiles,
+                walltime_s=r.walltime_s,
+                compile_walltime_s=r.compile_walltime_s,
+                **led,
+            ))
+            print(
+                f"robust/{wname}/{engine},acc={r.final_acc:.3f},"
+                f"time={r.total_time:.1f};byz={r.byz_commits};"
+                f"lost={r.lost_commits};dup={r.dup_commits};"
+                f"corrupt={r.corrupt_commits};quar={r.quarantined_commits};"
+                f"retries={r.retry_total};dispatches={r.host_dispatches};"
+                f"recompiles={r.recompiles}"
+            )
+
+    # the mesh leg: degenerate 1-device mesh == no-mesh, bit for bit (the
+    # trimmed mean all-gathers a row block of everything and must change
+    # NOTHING); skipped only if jax has no devices at all
+    mesh_r = run("fused", byz, defense, mesh=make_fleet_mesh(1))
+    base_r = results[("byz_robust", "fused")]
+    mesh_identical = (
+        all(np.array_equal(base_r.global_params[k], mesh_r.global_params[k])
+            for k in base_r.global_params)
+        and mesh_r.prune_events == base_r.prune_events
+        and mesh_r.total_time == base_r.total_time
+        and all(getattr(mesh_r, f) == getattr(base_r, f)
+                for f in ledger_fields)
+    )
+
+    free = results[("fault_free", "fused")].final_acc
+    mean_acc = results[("byz_mean", "fused")].final_acc
+    rob_acc = results[("byz_robust", "fused")].final_acc
+    checks = {
+        # the headline: mean collapses, the robust server recovers
+        "byz_mean_acc": mean_acc,
+        "byz_robust_acc": rob_acc,
+        "fault_free_acc": free,
+        "robust_ge_mean_plus_10pts": rob_acc >= mean_acc + 0.10,
+        "robust_within_5pts_of_fault_free": rob_acc >= free - 0.05,
+        "channel_robust_ge_mean_plus_10pts": (
+            results[("channel_robust", "fused")].final_acc
+            >= results[("channel_mean", "fused")].final_acc + 0.10
+        ),
+        "channel_robust_within_10pts_of_fault_free": (
+            results[("channel_robust", "fused")].final_acc >= free - 0.10
+        ),
+        # engine equivalence stays EXACT under attack: clocks / prune
+        # events / full fault ledger bit-identical, acc within eval noise
+        "engines_equivalent": all(
+            results[(wn, "masked")].total_time
+            == results[(wn, "fused")].total_time
+            and results[(wn, "masked")].prune_events
+            == results[(wn, "fused")].prune_events
+            and abs(results[(wn, "masked")].final_acc
+                    - results[(wn, "fused")].final_acc) <= 0.02
+            and all(getattr(results[(wn, "masked")], f)
+                    == getattr(results[(wn, "fused")], f)
+                    for f in ledger_fields)
+            for wn in worlds
+        ),
+        # dispatch economics survive the robust layer: the whole
+        # attack->defense->aggregate round rides in-scan
+        "fused_chunks_O_R_over_K": all(
+            results[(wn, "fused")].fused_chunks == rounds // pi
+            for wn in worlds
+        ),
+        "fused_recompiles_le_2": all(
+            results[(wn, "fused")].recompiles <= 2 for wn in worlds
+        ),
+        "mesh_1dev_bit_identical": mesh_identical,
+        # each family left its ledger signature
+        "byz_commits_counted": results[("byz_mean", "fused")].byz_commits > 0,
+        "channel_ledger_active": (
+            results[("channel_robust", "fused")].retry_total > 0
+            and results[("channel_robust", "fused")].dup_commits > 0
+            and results[("channel_robust", "fused")].corrupt_commits > 0
+        ),
+        "quarantine_fired": (
+            results[("byz_robust", "fused")].quarantined_commits > 0
+        ),
+        "faultfree_ledger_zero": all(
+            getattr(results[("fault_free", "fused")], f) == 0
+            for f in ledger_fields
+        ),
+    }
+    for k, v in checks.items():
+        print(f"robust/{k},{v},")
+    with open(out_path, "w") as f:
+        json.dump({
+            "rows": rows,
+            "rounds": rounds,
+            "round_fusion": pi,
+            "byz_workers": list(byz_workers),
+            "checks": checks,
+        }, f, indent=2)
+    print(f"robust/json,{out_path},")
+
+
+def flaky_grid(out_path: str = "BENCH_world.json", quick: bool = False) -> None:
+    """Flakiness grid: (participation C, dropout, churn) x engine sweep.
+
+    Sweeps the scenario layer's three flakiness axes jointly and merges the
+    grid into ``BENCH_world.json`` (next to the fault worlds) under a
+    ``flaky_grid`` key, so accuracy-vs-flakiness is tracked in one file.
+    Checks: masked == fused stays exact in EVERY cell (clocks + prune
+    events bit-identical, acc within eval noise), the clean cell matches
+    the scenario-free baseline, every cell still converges past chance,
+    and no flaky cell beats the clean cell by more than eval noise."""
+    from repro.core.scenario import ScenarioConfig
+    from repro.core.simulation import SimConfig, run_simulation
+    from repro.core.timing import HeterogeneityConfig
+    from repro.models.cnn import vgg_config
+
+    cnn = vgg_config("vgg_flaky", [16, "M", 32], num_classes=10, image_size=8)
+    W = 5 if quick else 10
+    rounds = 6 if quick else 16
+    pi = 2 if quick else 4
+    parts = (1.0, 0.5)
+    dropouts = (0.0, 0.2)
+    churns = (0.0,) if quick else (0.0, 0.05)
+
+    def run(engine, scen):
+        return run_simulation(SimConfig(
+            method="adaptcl", engine=engine, rounds=rounds,
+            prune_interval=pi, round_fusion=pi, num_workers=W,
+            batch_size=8, cnn=cnn, eval_every=rounds,
+            het=HeterogeneityConfig(num_workers=W, sigma=5.0),
+            seed=7, scenario=scen,
+        ))
+
+    rows = []
+    results = {}
+    print("name,value,derived")
+    base = run("fused", None)
+    for C in parts:
+        for drop in dropouts:
+            for churn in churns:
+                scen = ScenarioConfig(
+                    participation=C, dropout=drop, churn=churn, seed=3)
+                for engine in ("masked", "fused"):
+                    r = run(engine, scen)
+                    results[(C, drop, churn, engine)] = r
+                    rows.append(dict(
+                        participation=C, dropout=drop, churn=churn,
+                        engine=engine, rounds=rounds, workers=W,
+                        final_acc=r.final_acc, total_time=r.total_time,
+                        rounds_skipped=r.rounds_skipped,
+                        host_dispatches=r.host_dispatches,
+                        fused_chunks=r.fused_chunks,
+                        recompiles=r.recompiles,
+                    ))
+                    print(
+                        f"flaky/C{C}/d{drop}/ch{churn}/{engine},"
+                        f"acc={r.final_acc:.3f},"
+                        f"time={r.total_time:.1f};"
+                        f"dispatches={r.host_dispatches};"
+                        f"recompiles={r.recompiles}"
+                    )
+
+    cells = [(C, d, ch) for C in parts for d in dropouts for ch in churns]
+    clean = results[(1.0, 0.0, 0.0, "fused")]
+    acc_slack = 0.08            # eval noise band on this fixture
+    checks = {
+        "engines_equivalent": all(
+            results[c + ("masked",)].total_time
+            == results[c + ("fused",)].total_time
+            and results[c + ("masked",)].prune_events
+            == results[c + ("fused",)].prune_events
+            and abs(results[c + ("masked",)].final_acc
+                    - results[c + ("fused",)].final_acc) <= 0.02
+            for c in cells
+        ),
+        # a full-participation zero-flakiness scenario is the baseline
+        "clean_cell_matches_no_scenario": (
+            clean.final_acc == base.final_acc
+            and clean.total_time == base.total_time
+            and clean.prune_events == base.prune_events
+        ),
+        "all_cells_converge": all(
+            results[c + ("fused",)].final_acc >= 2.0 / cnn.num_classes
+            for c in cells
+        ),
+        "acc_flakiness_guard": all(
+            results[c + ("fused",)].final_acc
+            <= clean.final_acc + acc_slack
+            for c in cells
+        ),
+        "fused_recompiles_le_2": all(
+            results[c + ("fused",)].recompiles <= 2 for c in cells
+        ),
+    }
+    for k, v in checks.items():
+        print(f"flaky/{k},{v},")
+    blob = {}
+    if os.path.exists(out_path):
+        try:
+            with open(out_path) as f:
+                blob = json.load(f)
+        except (OSError, ValueError):
+            blob = {}
+    blob["flaky_grid"] = {
+        "rows": rows, "rounds": rounds,
+        "participations": list(parts), "dropouts": list(dropouts),
+        "churns": list(churns), "checks": checks,
+    }
+    with open(out_path, "w") as f:
+        json.dump(blob, f, indent=2)
+    print(f"flaky/json,{out_path},")
+
+
 def main() -> None:
     ap = argparse.ArgumentParser(
         description=__doc__, formatter_class=argparse.RawDescriptionHelpFormatter
@@ -900,7 +1199,8 @@ def main() -> None:
     ap.add_argument(
         "command", nargs="?", default="tables",
         choices=("tables", "scale", "async_scale", "retention_sweep", "fused",
-                 "shard_scale", "regrow_sweep", "world_model"),
+                 "shard_scale", "regrow_sweep", "world_model", "robust_world",
+                 "flaky_grid"),
         help="'tables' (default) = paper-table benches; 'scale' = sync "
              "fleet-scaling grid (W x engine x scenario -> BENCH_scale.json); "
              "'async_scale' = resident async scheduler grid (W x scheduler x "
@@ -912,7 +1212,10 @@ def main() -> None:
              "virtual CPU devices (-> BENCH_shard.json); 'regrow_sweep' = "
              "FedDST mask-readjustment variants x engine "
              "(-> BENCH_regrow.json); 'world_model' = fault-injection "
-             "accuracy-vs-flakiness grid x engine (-> BENCH_world.json)",
+             "accuracy-vs-flakiness grid x engine (-> BENCH_world.json); "
+             "'robust_world' = Byzantine/lossy-channel worlds vs the robust "
+             "aggregation layer (-> BENCH_robust.json); 'flaky_grid' = "
+             "(C, dropout, churn) sweep merged into BENCH_world.json",
     )
     ap.add_argument("--only", default=None)
     ap.add_argument("--quick", action="store_true")
@@ -959,6 +1262,12 @@ def main() -> None:
         return
     if args.command == "world_model":
         world_model(args.out or "BENCH_world.json", quick=args.quick)
+        return
+    if args.command == "robust_world":
+        robust_world(args.out or "BENCH_robust.json", quick=args.quick)
+        return
+    if args.command == "flaky_grid":
+        flaky_grid(args.out or "BENCH_world.json", quick=args.quick)
         return
 
     from benchmarks import tables  # import after BENCH_QUICK is set

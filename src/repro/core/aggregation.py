@@ -46,6 +46,7 @@ equivalence tests compare against.
 """
 from __future__ import annotations
 
+import dataclasses
 from typing import Dict, List, Mapping, Optional, Sequence, Tuple
 
 import jax
@@ -55,6 +56,18 @@ import numpy as np
 from .masks import GlobalIndex, embed_units
 
 __all__ = [
+    "QuarantineConfig",
+    "RobustAggConfig",
+    "byzantine_transform_jnp",
+    "clip_deltas_jnp",
+    "corrupt_transform_jnp",
+    "delta_norms_jnp",
+    "health_step_jnp",
+    "async_health_step_jnp",
+    "noise_key",
+    "robust_aggregate_stacked_jnp",
+    "robust_submission_step_jnp",
+    "trimmed_mean_stacked_jnp",
     "UnitMap",
     "embed_params",
     "coordinate_mask",
@@ -351,6 +364,491 @@ def dgc_compress_jnp(
     return committed, new_res, kept, total
 
 
+# --- robust aggregation layer (clip / trimmed-mean / quarantine) ----------
+
+@dataclasses.dataclass(frozen=True)
+class QuarantineConfig:
+    """Server-side health tracker: quarantine repeated MAD-outlier workers.
+
+    Each aggregated round the server computes the median and the median
+    absolute deviation (MAD) of the eligible submitters' pre-clip update
+    norms; a worker whose norm deviates more than ``threshold`` MADs strikes
+    (consecutive strikes reset on a clean round).  ``strikes`` consecutive
+    strikes quarantine the worker for ``probation`` aggregated rounds — its
+    commits are excluded from aggregation exactly like ``recovering`` rows
+    (it still trains and its phi still gates the round clock, so virtual
+    clocks stay engine-identical) — after which it is readmitted with a
+    clean record."""
+
+    threshold: float = 3.0  # MAD multiples before a norm counts as an outlier
+    strikes: int = 2        # consecutive outlier rounds before quarantine
+    probation: int = 3      # aggregated rounds excluded once quarantined
+
+    def __post_init__(self):
+        if not (self.threshold > 0.0):
+            raise ValueError(
+                f"quarantine threshold {self.threshold} must be > 0"
+            )
+        if self.strikes < 1:
+            raise ValueError(f"quarantine strikes {self.strikes} must be >= 1")
+        if self.probation < 1:
+            raise ValueError(
+                f"quarantine probation {self.probation} must be >= 1"
+            )
+
+
+@dataclasses.dataclass(frozen=True)
+class RobustAggConfig:
+    """The robust server aggregation layer (``SimConfig.robust``).
+
+    ``clip`` bounds each commit's L2 delta norm (None = no clipping);
+    ``trim`` is the per-end coordinate-wise trimmed-mean fraction (0 = plain
+    weighted mean — bit-identical to the pre-feature server by a static
+    branch); ``quarantine`` enables the MAD-outlier health tracker.
+    ``RobustAggConfig()`` (all defaults) is a no-op."""
+
+    clip: Optional[float] = None
+    trim: float = 0.0
+    quarantine: Optional[QuarantineConfig] = None
+
+    def __post_init__(self):
+        if self.clip is not None and not (self.clip > 0.0):
+            raise ValueError(f"robust clip {self.clip} must be > 0")
+        if not (0.0 <= self.trim < 0.5):
+            raise ValueError(f"robust trim {self.trim} outside [0, 0.5)")
+
+    @property
+    def any_active(self) -> bool:
+        return (
+            self.clip is not None
+            or self.trim > 0.0
+            or self.quarantine is not None
+        )
+
+
+def noise_key(seed: int, round_t: int) -> jnp.ndarray:
+    """Per-round noise key for byzantine/corruption payload garbling.
+
+    ``fold_in(PRNGKey(seed), round_t)`` — a pure function of (seed, round),
+    so the masked engine (calling per round) and the fused engine (feeding a
+    precomputed ``[K, 2]`` key stack into the scan) generate bit-identical
+    noise."""
+    return jax.random.fold_in(jax.random.PRNGKey(seed), round_t)
+
+
+def _leaf_noise(key: jnp.ndarray, leaf_idx: int, shape, dtype) -> jnp.ndarray:
+    return jax.random.normal(jax.random.fold_in(key, leaf_idx), shape, dtype)
+
+
+def _row_bcast(row: jnp.ndarray, ndim: int) -> jnp.ndarray:
+    return row.reshape((row.shape[0],) + (1,) * (ndim - 1))
+
+
+def _stack_noise(
+    key: jnp.ndarray, leaf_idx: int, leaf: jnp.ndarray,
+    full_rows: Optional[int], row_offset,
+) -> jnp.ndarray:
+    """[W_local, ...] noise rows for ``leaf``, drawn at FULL fleet width.
+
+    Under a fleet mesh each shard generates the full ``[W, ...]`` noise
+    stack and slices its own row block, so mesh and no-mesh runs (and every
+    mesh size) see bit-identical noise per global slot."""
+    if full_rows is None or full_rows == leaf.shape[0]:
+        noise = _leaf_noise(key, leaf_idx, leaf.shape, leaf.dtype)
+        if row_offset is None:
+            return noise
+        return jax.lax.dynamic_slice_in_dim(noise, row_offset, leaf.shape[0], 0)
+    full = _leaf_noise(
+        key, leaf_idx, (full_rows,) + leaf.shape[1:], leaf.dtype
+    )
+    off = 0 if row_offset is None else row_offset
+    return jax.lax.dynamic_slice_in_dim(full, off, leaf.shape[0], 0)
+
+
+def byzantine_transform_jnp(
+    deltas: Mapping[str, jnp.ndarray],      # {path: [W, ...]} committed deltas
+    masks: Optional[Mapping[str, jnp.ndarray]],  # {path: [W, ...]} 0/1, or None
+    byz_row: jnp.ndarray,                   # [W] bool: compromised this round
+    *,
+    mode: str,
+    scale: float,
+    noise_std: float,
+    key: jnp.ndarray,
+    full_rows: Optional[int] = None,
+    row_offset=None,
+) -> Dict[str, jnp.ndarray]:
+    """Apply the Byzantine attack to compromised rows of a delta stack.
+
+    A pure transform at the submission boundary: honest rows pass through
+    bit-untouched; attacked rows are masked back to their live coordinates
+    (an attacker cannot write into coordinates it does not hold)."""
+    out: Dict[str, jnp.ndarray] = {}
+    for i, k in enumerate(sorted(deltas)):
+        d = deltas[k]
+        if mode == "sign_flip":
+            atk = -d
+        elif mode == "scale":
+            atk = jnp.asarray(scale, d.dtype) * d
+        else:  # "noise"
+            noise = _stack_noise(key, i, d, full_rows, row_offset)
+            atk = d + jnp.asarray(noise_std, d.dtype) * noise
+        if masks is not None:
+            atk = atk * masks[k]
+        out[k] = jnp.where(_row_bcast(byz_row, d.ndim), atk, d)
+    return out
+
+
+def corrupt_transform_jnp(
+    deltas: Mapping[str, jnp.ndarray],
+    masks: Optional[Mapping[str, jnp.ndarray]],
+    corrupt_row: jnp.ndarray,               # [W] bool: payload garbled
+    *,
+    corrupt_std: float,
+    key: jnp.ndarray,
+    full_rows: Optional[int] = None,
+    row_offset=None,
+) -> Dict[str, jnp.ndarray]:
+    """Garble corrupted rows of a delta stack: ``delta + corrupt_std * N``.
+
+    The lossy channel's payload corruption — same shape discipline as
+    :func:`byzantine_transform_jnp` (leaf index 1000+i folds the corruption
+    stream away from the attack stream, so a round with both families does
+    not reuse noise)."""
+    out: Dict[str, jnp.ndarray] = {}
+    for i, k in enumerate(sorted(deltas)):
+        d = deltas[k]
+        noise = _stack_noise(key, 1000 + i, d, full_rows, row_offset)
+        bad = d + jnp.asarray(corrupt_std, d.dtype) * noise
+        if masks is not None:
+            bad = bad * masks[k]
+        out[k] = jnp.where(_row_bcast(corrupt_row, d.ndim), bad, d)
+    return out
+
+
+def delta_norms_jnp(deltas: Mapping[str, jnp.ndarray]) -> jnp.ndarray:
+    """Per-worker L2 norm of a delta stack across all leaves — ``[W]`` f32.
+
+    Leaves reduce in sorted-key order so the masked loop and the fused scan
+    accumulate in the same order (bit-identical norms)."""
+    total = None
+    for k in sorted(deltas):
+        d = deltas[k].astype(jnp.float32)
+        sq = jnp.sum(d.reshape(d.shape[0], -1) ** 2, axis=1)
+        total = sq if total is None else total + sq
+    return jnp.sqrt(total)
+
+
+def clip_deltas_jnp(
+    deltas: Mapping[str, jnp.ndarray],
+    norms: jnp.ndarray,                     # [W] f32 pre-clip norms
+    clip: float,
+) -> Dict[str, jnp.ndarray]:
+    """Per-commit L2 norm clipping: rows with ``norm > clip`` are scaled to
+    the clip sphere; rows at or under the bound pass through bit-untouched
+    (the scale multiplies by exactly 1.0)."""
+    scale = jnp.minimum(
+        jnp.float32(1.0), jnp.float32(clip) / jnp.maximum(norms, 1e-30)
+    )
+    return {
+        k: d * _row_bcast(scale.astype(d.dtype), d.ndim)
+        for k, d in deltas.items()
+    }
+
+
+def health_step_jnp(
+    norms: jnp.ndarray,      # [W] f32: this round's update norms
+    eligible: jnp.ndarray,   # [W] bool: submitted AND delivered this round
+    strikes: jnp.ndarray,    # [W] int32 carry
+    quar_left: jnp.ndarray,  # [W] int32 carry: probation rounds remaining
+    *,
+    threshold: float,
+    strikes_needed: int,
+    probation: int,
+    gate=None,               # scalar bool: False = dead round, state untouched
+) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """One aggregated round of the MAD-outlier health tracker.
+
+    Returns ``(quar_now, strikes', quar_left')`` where ``quar_now`` marks
+    rows quarantined at round START (excluded from this round's
+    aggregation).  Median/MAD are lower medians over the eligible,
+    non-quarantined rows; the MAD floor ``max(MAD, 1e-6 |median| + 1e-12)``
+    keeps an all-identical honest cohort from flagging on f32 dust.  The
+    same function runs in the masked loop, inside the fused scan (``gate``
+    rides the chunk's ``real`` mask so dead padding rounds leave the carry
+    untouched), and — on gathered full-fleet norms — under the mesh."""
+    quar_now = quar_left > 0
+    elig = eligible & ~quar_now
+    n = elig.sum()
+    x = jnp.where(elig, norms, jnp.inf)
+    med = jnp.sort(x)[jnp.maximum(n - 1, 0) // 2]
+    dev = jnp.where(elig, jnp.abs(norms - med), jnp.inf)
+    mad = jnp.sort(dev)[jnp.maximum(n - 1, 0) // 2]
+    floor = jnp.maximum(mad, 1e-6 * jnp.abs(med) + 1e-12)
+    outlier = elig & (jnp.abs(norms - med) > jnp.float32(threshold) * floor)
+    outlier = outlier & (n > 0)
+    strikes2 = jnp.where(
+        elig, jnp.where(outlier, strikes + 1, 0), strikes
+    ).astype(strikes.dtype)
+    enter = elig & (strikes2 >= strikes_needed)
+    quar2 = jnp.where(
+        enter, probation, jnp.maximum(quar_left - 1, 0)
+    ).astype(quar_left.dtype)
+    strikes2 = jnp.where(enter, 0, strikes2).astype(strikes.dtype)
+    if gate is not None:
+        strikes2 = jnp.where(gate, strikes2, strikes)
+        quar2 = jnp.where(gate, quar2, quar_left)
+    return quar_now, strikes2, quar2
+
+
+def async_health_step_jnp(
+    norm: jnp.ndarray,        # scalar f32: this commit's update norm
+    worker: jnp.ndarray,      # scalar int32 slot id
+    strikes: jnp.ndarray,     # [W] int32 carry
+    quar_left: jnp.ndarray,   # [W] int32 carry
+    last_norms: jnp.ndarray,  # [W] f32 carry: last commit norm per slot
+    seen: jnp.ndarray,        # [W] bool carry: slot has committed before
+    *,
+    threshold: float,
+    strikes_needed: int,
+    probation: int,
+) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Per-commit health step for the async schedulers.
+
+    The population for the median/MAD is each slot's LAST commit norm (there
+    is no synchronized cohort in an event queue).  Returns ``(reject,
+    strikes', quar_left', last_norms', seen')`` — ``reject`` is True for a
+    commit from a quarantined slot (its probation counts down per rejected
+    commit) or the commit that triggers quarantine; rejected commits still
+    bump the server version (the event plan's version trajectory is fixed at
+    plan time), their parameters are simply discarded."""
+    norms2 = last_norms.at[worker].set(norm)
+    seen2 = seen.at[worker].set(True)
+    quar_now = quar_left[worker] > 0
+    n = seen2.sum()
+    x = jnp.where(seen2, norms2, jnp.inf)
+    med = jnp.sort(x)[jnp.maximum(n - 1, 0) // 2]
+    dev = jnp.where(seen2, jnp.abs(norms2 - med), jnp.inf)
+    mad = jnp.sort(dev)[jnp.maximum(n - 1, 0) // 2]
+    floor = jnp.maximum(mad, 1e-6 * jnp.abs(med) + 1e-12)
+    outlier = jnp.abs(norm - med) > jnp.float32(threshold) * floor
+    s_w = jnp.where(outlier & ~quar_now, strikes[worker] + 1, 0)
+    enter = ~quar_now & (s_w >= strikes_needed)
+    strikes2 = strikes.at[worker].set(
+        jnp.where(enter, 0, s_w).astype(strikes.dtype)
+    )
+    quar2 = quar_left.at[worker].set(
+        jnp.where(
+            enter, probation, jnp.maximum(quar_left[worker] - 1, 0)
+        ).astype(quar_left.dtype)
+    )
+    return quar_now | enter, strikes2, quar2, norms2, seen2
+
+
+def trimmed_mean_stacked_jnp(
+    param_stacks: Mapping[str, jnp.ndarray],   # {path: [W, ...]} masked stacks
+    mask_stacks: Optional[Mapping[str, jnp.ndarray]],  # presence, or None
+    eligible: jnp.ndarray,                     # [W] bool: votes counted
+    trim: float,                               # static per-end trim fraction
+) -> Dict[str, jnp.ndarray]:
+    """Coordinate-wise trimmed mean over a resident stack, presence-aware.
+
+    Per coordinate, only HOLDER votes (eligible rows whose presence mask
+    retains the coordinate) enter the order statistics — structural zeros
+    from pruned rows cannot crowd the trim window.  ``k = floor(trim * n_c)``
+    votes are dropped from each end of the ``n_c`` holder votes, the
+    surviving votes are averaged, and the result is rescaled by
+    ``n_c / |eligible|`` — the zero-vote shrinkage of by-worker averaging —
+    so a fault-free trimmed mean matches the plain mean's scale on partially
+    held coordinates."""
+    elig_n = jnp.maximum(eligible.sum().astype(jnp.float32), 1.0)
+    W = eligible.shape[0]
+    ranks = jnp.arange(W)
+    out: Dict[str, jnp.ndarray] = {}
+    for k in sorted(param_stacks):
+        stack = param_stacks[k].astype(jnp.float32)
+        valid = _row_bcast(eligible, stack.ndim)
+        if mask_stacks is not None:
+            valid = valid & (mask_stacks[k] > 0)
+        else:
+            valid = jnp.broadcast_to(valid, stack.shape)
+        n_c = valid.sum(axis=0)
+        k_c = jnp.floor(jnp.float32(trim) * n_c.astype(jnp.float32)).astype(n_c.dtype)
+        xs = jnp.sort(jnp.where(valid, stack, jnp.inf), axis=0)
+        r = ranks.reshape((W,) + (1,) * (stack.ndim - 1))
+        keep = (r >= k_c) & (r < n_c - k_c)
+        kept_sum = jnp.where(keep, xs, 0.0).sum(axis=0)
+        keep_n = jnp.maximum(n_c - 2 * k_c, 1).astype(jnp.float32)
+        est = kept_sum * n_c.astype(jnp.float32) / (keep_n * elig_n)
+        out[k] = jnp.where(n_c > 0, est, 0.0)
+    return out
+
+
+def robust_aggregate_stacked_jnp(
+    param_stacks: Mapping[str, jnp.ndarray],   # {path: [W, ...]} masked stacks
+    weights: jnp.ndarray,                      # [W] f32 multiplicity weights
+    mask_stacks: Optional[Mapping[str, jnp.ndarray]] = None,
+    *,
+    trim: float = 0.0,
+    axis: Optional[str] = None,
+) -> Dict[str, jnp.ndarray]:
+    """The robust server's aggregation step.
+
+    ``trim == 0`` routes to :func:`aggregate_by_worker_stacked_jnp`
+    LITERALLY (a static Python branch) — trim-free robust aggregation is
+    bit-identical to the plain server, not merely close.  ``trim > 0`` runs
+    the presence-aware coordinate-wise trimmed mean; relative multiplicity
+    is deliberately ignored there (a duplicated delivery is one vote —
+    trimmed-mean deduplicates by construction), only ``weights > 0``
+    eligibility counts.
+
+    Under a fleet mesh axis the trimmed path ALL-GATHERS the shards' row
+    blocks (``sharding.collectives.all_gather_fleet``) — cross-shard order
+    statistics need every vote — and computes the full-fleet trim
+    replicated per shard; the degenerate 1-device mesh gathers a block of
+    everything, bit-identical to no-mesh."""
+    if trim == 0.0:
+        return aggregate_by_worker_stacked_jnp(param_stacks, weights, axis)
+    eligible = weights > 0
+    if axis is not None:
+        from ..sharding.collectives import all_gather_fleet  # lazy: no cycle
+
+        param_stacks = all_gather_fleet(dict(param_stacks), axis)
+        if mask_stacks is not None:
+            mask_stacks = all_gather_fleet(dict(mask_stacks), axis)
+        eligible = all_gather_fleet(eligible, axis)
+    return trimmed_mean_stacked_jnp(param_stacks, mask_stacks, eligible, trim)
+
+
+def robust_submission_step_jnp(
+    param_stacks: Mapping[str, jnp.ndarray],   # {path: [Wl, ...]} committed rows
+    mask_stacks: Optional[Mapping[str, jnp.ndarray]],
+    global_p: Mapping[str, jnp.ndarray],       # {path: [...]} current global
+    mult: jnp.ndarray,                         # [Wl] f32 multiplicity weights
+    weights: jnp.ndarray,                      # [Wl] f32 normalized weights
+    byz_row: Optional[jnp.ndarray],            # [Wl] bool, or None
+    corrupt_row: Optional[jnp.ndarray],        # [Wl] bool, or None
+    byz_key: Optional[jnp.ndarray],
+    corrupt_key: Optional[jnp.ndarray],
+    strikes: Optional[jnp.ndarray],            # [W] int32 full-fleet carry
+    quar_left: Optional[jnp.ndarray],          # [W] int32 full-fleet carry
+    *,
+    byz_mode: str = "sign_flip",
+    byz_scale: float = -10.0,
+    byz_noise_std: float = 1.0,
+    corrupt_std: float = 10.0,
+    clip: Optional[float] = None,
+    trim: float = 0.0,
+    quarantine: Optional[QuarantineConfig] = None,
+    gate=None,
+    axis: Optional[str] = None,
+    full_rows: Optional[int] = None,
+) -> Tuple[
+    Dict[str, jnp.ndarray],
+    Optional[jnp.ndarray], Optional[jnp.ndarray], Optional[jnp.ndarray],
+]:
+    """One submission-boundary server round: attack -> defense -> aggregate.
+
+    THE shared twin: the masked loop calls it per round on host-fed stacks,
+    the fused engine calls it inside the ``lax.scan`` chunk body, and under a
+    fleet mesh it runs per shard on ``[W_local, ...]`` row blocks
+    (``full_rows`` = fleet W) — same function, so robust worlds keep the
+    engine-equivalence guarantees by construction.  Order matters and is
+    fixed: byzantine transform, channel corruption, pre-clip norms, health
+    quarantine, norm clip, aggregate (plain weighted mean or trimmed mean).
+
+    ``mult`` is the channel multiplicity vector (submit * delivered *
+    (1 + dup), f32) and drives eligibility everywhere; ``weights`` is the
+    pre-normalized plain-mean vector used when no quarantine reweights
+    in-scan.  Returns ``(new_global_f32, strikes', quar_left', quar_now)`` —
+    the health carries pass through untouched when ``quarantine`` is None.
+    A round with zero delivered weight keeps the global unchanged."""
+    stacks = {k: v.astype(jnp.float32) for k, v in param_stacks.items()}
+    masks = mask_stacks
+    w_local = mult.shape[0]
+    row_offset = None
+    if axis is not None:
+        row_offset = jax.lax.axis_index(axis) * w_local
+    norms = None
+    if (byz_row is not None or corrupt_row is not None
+            or clip is not None or quarantine is not None):
+        if masks is not None:
+            bcast = {k: global_p[k][None] * masks[k] for k in stacks}
+        else:
+            bcast = {
+                k: jnp.broadcast_to(global_p[k][None], stacks[k].shape)
+                for k in stacks
+            }
+        deltas = {k: stacks[k] - bcast[k] for k in stacks}
+        if byz_row is not None:
+            deltas = byzantine_transform_jnp(
+                deltas, masks, byz_row, mode=byz_mode, scale=byz_scale,
+                noise_std=byz_noise_std, key=byz_key,
+                full_rows=full_rows, row_offset=row_offset,
+            )
+        if corrupt_row is not None:
+            deltas = corrupt_transform_jnp(
+                deltas, masks, corrupt_row, corrupt_std=corrupt_std,
+                key=corrupt_key, full_rows=full_rows, row_offset=row_offset,
+            )
+        if clip is not None or quarantine is not None:
+            norms = delta_norms_jnp(deltas)
+        if clip is not None:
+            deltas = clip_deltas_jnp(deltas, norms, clip)
+        stacks = {k: bcast[k] + deltas[k] for k in stacks}
+    quar_now = None
+    strikes2, quar2 = strikes, quar_left
+    if quarantine is not None:
+        if axis is not None:
+            from ..sharding.collectives import (  # lazy: no import cycle
+                all_gather_fleet, shard_row_slice,
+            )
+
+            norms_full = all_gather_fleet(norms, axis)
+            mult_full = all_gather_fleet(mult, axis)
+        else:
+            norms_full, mult_full = norms, mult
+        quar_now, strikes2, quar2 = health_step_jnp(
+            norms_full, mult_full > 0, strikes, quar_left,
+            threshold=quarantine.threshold,
+            strikes_needed=quarantine.strikes,
+            probation=quarantine.probation, gate=gate,
+        )
+        w_full = mult_full * (1.0 - quar_now.astype(jnp.float32))
+        wsum = w_full.sum()
+        if trim > 0.0:
+            if axis is not None:
+                stacks_g = all_gather_fleet(stacks, axis)
+                masks_g = (
+                    all_gather_fleet(dict(masks), axis)
+                    if masks is not None else None
+                )
+            else:
+                stacks_g, masks_g = stacks, masks
+            agg = trimmed_mean_stacked_jnp(stacks_g, masks_g, w_full > 0, trim)
+        else:
+            weights_full = w_full / jnp.maximum(wsum, jnp.float32(1e-30))
+            w_loc = (
+                shard_row_slice(weights_full, w_local, axis)
+                if axis is not None else weights_full
+            )
+            agg = aggregate_by_worker_stacked_jnp(stacks, w_loc, axis)
+    else:
+        wsum = mult.sum()
+        if axis is not None:
+            wsum = jax.lax.psum(wsum, axis)
+        if trim > 0.0:
+            agg = robust_aggregate_stacked_jnp(
+                stacks, mult, masks, trim=trim, axis=axis
+            )
+        else:
+            agg = aggregate_by_worker_stacked_jnp(stacks, weights, axis)
+    new = {
+        k: jnp.where(wsum > 0, agg[k], global_p[k].astype(jnp.float32))
+        for k in stacks
+    }
+    return new, strikes2, quar2, quar_now
+
+
 # --- async server merges (fedasync_s / ssp_s / dcasgd_s) -------------------
 
 def fedasync_weight(a0: float, staleness: float) -> float:
@@ -395,6 +893,8 @@ class AsyncServer:
         lr: float = 0.05,
         dcasgd_lambda: float = 2.0,
         dcasgd_m: float = 0.95,
+        clip_norm: Optional[float] = None,
+        quarantine: Optional[QuarantineConfig] = None,
     ):
         self.method = method
         self.params: Params = dict(global_params)
@@ -413,11 +913,74 @@ class AsyncServer:
                 for k, v in global_params.items()
             }
             self.dc_m = {k: np.zeros_like(v) for k, v in global_params.items()}
+        # robust layer: per-commit norm clip + MAD-outlier quarantine (the
+        # health math is float32, mirroring the fused engine's in-scan twin)
+        self.clip_norm = clip_norm
+        self.quarantine = quarantine
+        self.strikes = np.zeros(num_workers, dtype=np.int32)
+        self.quar_left = np.zeros(num_workers, dtype=np.int32)
+        self.last_norms = np.zeros(num_workers, dtype=np.float32)
+        self.seen = np.zeros(num_workers, dtype=bool)
+        self.rejected_commits = 0
+
+    @staticmethod
+    def _delta_norm(delta: Params) -> np.float32:
+        """f32 mirror of ``delta_norms_jnp`` for one worker's delta dict."""
+        tot = np.float32(0.0)
+        for k in sorted(delta):
+            d = np.asarray(delta[k], np.float32).ravel()
+            tot = np.float32(tot + np.float32(np.sum(d * d, dtype=np.float32)))
+        return np.float32(np.sqrt(tot))
+
+    def _health_step(self, norm: np.float32, worker: int) -> bool:
+        """Host twin of ``async_health_step_jnp`` — returns reject."""
+        q = self.quarantine
+        self.last_norms[worker] = norm
+        self.seen[worker] = True
+        quar_now = bool(self.quar_left[worker] > 0)
+        n = int(self.seen.sum())
+        x = np.where(self.seen, self.last_norms, np.inf).astype(np.float32)
+        med = np.sort(x)[max(n - 1, 0) // 2]
+        dev = np.where(
+            self.seen, np.abs(self.last_norms - med), np.inf
+        ).astype(np.float32)
+        mad = np.sort(dev)[max(n - 1, 0) // 2]
+        floor = np.maximum(mad, np.float32(1e-6 * abs(med) + 1e-12))
+        outlier = bool(abs(norm - med) > np.float32(q.threshold) * floor)
+        s_w = self.strikes[worker] + 1 if (outlier and not quar_now) else 0
+        enter = (not quar_now) and s_w >= q.strikes
+        self.strikes[worker] = 0 if enter else s_w
+        self.quar_left[worker] = (
+            q.probation if enter else max(self.quar_left[worker] - 1, 0)
+        )
+        return quar_now or enter
 
     def commit(
         self, worker: int, trained: Params, fetched: Params, staleness: int
     ) -> Params:
         """Apply one worker's commit; returns (and rebinds) the new global."""
+        if self.clip_norm is not None or self.quarantine is not None:
+            delta = {
+                k: np.asarray(trained[k], np.float64) - np.asarray(fetched[k], np.float64)
+                for k in trained
+            }
+            norm = self._delta_norm(delta)
+            if self.quarantine is not None and self._health_step(norm, worker):
+                # rejected: the update is discarded but the version still
+                # bumps — the pre-simulated event plan's staleness/version
+                # trajectory is fixed at plan time
+                self.rejected_commits += 1
+                self.version += 1
+                return self.params
+            if self.clip_norm is not None:
+                scale = float(np.minimum(
+                    np.float32(1.0),
+                    np.float32(self.clip_norm) / np.maximum(norm, np.float32(1e-30)),
+                ))
+                trained = {
+                    k: np.asarray(fetched[k], np.float64) + delta[k] * scale
+                    for k in trained
+                }
         g = self.params
         if self.method == "fedasync_s":
             a = fedasync_weight(self.fedasync_a, staleness)
@@ -461,13 +1024,32 @@ def async_commit_jnp(
     lr: float,
     dcasgd_lambda: float,
     dcasgd_m: float,
+    clip_norm: Optional[float] = None,
 ) -> Tuple[Dict[str, jnp.ndarray], Dict[str, jnp.ndarray], Dict[str, jnp.ndarray]]:
     """Pure-``jnp`` :meth:`AsyncServer.commit` — the fused async engine's
     in-scan server step.  ``method`` is Python-static (one branch traces);
     ``staleness``/``worker`` are traced scalars.  UNGATED: it always computes
     the merge — the caller masks dropped/padding commits with ``jnp.where``
     on the returned state.  Numerics: float32 on device vs the host server's
-    float64 accumulate; the engine-equivalence tests bound the drift."""
+    float64 accumulate; the engine-equivalence tests bound the drift.
+
+    ``clip_norm`` (static) bounds the commit's local progress: the delta
+    ``trained - fetched_w`` is L2-clipped before the method merge — the
+    async half of the robust aggregation layer (``clip_norm=None`` traces
+    the pre-feature program unchanged)."""
+    if clip_norm is not None:
+        delta = {k: trained[k] - fetched_w[k] for k in trained}
+        norm = delta_norms_jnp(
+            {k: d[None] for k, d in delta.items()}
+        )[0]
+        scale = jnp.minimum(
+            jnp.float32(1.0),
+            jnp.float32(clip_norm) / jnp.maximum(norm, 1e-30),
+        )
+        trained = {
+            k: fetched_w[k] + delta[k] * scale.astype(delta[k].dtype)
+            for k in trained
+        }
     if method == "fedasync_s":
         a = fedasync_a * (staleness.astype(jnp.float32) + 1.0) ** -0.5
         new = {k: (1 - a) * g[k] + a * trained[k] for k in g}

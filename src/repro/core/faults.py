@@ -34,6 +34,27 @@ engine can be tested against a hostile, *replayable* world:
 * **diurnal participation wave** (:class:`WaveConfig`) — time-varying
   participation ``C(t) = C * (1 + amplitude * sin(2*pi*(t-1)/period))``
   (deterministic, zero RNG).
+* **Byzantine workers** (:class:`ByzantineConfig`) — per-round compromised
+  workers emit adversarial commits: the committed delta (what the worker
+  submits minus the broadcast-back global it started from) is sign-flipped,
+  scaled, or replaced with ``delta + noise_std * N(0, 1)`` *as a pure
+  transform at the submission boundary* — training itself is honest, only
+  the payload lies.  The compromised set is either a fixed ``workers``
+  tuple (deterministic, zero RNG) or re-drawn per round with probability
+  ``fraction`` per slot (one ``fault_rng.random(W)`` block per round).
+* **lossy channel** (:class:`ChannelConfig`) — every submitted commit runs
+  a delivery gauntlet: each uplink attempt fails with probability ``drop``
+  and is retried up to ``max_retries`` times (each retry multiplies the
+  worker's phi by ``1 + retry_backoff`` cumulatively and lands in the
+  ``retry_total`` ledger); a commit whose every attempt fails is LOST
+  (excluded from aggregation — the round degrades like a straggler drop
+  but the worker still trained and its phi still gates the round clock).
+  Delivered commits are duplicated with probability ``dup`` (double
+  multiplicity under plain mean; the robust layer dedupes) and corrupted
+  with probability ``corrupt`` (payload garbled by ``corrupt_std`` noise).
+  One fixed draw block per round — ``random((W, max_retries + 1))`` then
+  ``random(W)`` twice — regardless of who submits, so the stream never
+  depends on cohort outcomes.
 
 **Engine-identical by construction.**  Deterministic families (drift,
 outage, wave) are pure functions of (config, round); the stochastic family
@@ -63,6 +84,8 @@ import numpy as np
 from .timing import drift_multiplier
 
 __all__ = [
+    "ByzantineConfig",
+    "ChannelConfig",
     "CrashConfig",
     "DriftConfig",
     "FaultConfig",
@@ -200,6 +223,79 @@ class WaveConfig:
 
 
 @dataclasses.dataclass(frozen=True)
+class ByzantineConfig:
+    """Compromised workers emit adversarial commits.
+
+    The attack is a pure transform on the committed delta at the submission
+    boundary: ``sign_flip`` sends ``-delta``, ``scale`` sends
+    ``scale * delta`` (negative scale = sign-flip-and-amplify), ``noise``
+    sends ``delta + noise_std * N(0, 1)`` (masked to the worker's live
+    coordinates).  ``workers`` fixes the compromised slot set
+    (deterministic, zero RNG); ``workers=None`` re-draws the set per round
+    with probability ``fraction`` per slot from the fault RNG."""
+
+    workers: Optional[Sequence[int]] = None
+    fraction: float = 0.0
+    mode: str = "sign_flip"   # "sign_flip" | "scale" | "noise"
+    scale: float = -10.0      # multiplier for mode="scale"
+    noise_std: float = 1.0    # std for mode="noise"
+
+    def __post_init__(self):
+        if self.workers is not None:
+            ws = tuple(int(w) for w in self.workers)
+            if not ws or any(w < 0 for w in ws):
+                raise ValueError(
+                    f"byzantine workers {self.workers!r} must be a "
+                    "non-empty sequence of slots >= 0"
+                )
+            object.__setattr__(self, "workers", ws)
+        if not (0.0 <= self.fraction <= 1.0):
+            raise ValueError(
+                f"byzantine fraction {self.fraction} outside [0, 1]"
+            )
+        if self.mode not in ("sign_flip", "scale", "noise"):
+            raise ValueError(
+                f"byzantine mode {self.mode!r} not in sign_flip/scale/noise"
+            )
+        if self.mode == "scale" and self.scale == 0.0:
+            raise ValueError("byzantine scale must be nonzero")
+        if not (self.noise_std > 0.0):
+            raise ValueError(
+                f"byzantine noise_std {self.noise_std} must be > 0"
+            )
+
+
+@dataclasses.dataclass(frozen=True)
+class ChannelConfig:
+    """Lossy uplink: drop/retry/backoff, duplicate delivery, corruption."""
+
+    drop: float = 0.0          # P(one delivery attempt fails)
+    dup: float = 0.0           # P(a delivered commit arrives twice)
+    corrupt: float = 0.0       # P(a delivered payload is garbled)
+    max_retries: int = 2       # extra attempts after the first failure
+    retry_backoff: float = 0.5  # phi multiplier grows by this per retry
+    corrupt_std: float = 10.0  # noise std applied to corrupted payloads
+
+    def __post_init__(self):
+        for field in ("drop", "dup", "corrupt"):
+            v = getattr(self, field)
+            if not (0.0 <= v < 1.0):
+                raise ValueError(f"channel {field} {v} outside [0, 1)")
+        if self.max_retries < 0:
+            raise ValueError(
+                f"channel max_retries {self.max_retries} must be >= 0"
+            )
+        if self.retry_backoff < 0.0:
+            raise ValueError(
+                f"channel retry_backoff {self.retry_backoff} must be >= 0"
+            )
+        if not (self.corrupt_std > 0.0):
+            raise ValueError(
+                f"channel corrupt_std {self.corrupt_std} must be > 0"
+            )
+
+
+@dataclasses.dataclass(frozen=True)
 class FaultConfig:
     """The scripted fault world (``ScenarioConfig.faults``).
 
@@ -210,12 +306,15 @@ class FaultConfig:
     crash: Optional[CrashConfig] = None
     outage: Optional[OutageConfig] = None
     wave: Optional[WaveConfig] = None
+    byzantine: Optional[ByzantineConfig] = None
+    channel: Optional[ChannelConfig] = None
 
     @property
     def any_active(self) -> bool:
         return any(
             f is not None
-            for f in (self.drift, self.crash, self.outage, self.wave)
+            for f in (self.drift, self.crash, self.outage, self.wave,
+                      self.byzantine, self.channel)
         )
 
 
@@ -225,11 +324,14 @@ def fault_ledger(events: Sequence) -> Dict[str, int]:
     One pure function of the (engine-independent) per-round events, used by
     every sync engine — so ``SimResult`` ledgers are identical across
     sequential / masked / fused by construction.  All zeros when no faults
-    ran.  ``retry_total`` counts re-join attempts: rounds a recovering
-    worker trained without counting toward aggregation."""
+    ran.  ``retry_total`` counts re-join attempts (rounds a recovering
+    worker trained without counting toward aggregation) plus channel
+    delivery retries; ``byz_commits`` / ``lost_commits`` / ``dup_commits``
+    / ``corrupt_commits`` count per-round submission outcomes."""
     led = dict(
         drift_events=0, rounds_degraded=0, rounds_skipped=0,
         workers_recovered=0, retry_total=0,
+        byz_commits=0, lost_commits=0, dup_commits=0, corrupt_commits=0,
     )
     for ev in events:
         led["drift_events"] += int(getattr(ev, "drift_changed", False))
@@ -242,5 +344,21 @@ def fault_ledger(events: Sequence) -> Dict[str, int]:
         if ring is not None:
             led["retry_total"] += int(
                 (np.asarray(ring) & np.asarray(ev.active)).sum()
+            )
+        sub = np.asarray(ev.submitters)
+        byz = getattr(ev, "byz", None)
+        if byz is not None:
+            led["byz_commits"] += int((np.asarray(byz) & sub).sum())
+        retr = getattr(ev, "retries", None)
+        if retr is not None:
+            led["retry_total"] += int(np.asarray(retr)[sub].sum())
+        delv = getattr(ev, "delivered", None)
+        if delv is not None:
+            led["lost_commits"] += int((~np.asarray(delv) & sub).sum())
+            led["dup_commits"] += int(
+                (np.asarray(ev.dup) & np.asarray(delv) & sub).sum()
+            )
+            led["corrupt_commits"] += int(
+                (np.asarray(ev.corrupt) & np.asarray(delv) & sub).sum()
             )
     return led

@@ -111,8 +111,12 @@ from .aggregation import (
     aggregate_by_unit_stacked_jnp,
     aggregate_by_worker_stacked_jnp,
     async_commit_jnp,
+    async_health_step_jnp,
+    delta_norms_jnp,
     dgc_compress_jnp,
     extract_subparams,
+    noise_key,
+    robust_submission_step_jnp,
     roundtrip_total,
     subparam_shapes,
 )
@@ -208,7 +212,10 @@ def _build_chunk_fn(trainer, unit_map, base_shapes, flat: UnitFlat, lam,
                     *, by_unit: bool, importance: str,
                     resident_momentum: bool, has_phase_b: bool,
                     dgc_sparsity: float = 0.0,
-                    mesh=None, fleet_axis: str = "fleet"):
+                    mesh=None, fleet_axis: str = "fleet",
+                    robust=None, byz=None, corrupt_std=None,
+                    channel: bool = False, noise_seed: int = 0,
+                    fleet_w=None):
     """Build the jitted chunk program: ``lax.scan`` over K fused rounds.
 
     Carry: (param stacks, mask stacks, flat presence, global params,
@@ -300,13 +307,24 @@ def _build_chunk_fn(trainer, unit_map, base_shapes, flat: UnitFlat, lam,
         return taylor_scores_jnp(gw, flat.names, presence)
 
     use_dgc = dgc_sparsity > 0.0
+    # robust submission path: byzantine transform + channel corruption +
+    # clip/trim/quarantine, all in-scan via robust_submission_step_jnp — the
+    # SAME function the masked loop calls per round.  Static config; the
+    # quarantine health state rides the carry (full-fleet [W] rows,
+    # replicated under the mesh — health is a fleet-wide order statistic).
+    # NOTE: a lossy channel with corrupt=0 still routes through the robust
+    # path — the commit multiplicity (drop/dup) reshapes the weights and the
+    # all-lost-round wsum==0 guard must be the SAME code as the masked loop.
+    robust_on = (byz is not None or corrupt_std is not None
+                 or robust is not None or channel)
+    quar_cfg = robust.quarantine if robust is not None else None
 
-    def chunk(params, momentum, presence, global_p, dgc_res, xs, ys, sizes,
-              per_round, orders):
+    def chunk(params, momentum, presence, global_p, dgc_res, health, xs, ys,
+              sizes, per_round, orders):
         masks = masks_from_presence(presence, flat, unit_map, base_shapes)
 
         def body(carry, inp):
-            params, masks, presence, global_p, momentum, dgc_res = carry
+            params, masks, presence, global_p, momentum, dgc_res, health = carry
             # crash recovery at the round start, in-scan: rows flagged in
             # inp["recov"] re-enter with their last mask but restart
             # velocity/DGC residuals (they were accumulated against
@@ -391,10 +409,40 @@ def _build_chunk_fn(trainer, unit_map, base_shapes, flat: UnitFlat, lam,
                 kept_w = total_w = None
 
             agg_axis = fleet_axis if mesh is not None else None
+            quar_row = None
             if by_unit:
                 g_new = aggregate_by_unit_stacked_jnp(
                     agg_in, masks, inp["submitters"], axis=agg_axis
                 )
+            elif robust_on:
+                # noise keys derive from the ROUND NUMBER in-scan via the
+                # same fold_in chain the masked loop runs eagerly — threefry
+                # is deterministic, so the streams are bit-identical.
+                byz_key = (
+                    noise_key(noise_seed + 51721, inp["rnd"])
+                    if byz is not None else None
+                )
+                cor_key = (
+                    noise_key(noise_seed + 51722, inp["rnd"])
+                    if corrupt_std is not None else None
+                )
+                g_new, st2, qu2, quar_row = robust_submission_step_jnp(
+                    agg_in, masks, global_p, inp["mult"], inp["weights"],
+                    inp["byz"] if byz is not None else None,
+                    inp["corrupt"] if corrupt_std is not None else None,
+                    byz_key, cor_key,
+                    health.get("strikes"), health.get("quar"),
+                    byz_mode=byz.mode if byz is not None else "sign_flip",
+                    byz_scale=byz.scale if byz is not None else -10.0,
+                    byz_noise_std=byz.noise_std if byz is not None else 1.0,
+                    corrupt_std=corrupt_std if corrupt_std is not None else 10.0,
+                    clip=robust.clip if robust is not None else None,
+                    trim=robust.trim if robust is not None else 0.0,
+                    quarantine=quar_cfg,
+                    gate=inp["real"], axis=agg_axis, full_rows=fleet_w,
+                )
+                if quar_cfg is not None:
+                    health = {"strikes": st2, "quar": qu2}
             else:
                 g_new = aggregate_by_worker_stacked_jnp(
                     agg_in, inp["weights"], axis=agg_axis
@@ -406,16 +454,16 @@ def _build_chunk_fn(trainer, unit_map, base_shapes, flat: UnitFlat, lam,
                              global_p[k])
                 for k in global_p
             }
-            return (params, masks, presence, global_p, momentum, dgc_res), (
-                presence, global_p, kept_w, total_w
-            )
+            return (
+                params, masks, presence, global_p, momentum, dgc_res, health
+            ), (presence, global_p, kept_w, total_w, quar_row)
 
-        carry0 = (params, masks, presence, global_p, momentum, dgc_res)
-        (params, masks, presence, global_p, momentum, dgc_res), (
-            pres_seq, glob_seq, kept_seq, total_seq
+        carry0 = (params, masks, presence, global_p, momentum, dgc_res, health)
+        (params, masks, presence, global_p, momentum, dgc_res, health), (
+            pres_seq, glob_seq, kept_seq, total_seq, quar_seq
         ) = jax.lax.scan(body, carry0, per_round)
-        return (params, momentum, presence, global_p, dgc_res,
-                pres_seq, glob_seq, kept_seq, total_seq)
+        return (params, momentum, presence, global_p, dgc_res, health,
+                pres_seq, glob_seq, kept_seq, total_seq, quar_seq)
 
     if mesh is None:
         return jax.jit(chunk)
@@ -434,16 +482,28 @@ def _build_chunk_fn(trainer, unit_map, base_shapes, flat: UnitFlat, lam,
     if has_phase_b:
         per_round_specs["plan_b"] = P(None, fleet_axis)
         per_round_specs["valid_b"] = P(None, fleet_axis)
+    # robust per-round rows shard like the other [K, W] tensors; the round
+    # numbers (noise-key seeds) are scalars every shard needs — full-W noise
+    # is generated per shard then row-sliced for bit-identity — so replicate.
+    if robust_on:
+        per_round_specs["mult"] = P(None, fleet_axis)
+        per_round_specs["rnd"] = rep
+    if byz is not None:
+        per_round_specs["byz"] = P(None, fleet_axis)
+    if corrupt_std is not None:
+        per_round_specs["corrupt"] = P(None, fleet_axis)
     # kept/total [K, W] scan outputs shard like the presence trail; the DGC
     # residual stacks join the fleet-sharded state (all row-local math).
     # When DGC is off those slots are empty pytrees and the specs are inert.
+    # Quarantine health state (and the quar trail) is a fleet-wide order
+    # statistic computed on gathered norms — replicated [W] rows.
     kt = P(None, fleet_axis)
     return jax.jit(shard_map_compat(
         chunk, mesh=mesh,
-        in_specs=(fleet, fleet, fleet, rep, fleet, fleet, fleet, fleet,
+        in_specs=(fleet, fleet, fleet, rep, fleet, rep, fleet, fleet, fleet,
                   per_round_specs, fleet),
-        out_specs=(fleet, fleet, fleet, rep, fleet, P(None, fleet_axis), rep,
-                   kt, kt),
+        out_specs=(fleet, fleet, fleet, rep, fleet, rep, P(None, fleet_axis),
+                   rep, kt, kt, rep),
     ))
 
 
@@ -477,6 +537,27 @@ def run_sync_fused(sim, env):
     state_sharding = (
         fleet_sharding(mesh, sim.fleet_axis) if mesh is not None else None
     )
+
+    # robust-aggregation statics (byzantine transform / lossy channel /
+    # clip-trim-quarantine).  All None => the chunk program and every host
+    # array below are byte-for-byte the pre-feature ones.
+    faults_cfg = (
+        sim.scenario.faults
+        if sim.scenario is not None and sim.scenario.faults is not None
+        else None
+    )
+    byz_cfg = faults_cfg.byzantine if faults_cfg is not None else None
+    ch_cfg = faults_cfg.channel if faults_cfg is not None else None
+    corrupt_on = ch_cfg is not None and ch_cfg.corrupt > 0.0
+    rb_cfg = (
+        sim.robust
+        if sim.robust is not None and sim.robust.any_active else None
+    )
+    quar_cfg = rb_cfg.quarantine if rb_cfg is not None else None
+    robust_on = (
+        byz_cfg is not None or ch_cfg is not None or rb_cfg is not None
+    )
+    quarantined_commits = 0
 
     scen = ScenarioEngine(sim.scenario, W) if sim.scenario is not None else None
     if scen is not None:
@@ -570,11 +651,23 @@ def run_sync_fused(sim, env):
          tuple(int(d.id) for d in mesh.devices.flat))
         if mesh is not None else None
     )
+    rb_sig = (
+        ((byz_cfg.mode, float(byz_cfg.scale), float(byz_cfg.noise_std))
+         if byz_cfg is not None else None),
+        (float(ch_cfg.corrupt_std) if corrupt_on else None,
+         ch_cfg is not None),
+        ((None if rb_cfg.clip is None else float(rb_cfg.clip),
+          float(rb_cfg.trim),
+          ((float(quar_cfg.threshold), int(quar_cfg.strikes),
+            int(quar_cfg.probation)) if quar_cfg is not None else None))
+         if rb_cfg is not None else None),
+        int(sim.seed),
+    )
     sig = (
         sig_shapes,
         ("fused", K_pad, pad_a, pad_b, tuple(state.xs.shape), batch,
          sim.aggregation, sim.importance, bool(sim.resident_momentum),
-         float(sim.dgc_sparsity), mesh_sig),
+         float(sim.dgc_sparsity), mesh_sig, rb_sig),
         float(lam),
     )
     build = lambda: _build_chunk_fn(
@@ -585,6 +678,15 @@ def run_sync_fused(sim, env):
         has_phase_b=pad_b > 0,
         dgc_sparsity=float(sim.dgc_sparsity),
         mesh=mesh, fleet_axis=sim.fleet_axis,
+        robust=rb_cfg, byz=byz_cfg,
+        corrupt_std=float(ch_cfg.corrupt_std) if corrupt_on else None,
+        channel=ch_cfg is not None, noise_seed=int(sim.seed),
+        fleet_w=W if mesh is not None else None,
+    )
+    # quarantine health carry: full-fleet [W] rows, replicated on the mesh
+    health_dev = (
+        {"strikes": jnp.zeros(W, jnp.int32), "quar": jnp.zeros(W, jnp.int32)}
+        if quar_cfg is not None else {}
     )
 
     t = 0
@@ -659,6 +761,10 @@ def run_sync_fused(sim, env):
         real = np.zeros((K_pad,), bool)
         weights = np.zeros((K_pad, W), np.float32)
         submit_m = np.zeros((K_pad, W), np.float32)
+        mult_m = np.zeros((K_pad, W), np.float32)
+        byz_m = np.zeros((K_pad, W), bool)
+        cor_m = np.zeros((K_pad, W), bool)
+        rnd_arr = np.zeros((K_pad,), np.int32)
         jitters = np.ones((K_pad, W))
         recov = np.zeros((K_pad, W), np.float32)
         drmat = np.ones((K_pad, W))
@@ -725,10 +831,22 @@ def run_sync_fused(sim, env):
                 if sb is not None:
                     plans_b[j], valid_b[j] = sb
             submit_m[j] = ev.submitters.astype(np.float32)
+            # commit multiplicity: submitters x delivery x duplication.  With
+            # no channel this IS the submitter indicator, so the f64 division
+            # below matches the pre-feature weights bit-for-bit.
+            mult_j = ev.submitters.astype(np.float64)
+            if ev.delivered is not None:
+                mult_j = mult_j * ev.delivered * (1.0 + ev.dup)
+            mult_m[j] = mult_j.astype(np.float32)
             if sim.aggregation != "by_unit":
-                weights[j] = (
-                    ev.submitters / ev.submitters.sum()
-                ).astype(np.float32)
+                ms = mult_j.sum()
+                if ms > 0:
+                    weights[j] = (mult_j / ms).astype(np.float32)
+            if ev.byz is not None:
+                byz_m[j] = ev.byz & ev.submitters
+            if corrupt_on and ev.corrupt is not None:
+                cor_m[j] = ev.corrupt & ev.delivered & ev.submitters
+            rnd_arr[j] = rnd
             real[j] = True
             if sim.time_jitter > 0:
                 for w in active_ws:
@@ -762,16 +880,23 @@ def run_sync_fused(sim, env):
         if pad_b > 0:
             per_round["plan_b"] = jnp.asarray(plans_b.astype(np.int32))
             per_round["valid_b"] = jnp.asarray(valid_b)
+        if robust_on:
+            per_round["mult"] = jnp.asarray(mult_m)
+            per_round["rnd"] = jnp.asarray(rnd_arr)
+            if byz_cfg is not None:
+                per_round["byz"] = jnp.asarray(byz_m)
+            if corrupt_on:
+                per_round["corrupt"] = jnp.asarray(cor_m)
         momentum_arg = state.momentum if sim.resident_momentum else {}
 
         # ---- ONE device dispatch for the whole chunk ---------------------
-        (state.params, mom_out, _, global_dev, dgc_res_dev,
-         pres_seq, glob_seq, kept_seq, total_seq) = (
+        (state.params, mom_out, _, global_dev, dgc_res_dev, health_dev,
+         pres_seq, glob_seq, kept_seq, total_seq, quar_seq) = (
             trainer._call_cached(
                 sig, build,
                 state.params, momentum_arg, presence_dev, global_dev,
-                dgc_res_dev, state.xs, state.ys, sizes_dev, per_round,
-                orders_dev,
+                dgc_res_dev, health_dev, state.xs, state.ys, sizes_dev,
+                per_round, orders_dev,
             )
         )
         if sim.resident_momentum:
@@ -785,6 +910,8 @@ def run_sync_fused(sim, env):
         if use_dgc:                                            # [K, W] ints
             kept_np = np.asarray(kept_seq)
             total_np = np.asarray(total_seq)
+        if quar_cfg is not None:                               # [K, W] 0/1
+            quar_np = np.asarray(quar_seq)
 
         # ---- post-chunk host accounting (payloads, clock, ledger, eval) --
         for j, rnd in enumerate(rounds_this):
@@ -814,6 +941,12 @@ def run_sync_fused(sim, env):
                     ))
                     if pad_b > 0:   # ledger phase B at the pruned index
                         env.account_train(indices[w], int(steps_b[j, w]))
+            if quar_cfg is not None:
+                # commits excluded by the server this round: quarantined row
+                # AND a payload actually arrived (mult > 0)
+                quarantined_commits += int(
+                    ((quar_np[j] > 0.5) & (mult_m[j] > 0)).sum()
+                )
             phis = np.full(W, np.nan)
             for w in active_ws:
                 bytes_w, flops_w = _bytes_flops(indices[w])
@@ -827,14 +960,29 @@ def run_sync_fused(sim, env):
                     )
                 # jitter x drift multiplied HERE (one float product) so the
                 # value is bit-identical to the lazy path's
-                # phi_from_cost(..., jmult * time_mult)
+                # phi_from_cost(..., jmult * time_mult); channel retries
+                # stretch the drift factor FIRST (d*r), then jitter — the
+                # masked loop associates its floats the same way.
+                retry_mult = 1.0
+                if (ch_cfg is not None and ev.retries is not None
+                        and ev.submitters[w]):
+                    retry_mult = (
+                        1.0 + ch_cfg.retry_backoff * float(ev.retries[w])
+                    )
                 phi_w = env.phi_from_cost(
-                    w, bytes_w, flops_w, pf, jitters[j, w] * drmat[j, w]
+                    w, bytes_w, flops_w, pf,
+                    jitters[j, w] * (drmat[j, w] * retry_mult),
                 )
                 phis[w] = phi_w
                 interval_phis[w].append(phi_w)
                 if ev.submitters[w]:
-                    comm_bytes += 2.0 * pf * bytes_w
+                    extra = 0.0
+                    if ch_cfg is not None and ev.retries is not None:
+                        extra = (
+                            float(ev.retries[w])
+                            + float(ev.dup[w] & ev.delivered[w])
+                        ) * pf * bytes_w
+                    comm_bytes += 2.0 * pf * bytes_w + extra
             sub_phis = phis[ev.submitters]
             round_time = float(sub_phis.max())
             if ev.dropped.any() and scen is not None:
@@ -904,7 +1052,10 @@ def run_sync_fused(sim, env):
         flops_per_image_final=float(np.mean([c[0] for c in final_costs])),
         blocks_per_image_final=float(np.mean([c[2] for c in final_costs])),
         prune_events=prune_events, fused_chunks=fused_chunks,
-        fault_ledger=fault_ledger(plan_all.events),
+        fault_ledger={
+            **fault_ledger(plan_all.events),
+            "quarantined_commits": quarantined_commits,
+        },
     )
 
 
@@ -937,7 +1088,8 @@ def async_pop_perm(fin_hi, fin_lo, rows):
 
 def _build_async_chunk_fn(trainer, unit_map, base_shapes, lam, *, method, W,
                           BP, EB, cohort_size, fedasync_a, lr,
-                          dcasgd_lambda, dcasgd_m):
+                          dcasgd_lambda, dcasgd_m,
+                          clip_norm=None, quarantine=None):
     """Build the jitted async chunk program: ``lax.scan`` over KB window
     batches, each popping its events from a device queue, training the
     batch's workers as one vmapped sub-stack, then walking the commits
@@ -955,7 +1107,7 @@ def _build_async_chunk_fn(trainer, unit_map, base_shapes, lam, *, method, W,
     )
     gl_base = group_size_sqrt_from_shapes(base_shapes, unit_map)
 
-    def chunk(fetched, g, version, fetched_ver, backup, dc_m, xs, ys,
+    def chunk(fetched, g, version, fetched_ver, backup, dc_m, health, xs, ys,
               per_batch):
         # async workers never prune: masks are all-ones, group-lasso factors
         # are the base-shape constants
@@ -969,7 +1121,7 @@ def _build_async_chunk_fn(trainer, unit_map, base_shapes, lam, *, method, W,
         }
 
         def commit_body(c, e):
-            g, version, fetched_ver, fetched, backup, dc_m, eval_buf = c
+            g, version, fetched_ver, fetched, backup, dc_m, health, eval_buf = c
             w, v_ok, drop, t_row, f_row, ref_row, ev_flag, ev_slot = e
             s = version - fetched_ver[w]
             live = v_ok * (1.0 - drop)     # merged = real AND not timed out
@@ -977,8 +1129,36 @@ def _build_async_chunk_fn(trainer, unit_map, base_shapes, lam, *, method, W,
                 method, g, t_row, f_row, s, w, backup, dc_m,
                 cohort_size=cohort_size, fedasync_a=fedasync_a, lr=lr,
                 dcasgd_lambda=dcasgd_lambda, dcasgd_m=dcasgd_m,
+                clip_norm=clip_norm,
             )
             keep = live > 0
+            if quarantine is not None:
+                # per-commit MAD-outlier health: only LIVE commits touch the
+                # tracker (dropped/padding slots must not move the median
+                # population), and a rejected commit keeps the global but
+                # still bumps the version below — the pre-planned version
+                # trajectory is fixed.
+                hk = live > 0
+                delta = {k: t_row[k] - f_row[k] for k in t_row}
+                norm = delta_norms_jnp(
+                    {k: d[None] for k, d in delta.items()}
+                )[0]
+                reject, st2, qu2, nm2, sn2 = async_health_step_jnp(
+                    norm, w, health["strikes"], health["quar"],
+                    health["norms"], health["seen"],
+                    threshold=quarantine.threshold,
+                    strikes_needed=quarantine.strikes,
+                    probation=quarantine.probation,
+                )
+                health = {
+                    "strikes": jnp.where(hk, st2, health["strikes"]),
+                    "quar": jnp.where(hk, qu2, health["quar"]),
+                    "norms": jnp.where(hk, nm2, health["norms"]),
+                    "seen": jnp.where(hk, sn2, health["seen"]),
+                    "rejected": health["rejected"]
+                    + (hk & reject).astype(jnp.int32),
+                }
+                keep = hk & ~reject
             g = {k: jnp.where(keep, g2[k], g[k]) for k in g}
             backup = {k: jnp.where(keep, backup2[k], backup[k]) for k in backup}
             dc_m = {k: jnp.where(keep, dc_m2[k], dc_m[k]) for k in dc_m}
@@ -995,11 +1175,11 @@ def _build_async_chunk_fn(trainer, unit_map, base_shapes, lam, *, method, W,
                 )
                 for k in eval_buf
             }
-            return (g, version, fetched_ver, fetched, backup, dc_m,
+            return (g, version, fetched_ver, fetched, backup, dc_m, health,
                     eval_buf), (w, s)
 
         def body(carry, inp):
-            fetched, g, version, fetched_ver, backup, dc_m = carry
+            fetched, g, version, fetched_ver, backup, dc_m, health = carry
             # device queue pop: push-ordered events -> commit order
             perm = async_pop_perm(inp["fin_hi"], inp["fin_lo"], inp["rows"])
             rows = jnp.take(inp["rows"], perm)
@@ -1022,23 +1202,24 @@ def _build_async_chunk_fn(trainer, unit_map, base_shapes, lam, *, method, W,
                 k: jnp.zeros((EB,) + tuple(base_shapes[k]), jnp.float32)
                 for k in g
             }
-            (g, version, fetched_ver, fetched, backup, dc_m, eval_buf), (
+            (g, version, fetched_ver, fetched, backup, dc_m, health,
+             eval_buf), (
                 order, stale
             ) = jax.lax.scan(
                 commit_body,
-                (g, version, fetched_ver, fetched, backup, dc_m, eval_buf),
+                (g, version, fetched_ver, fetched, backup, dc_m, health,
+                 eval_buf),
                 (rows, valid, dropped, trained, p0, refetch, eval_flag,
                  eval_slot),
             )
-            return (fetched, g, version, fetched_ver, backup, dc_m), (
-                order, stale, eval_buf
-            )
+            return (fetched, g, version, fetched_ver, backup, dc_m,
+                    health), (order, stale, eval_buf)
 
-        carry0 = (fetched, g, version, fetched_ver, backup, dc_m)
-        (fetched, g, version, fetched_ver, backup, dc_m), (
+        carry0 = (fetched, g, version, fetched_ver, backup, dc_m, health)
+        (fetched, g, version, fetched_ver, backup, dc_m, health), (
             order_seq, stale_seq, eval_seq
         ) = jax.lax.scan(body, carry0, per_batch)
-        return (fetched, g, version, fetched_ver, backup, dc_m,
+        return (fetched, g, version, fetched_ver, backup, dc_m, health,
                 order_seq, stale_seq, eval_seq)
 
     return jax.jit(chunk)
@@ -1063,6 +1244,14 @@ def run_async_fused(sim, env, scen, participants, plan):
     base_shapes = env.base_shapes
     n_part = len(participants)
     idx = full_index(env.space)
+    # robust layer (async half): norm clip + quarantine; trim was rejected
+    # by name in _run_async before routing here
+    rb_cfg = (
+        sim.robust if sim.robust is not None and sim.robust.any_active
+        else None
+    )
+    clip_norm = rb_cfg.clip if rb_cfg is not None else None
+    quar_cfg = rb_cfg.quarantine if rb_cfg is not None else None
 
     global_params = {k: np.asarray(v) for k, v in env.base_params.items()}
     acc_time = [(0.0, _env_accuracy(env, global_params))]
@@ -1087,7 +1276,10 @@ def run_async_fused(sim, env, scen, participants, plan):
                          flops_per_image_final=final_cost[0],
                          blocks_per_image_final=final_cost[2],
                          fused_chunks=0,
-                         fault_ledger=plan.fault_ledger)
+                         fault_ledger={
+                             **(plan.fault_ledger or {}),
+                             "quarantined_commits": 0,
+                         })
 
     shard_x, shard_y = zip(*(env.shard_xy(w) for w in range(W)))
     state = env.fleet.init_state(env.base_params, list(shard_x), list(shard_y))
@@ -1128,15 +1320,30 @@ def run_async_fused(sim, env, scen, participants, plan):
         dc_m_dev = {k: jnp.zeros_like(v) for k, v in g_dev.items()}
     else:
         backup_dev, dc_m_dev = {}, {}
+    health_dev = (
+        {
+            "strikes": jnp.zeros(W, jnp.int32),
+            "quar": jnp.zeros(W, jnp.int32),
+            "norms": jnp.zeros(W, jnp.float32),
+            "seen": jnp.zeros(W, bool),
+            "rejected": jnp.asarray(0, jnp.int32),
+        }
+        if quar_cfg is not None else {}
+    )
 
     sig_shapes = tuple(
         sorted((k, tuple(v.shape)) for k, v in state.params.items())
+    )
+    rb_sig = (
+        None if clip_norm is None else float(clip_norm),
+        ((float(quar_cfg.threshold), int(quar_cfg.strikes),
+          int(quar_cfg.probation)) if quar_cfg is not None else None),
     )
     sig = (
         sig_shapes,
         ("fused_async", method, KB, BP, S_eff, EB, tuple(state.xs.shape),
          batch, n_part, float(sim.fedasync_a), float(sim.lr),
-         float(sim.dcasgd_lambda), float(sim.dcasgd_m)),
+         float(sim.dcasgd_lambda), float(sim.dcasgd_m), rb_sig),
         float(lam),
     )
     build = lambda: _build_async_chunk_fn(
@@ -1144,6 +1351,8 @@ def run_async_fused(sim, env, scen, participants, plan):
         EB=EB, cohort_size=n_part, fedasync_a=float(sim.fedasync_a),
         lr=float(sim.lr), dcasgd_lambda=float(sim.dcasgd_lambda),
         dcasgd_m=float(sim.dcasgd_m),
+        clip_norm=None if clip_norm is None else float(clip_norm),
+        quarantine=quar_cfg,
     )
 
     b = 0
@@ -1196,9 +1405,12 @@ def run_async_fused(sim, env, scen, participants, plan):
 
         # ---- ONE device dispatch for the whole chunk ---------------------
         (fetched_dev, g_dev, version_dev, fetched_ver_dev, backup_dev,
-         dc_m_dev, order_seq, stale_seq, eval_seq) = trainer._call_cached(
-            sig, build, fetched_dev, g_dev, version_dev, fetched_ver_dev,
-            backup_dev, dc_m_dev, state.xs, state.ys, per_batch,
+         dc_m_dev, health_dev, order_seq, stale_seq, eval_seq) = (
+            trainer._call_cached(
+                sig, build, fetched_dev, g_dev, version_dev, fetched_ver_dev,
+                backup_dev, dc_m_dev, health_dev, state.xs, state.ys,
+                per_batch,
+            )
         )
         fused_chunks += 1
         env.fleet.batched_calls += 1
@@ -1235,6 +1447,10 @@ def run_async_fused(sim, env, scen, participants, plan):
     clock = float(plan.clocks[-1])
     host_roundtrips = roundtrip_total() - rt_base
     scen_rows = [(0, n_part, 0, 0)] if scen is not None else []
+    rejected = (
+        int(np.asarray(health_dev["rejected"]))
+        if quar_cfg is not None else 0
+    )
     return _finalize(sim, env, acc_time, [], [], [], [1.0] * W,
                      [dict(global_params) for _ in range(W)], comm_bytes, 0.0,
                      clock, global_params=dict(global_params),
@@ -1243,4 +1459,7 @@ def run_async_fused(sim, env, scen, participants, plan):
                      flops_per_image_final=final_cost[0],
                      blocks_per_image_final=final_cost[2],
                      fused_chunks=fused_chunks,
-                     fault_ledger=plan.fault_ledger)
+                     fault_ledger={
+                         **(plan.fault_ledger or {}),
+                         "quarantined_commits": rejected,
+                     })

@@ -115,6 +115,12 @@ class RoundEvents:
     skip: bool = False          # round skipped: submitters < min_participants
     degraded: bool = False      # aggregated a fault-reduced partial cohort
     drift_changed: bool = False  # drift multiplier changed at this round
+    # --- adversarial / lossy-channel overlay, None when those families off ---
+    byz: Optional[np.ndarray] = None        # bool [W]: compromised this round
+    delivered: Optional[np.ndarray] = None  # bool [W]: commit survived channel
+    dup: Optional[np.ndarray] = None        # bool [W]: delivered twice
+    corrupt: Optional[np.ndarray] = None    # bool [W]: payload garbled
+    retries: Optional[np.ndarray] = None    # int64 [W]: failed uplink attempts
 
     @property
     def submitters(self) -> np.ndarray:
@@ -141,9 +147,15 @@ class ScenarioConfig:
     # explicit per-round events (tests / reproducible sweeps); overrides draws
     schedule: Optional[Sequence[RoundEvents]] = None
     # scripted fault world (core.faults): capability drift, crash/recovery,
-    # regional outages, participation waves.  None => pre-feature behavior,
-    # bit for bit (zero extra RNG draws on any stream).
+    # regional outages, participation waves, Byzantine workers, lossy
+    # channels.  None => pre-feature behavior, bit for bit (zero extra RNG
+    # draws on any stream).
     faults: Optional[FaultConfig] = None
+    # Non-IID shard skew: Dirichlet label-concentration parameter for the
+    # initial shard assignment (lower = more skewed; None = the default
+    # sorted-split partitioner).  Applied once before any engine runs, so it
+    # is engine-identical by construction; churned-in shards stay uniform.
+    skew: Optional[float] = None
 
 
 class ScenarioEngine:
@@ -169,6 +181,8 @@ class ScenarioEngine:
                 "update, and a factor below 1 would end the round before "
                 "its own submitters finish"
             )
+        if cfg.skew is not None and not (cfg.skew > 0.0):
+            raise ValueError(f"scenario skew {cfg.skew} must be > 0")
         if cfg.faults is not None:
             if cfg.faults.drift is not None and cfg.faults.drift.worker >= num_workers:
                 raise ValueError(
@@ -179,6 +193,12 @@ class ScenarioEngine:
                 raise ValueError(
                     f"outage slots [{cfg.faults.outage.slot_lo}, "
                     f"{cfg.faults.outage.slot_hi}) outside the "
+                    f"{num_workers}-slot pool"
+                )
+            byz = cfg.faults.byzantine
+            if byz is not None and byz.workers is not None and max(byz.workers) >= num_workers:
+                raise ValueError(
+                    f"byzantine workers {byz.workers} outside the "
                     f"{num_workers}-slot pool"
                 )
         self.cfg = cfg
@@ -269,6 +289,30 @@ class ScenarioEngine:
         if faults.drift is not None:
             ev.drift_mult = self.drift_mults(round_t)
             ev.drift_changed = self.drift_changed(round_t)
+        if faults.byzantine is not None:
+            # fixed compromised set: deterministic, zero RNG; fractional set:
+            # one [W] block per round, drawn unconditionally so the stream
+            # never depends on who was sampled this round
+            if faults.byzantine.workers is not None:
+                byz = np.zeros(self.W, dtype=bool)
+                byz[list(faults.byzantine.workers)] = True
+            else:
+                byz = self.fault_rng.random(self.W) < faults.byzantine.fraction
+            ev.byz = byz
+        if faults.channel is not None:
+            ch = faults.channel
+            # fixed draw block per round: attempts, then dup, then corrupt
+            fails = self.fault_rng.random((self.W, ch.max_retries + 1)) < ch.drop
+            dup_u = self.fault_rng.random(self.W)
+            corrupt_u = self.fault_rng.random(self.W)
+            delivered = ~fails.all(axis=1)
+            # retries = failed attempts consumed: attempts before the first
+            # success, or the whole retry budget when every attempt failed
+            first_ok = np.argmax(~fails, axis=1)
+            ev.retries = np.where(delivered, first_ok, ch.max_retries).astype(np.int64)
+            ev.delivered = delivered
+            ev.dup = delivered & (dup_u < ch.dup)
+            ev.corrupt = delivered & (corrupt_u < ch.corrupt)
         n_sub = int(ev.submitters.sum())
         if n_sub < self.cfg.min_participants:
             # graceful degradation floor: too few survivors to aggregate —
@@ -277,6 +321,8 @@ class ScenarioEngine:
         else:
             ev.degraded = bool(
                 (base_active & offline).any() or (ev.active & recovering).any()
+                or (ev.delivered is not None
+                    and (ev.submitters & ~ev.delivered).any())
             )
         return ev
 

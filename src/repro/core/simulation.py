@@ -97,7 +97,12 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.data.synthetic import SyntheticImageTask, batch_iterator, partition_noniid
+from repro.data.synthetic import (
+    SyntheticImageTask,
+    batch_iterator,
+    partition_dirichlet,
+    partition_noniid,
+)
 from repro.models.cnn import (
     CNNConfig,
     build_unit_space,
@@ -112,11 +117,16 @@ from repro.models.cnn import (
 
 from .aggregation import (
     AsyncServer,
+    RobustAggConfig,
     aggregate_by_unit,
     aggregate_by_unit_stacked,
     aggregate_by_worker,
     aggregate_by_worker_stacked,
+    coordinate_mask,
+    embed_params,
     extract_subparams,
+    noise_key,
+    robust_submission_step_jnp,
     roundtrip_total,
     subparam_shapes,
     tally_roundtrip,
@@ -251,6 +261,12 @@ class SimConfig:
     # client sampling / dropout / churn (core.scenario); async methods
     # honour sampling + dropout (timed-out commits) and reject churn
     scenario: Optional[ScenarioConfig] = None
+    # robust server aggregation (core.aggregation.RobustAggConfig): per-commit
+    # L2 norm clipping, coordinate-wise trimmed mean, and the MAD-outlier
+    # quarantine health tracker.  by_worker aggregation only; async methods
+    # support clip + quarantine and reject trim by name.  None = the plain
+    # capability-weighted mean, bit-identical to pre-feature.
+    robust: Optional[RobustAggConfig] = None
     # async engines: event-queue commits landing within this virtual window
     # batch into ONE fleet call (0.0 = serial, exactly the legacy behavior)
     async_window: float = 0.0
@@ -343,6 +359,14 @@ class SimResult:
     rounds_skipped: int = 0      # rounds skipped: submitters < min_participants
     workers_recovered: int = 0   # offline->online transitions
     retry_total: int = 0         # re-join rounds trained without aggregation
+    byz_commits: int = 0         # submitted commits from compromised workers
+    lost_commits: int = 0        # channel drops surviving every retry
+    dup_commits: int = 0         # delivered commits duplicated by the channel
+    corrupt_commits: int = 0     # delivered commits with garbled payloads
+    # robust-aggregation observability: commits excluded by the quarantine
+    # health tracker (sync: quarantined submitter-rounds; async: rejected
+    # commits) — 0 whenever SimConfig.robust has no quarantine
+    quarantined_commits: int = 0
     # final global model (base coordinates) — test/analysis hook
     global_params: Optional[Dict[str, np.ndarray]] = None
 
@@ -406,12 +430,46 @@ class _Env:
                 "fedavg_s) — the sharded path is the per-shard lax.scan "
                 "chunk program with on-mesh aggregation (core.fused)"
             )
+        if sim.robust is not None and sim.aggregation != "by_worker":
+            raise ValueError(
+                "SimConfig.robust (clip/trimmed-mean/quarantine) requires "
+                "aggregation='by_worker' — the robust layer defends "
+                "per-worker commit deltas, and by_unit's per-coordinate "
+                f"holder counts have no delta to clip; got "
+                f"aggregation={sim.aggregation!r}"
+            )
+        _flts = (
+            sim.scenario.faults
+            if sim.scenario is not None and sim.scenario.faults is not None
+            else None
+        )
+        if _flts is not None and sim.aggregation != "by_worker":
+            for fam in ("byzantine", "channel"):
+                if getattr(_flts, fam, None) is not None:
+                    raise ValueError(
+                        f"FaultConfig.{fam} perturbs per-worker commit "
+                        "deltas and requires aggregation='by_worker'; got "
+                        f"aggregation={sim.aggregation!r}"
+                    )
+        skew = sim.scenario.skew if sim.scenario is not None else None
+        if skew is not None and sim.noniid_s > 0.0:
+            raise ValueError(
+                "ScenarioConfig.skew (Dirichlet label concentration) and "
+                f"SimConfig.noniid_s={sim.noniid_s} are competing Non-IID "
+                "partitioners — set exactly one"
+            )
         self.task = sim.task or SyntheticImageTask(
             num_classes=sim.cnn.num_classes, image_size=sim.cnn.image_size,
             train_size=1280, test_size=512, seed=sim.seed,
         )
-        self.shards = partition_noniid(
-            self.task.y_train, sim.num_workers, sim.noniid_s, seed=sim.seed
+        self.shards = (
+            partition_dirichlet(
+                self.task.y_train, sim.num_workers, skew, seed=sim.seed
+            )
+            if skew is not None
+            else partition_noniid(
+                self.task.y_train, sim.num_workers, sim.noniid_s, seed=sim.seed
+            )
         )
         key = jax.random.PRNGKey(sim.seed)
         self.base_params = {k: np.asarray(v) for k, v in init_cnn(key, sim.cnn).items()}
@@ -759,6 +817,72 @@ def _skip_round_time(env: _Env, scen: ScenarioEngine, indices, round_t: int) -> 
     return scen.cfg.timeout_factor * max(phis)
 
 
+def _commit_multiplicity(events) -> np.ndarray:
+    """Per-worker commit weight: submit x delivered x (1 + dup), host f64.
+
+    With no channel model this IS the submitter indicator, so dividing by
+    its sum reproduces the pre-feature plain-mean weights bit-for-bit."""
+    mult = events.submitters.astype(np.float64)
+    if events.delivered is not None:
+        mult = mult * events.delivered * (1.0 + events.dup)
+    return mult
+
+
+def _robust_aggregate_host(
+    agg_stacks, mask_stacks, global_params, mult, events,
+    byz_cfg, ch_cfg, corrupt_on, rb_cfg, seed: int, t: int,
+    strikes, quar_left,
+):
+    """Masked-loop twin of the fused robust branch.
+
+    Calls THE same :func:`robust_submission_step_jnp` the fused scan body
+    runs, eagerly, on host-fed ``[W, ...]`` stacks — attack transform,
+    channel corruption, clip/trim/quarantine and the wsum==0 all-lost-round
+    guard are one code path, so robust worlds keep masked == fused by
+    construction.  Returns ``(new_global_np, strikes', quar_left',
+    quar_now_bool_or_None)``."""
+    quar_cfg = rb_cfg.quarantine if rb_cfg is not None else None
+    stacks = {
+        k: jnp.asarray(np.asarray(v, np.float32)) for k, v in agg_stacks.items()
+    }
+    masks = (
+        {k: jnp.asarray(np.asarray(v, np.float32)) for k, v in mask_stacks.items()}
+        if mask_stacks is not None else None
+    )
+    gl = {
+        k: jnp.asarray(np.asarray(v, np.float32))
+        for k, v in global_params.items()
+    }
+    ms = mult.sum()
+    weights = (
+        (mult / ms).astype(np.float32) if ms > 0
+        else np.zeros_like(mult, dtype=np.float32)
+    )
+    byz_row = None
+    if byz_cfg is not None and events.byz is not None:
+        byz_row = jnp.asarray(events.byz & events.submitters)
+    cor_row = None
+    if corrupt_on and events.corrupt is not None:
+        cor_row = jnp.asarray(events.corrupt & events.delivered & events.submitters)
+    new_g, st2, qu2, quar_now = robust_submission_step_jnp(
+        stacks, masks, gl, jnp.asarray(mult.astype(np.float32)),
+        jnp.asarray(weights), byz_row, cor_row,
+        noise_key(seed + 51721, t) if byz_cfg is not None else None,
+        noise_key(seed + 51722, t) if corrupt_on else None,
+        strikes, quar_left,
+        byz_mode=byz_cfg.mode if byz_cfg is not None else "sign_flip",
+        byz_scale=byz_cfg.scale if byz_cfg is not None else -10.0,
+        byz_noise_std=byz_cfg.noise_std if byz_cfg is not None else 1.0,
+        corrupt_std=ch_cfg.corrupt_std if corrupt_on else 10.0,
+        clip=rb_cfg.clip if rb_cfg is not None else None,
+        trim=rb_cfg.trim if rb_cfg is not None else 0.0,
+        quarantine=quar_cfg,
+    )
+    out = {k: np.asarray(v) for k, v in new_g.items()}
+    quar_np = np.asarray(quar_now) > 0.5 if quar_cfg is not None else None
+    return out, st2, qu2, quar_np
+
+
 def _run_sync(sim: SimConfig, env: _Env) -> SimResult:
     W = sim.num_workers
     sparse = sim.method in ("fedavg_s", "adaptcl")
@@ -766,6 +890,26 @@ def _run_sync(sim: SimConfig, env: _Env) -> SimResult:
     lam = sim.lam if sparse else 0.0
     resident = sim.engine == "masked"
     scen = ScenarioEngine(sim.scenario, W) if sim.scenario is not None else None
+    # robust-aggregation statics: byzantine / lossy channel / clip-trim-
+    # quarantine.  All None => every branch below is the pre-feature one.
+    faults_cfg = (
+        sim.scenario.faults
+        if sim.scenario is not None and sim.scenario.faults is not None
+        else None
+    )
+    byz_cfg = faults_cfg.byzantine if faults_cfg is not None else None
+    ch_cfg = faults_cfg.channel if faults_cfg is not None else None
+    corrupt_on = ch_cfg is not None and ch_cfg.corrupt > 0.0
+    rb_cfg = (
+        sim.robust if sim.robust is not None and sim.robust.any_active else None
+    )
+    quar_cfg = rb_cfg.quarantine if rb_cfg is not None else None
+    robust_on = byz_cfg is not None or ch_cfg is not None or rb_cfg is not None
+    rb_strikes = rb_quar = None
+    if quar_cfg is not None:
+        rb_strikes = jnp.zeros(W, jnp.int32)
+        rb_quar = jnp.zeros(W, jnp.int32)
+    quarantined_commits = 0
     dgc_residuals: List[Dict[str, np.ndarray]] = [{} for _ in range(W)]
     dgc_res_stack: Optional[Dict[str, np.ndarray]] = None
 
@@ -1059,15 +1203,33 @@ def _run_sync(sim: SimConfig, env: _Env) -> SimResult:
                 shapes_w = subparam_shapes(indices[w], env.unit_map, env.base_shapes)
             else:
                 shapes_w = {k: v.shape for k, v in worker_params[w].items()}
+            # channel retries stretch the drift factor FIRST (d*r), then the
+            # jitter inside _phi_from_shapes — the fused engine associates
+            # its floats the same way (j * (d * r)).
+            retry_mult = 1.0
+            if (ch_cfg is not None and events.retries is not None
+                    and submitters[w]):
+                retry_mult = (
+                    1.0 + ch_cfg.retry_backoff * float(events.retries[w])
+                )
             phi_w = env._phi_from_shapes(
                 w, shapes_w, pf,
-                time_mult=float(dm[w]) if dm is not None else 1.0,
+                time_mult=(float(dm[w]) if dm is not None else 1.0)
+                * retry_mult,
             )
             phis[w] = phi_w
             interval_phis[w].append(phi_w)
             if submitters[w]:
                 bytes_w = sum(int(np.prod(s)) * 4 for s in shapes_w.values())
-                comm_bytes += 2.0 * pf * bytes_w
+                # lossy-channel accounting: every retry re-sends the upload,
+                # a delivered duplicate arrives twice
+                extra = 0.0
+                if ch_cfg is not None and events.retries is not None:
+                    extra = (
+                        float(events.retries[w])
+                        + float(events.dup[w] & events.delivered[w])
+                    ) * pf * bytes_w
+                comm_bytes += 2.0 * pf * bytes_w + extra
             pending_rates[w] = 0.0
 
         sub_phis = phis[submitters]
@@ -1089,9 +1251,60 @@ def _run_sync(sim: SimConfig, env: _Env) -> SimResult:
                 global_params = aggregate_by_unit_stacked(
                     agg_stacks, env.fleet.masks_host(state), submitters
                 )
+            elif robust_on:
+                mult = _commit_multiplicity(events)
+                global_params, rb_strikes, rb_quar, quar_now = (
+                    _robust_aggregate_host(
+                        agg_stacks, env.fleet.masks_host(state), global_params,
+                        mult, events, byz_cfg, ch_cfg, corrupt_on, rb_cfg,
+                        sim.seed, t, rb_strikes, rb_quar,
+                    )
+                )
+                if quar_now is not None:
+                    quarantined_commits += int((quar_now & (mult > 0)).sum())
             else:
                 weights = submitters / submitters.sum()
                 global_params = aggregate_by_worker_stacked(agg_stacks, weights)
+        elif robust_on and sim.aggregation != "by_unit":
+            # per-worker engines embed submissions into [W, ...] base stacks
+            # and run the SAME robust pipeline; rows without a commit carry a
+            # zero delta (their masked global), weight 0 and health-ineligible
+            mult = _commit_multiplicity(events)
+            stacks = {
+                k: np.zeros((W,) + tuple(s), np.float32)
+                for k, s in env.base_shapes.items()
+            }
+            stack_masks = {
+                k: np.zeros((W,) + tuple(s), np.float32)
+                for k, s in env.base_shapes.items()
+            }
+            for w in range(W):
+                for k in stack_masks:
+                    stack_masks[k][w] = coordinate_mask(
+                        k, indices[w], env.unit_map, env.base_shapes
+                    )
+                if w in worker_params:
+                    emb = embed_params(
+                        worker_params[w], indices[w], env.unit_map,
+                        env.base_shapes,
+                    )
+                    for k in stacks:
+                        stacks[k][w] = emb[k]
+                else:
+                    for k in stacks:
+                        stacks[k][w] = (
+                            np.asarray(global_params[k], np.float32)
+                            * stack_masks[k][w]
+                        )
+            global_params, rb_strikes, rb_quar, quar_now = (
+                _robust_aggregate_host(
+                    stacks, stack_masks, global_params, mult, events,
+                    byz_cfg, ch_cfg, corrupt_on, rb_cfg,
+                    sim.seed, t, rb_strikes, rb_quar,
+                )
+            )
+            if quar_now is not None:
+                quarantined_commits += int((quar_now & (mult > 0)).sum())
         else:
             submissions = [
                 (worker_params[w], indices[w]) for w in active_ws if submitters[w]
@@ -1124,7 +1337,10 @@ def _run_sync(sim: SimConfig, env: _Env) -> SimResult:
                      flops_per_image_final=float(np.mean([c[0] for c in final_costs])),
                      blocks_per_image_final=float(np.mean([c[2] for c in final_costs])),
                      prune_events=prune_events,
-                     fault_ledger=fault_ledger(events_log))
+                     fault_ledger={
+                         **fault_ledger(events_log),
+                         "quarantined_commits": quarantined_commits,
+                     })
 
 
 def _scores_for(sim: SimConfig, env: _Env, worker, prune_round, params_w, index_w,
@@ -1370,6 +1586,31 @@ def _run_async(sim: SimConfig, env: _Env) -> SimResult:
                 "start, not a per-round C(t); wave applies to the "
                 "synchronous methods only"
             )
+        if f.byzantine is not None:
+            raise ValueError(
+                "async schedulers reject the byzantine fault family — the "
+                "compromised-cohort draw is a per-round block on the "
+                "synchronous fault stream with no per-commit analogue yet "
+                "(byzantine is sync-only for now)"
+            )
+        if f.channel is not None:
+            raise ValueError(
+                "async schedulers reject the channel fault family — "
+                "drop/duplicate/corrupt delivery is modelled at the "
+                "synchronous submission boundary, and the pre-simulated "
+                "async event plan has no retry clock (channel is sync-only "
+                "for now)"
+            )
+    rb_cfg = (
+        sim.robust if sim.robust is not None and sim.robust.any_active else None
+    )
+    if rb_cfg is not None and rb_cfg.trim > 0.0:
+        raise ValueError(
+            f"RobustAggConfig.trim={rb_cfg.trim} (coordinate-wise trimmed "
+            "mean) is a synchronous cohort statistic — async commits arrive "
+            "one at a time with no [W, ...] stack to take order statistics "
+            "over; async servers support clip + quarantine only"
+        )
     participants = (
         scen.static_participants() if scen is not None else np.arange(W)
     )
@@ -1398,6 +1639,8 @@ def _run_async(sim: SimConfig, env: _Env) -> SimResult:
         method, global_params, W, cohort_size=n_part,
         fedasync_a=sim.fedasync_a, lr=sim.lr,
         dcasgd_lambda=sim.dcasgd_lambda, dcasgd_m=sim.dcasgd_m,
+        clip_norm=rb_cfg.clip if rb_cfg is not None else None,
+        quarantine=rb_cfg.quarantine if rb_cfg is not None else None,
     )
     fetched = [dict(global_params) for _ in range(W)]
 
@@ -1484,7 +1727,10 @@ def _run_async(sim: SimConfig, env: _Env) -> SimResult:
                      scenario_rounds=scen_rows,
                      flops_per_image_final=final_cost[0],
                      blocks_per_image_final=final_cost[2],
-                     fault_ledger=plan.fault_ledger)
+                     fault_ledger={
+                         **(plan.fault_ledger or {}),
+                         "quarantined_commits": int(server.rejected_commits),
+                     })
 
 
 def _finalize(sim, env, acc_time, het_traj, sim_traj, upd_times, retentions,

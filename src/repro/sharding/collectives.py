@@ -1,0 +1,51 @@
+"""On-mesh collectives for the sharded fleet beyond ``psum``.
+
+The two-tier aggregation path (``aggregation.aggregate_by_worker_stacked_jnp``
+with ``axis=``) only ever needed an all-reduce: per-shard partial sums close
+with one ``lax.psum``.  Cross-shard ORDER STATISTICS — the robust layer's
+coordinate-wise trimmed mean, and the health tracker's fleet-wide median/MAD
+— cannot be expressed as a sum: every shard needs every vote.  This module
+grows the ``all_gather``-along-``fleet`` path for them.
+
+:func:`all_gather_fleet` gathers ``[W_local, ...]`` row blocks into full
+``[W, ...]`` stacks, tiled along axis 0 in mesh-axis-index order — exactly
+the contiguous slot layout the fleet shards by (shard ``s`` owns slots
+``[s * W_local, (s+1) * W_local)``), so the gathered stack's row ``w`` IS
+global slot ``w``.  On the degenerate 1-device mesh the gather concatenates
+a single block: bit-identical to no-mesh, which is what lets the robust
+bench pin ``mesh((1,)) == no-mesh`` exactly.
+
+:func:`shard_row_slice` is the inverse projection: slice the local
+``W_local`` row block (or weight-vector segment) back out of a replicated
+full-fleet array, using the same slot algebra.
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+from jax import lax
+
+__all__ = ["all_gather_fleet", "shard_row_slice"]
+
+
+def all_gather_fleet(tree: Any, axis: str = "fleet") -> Any:
+    """Gather each leaf's sharded leading (worker) axis into the full fleet.
+
+    Must run inside a ``shard_map`` body over a mesh with ``axis``.  Leaves
+    are ``[W_local, ...]`` row blocks; the result's leaves are ``[W, ...]``
+    with ``W = n_dev * W_local``, tiled in shard order and replicated across
+    the axis."""
+    return jax.tree.map(
+        lambda x: lax.all_gather(x, axis, axis=0, tiled=True), tree
+    )
+
+
+def shard_row_slice(full: Any, w_local: int, axis: str = "fleet") -> Any:
+    """Slice this shard's ``[W_local, ...]`` row block out of full-fleet
+    leaves — the inverse of :func:`all_gather_fleet` under the contiguous
+    slot layout.  Must run inside a ``shard_map`` body."""
+    start = lax.axis_index(axis) * w_local
+    return jax.tree.map(
+        lambda x: lax.dynamic_slice_in_dim(x, start, w_local, 0), full
+    )

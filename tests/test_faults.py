@@ -43,6 +43,7 @@ TINY = vgg_config("vgg_tiny_flt", [8, "M", 16], num_classes=4, image_size=8)
 LEDGER_FIELDS = (
     "drift_events", "rounds_degraded", "rounds_skipped",
     "workers_recovered", "retry_total",
+    "byz_commits", "lost_commits", "dup_commits", "corrupt_commits",
 )
 
 DRIFT = FaultConfig(drift=DriftConfig(worker=1, round=3, factor=3.0))

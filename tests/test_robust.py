@@ -1,0 +1,414 @@
+"""Robust aggregation layer contracts (core.aggregation + core.faults).
+
+Pins down:
+  * config validation names the offending FIELD — byzantine / channel /
+    robust / quarantine / skew rejections all carry the field name and the
+    bad value, and unsupported combinations (robust or per-commit fault
+    families under by_unit aggregation, byzantine / channel / trimmed-mean
+    under the async schedulers, skew vs noniid_s) are rejected by name;
+  * the trim=0 static branch of the robust server IS the plain server —
+    ``robust_aggregate_stacked_jnp(trim=0)`` returns bit-identical arrays
+    to ``aggregate_by_worker_stacked_jnp``, ``clip=inf`` is a bit-exact
+    no-op on deltas, and a run with ``faults=None`` + an all-inactive
+    ``RobustAggConfig()`` is byte-identical to the pre-feature run;
+  * Byzantine and lossy-channel worlds unfold identically under
+    sequential, masked and fused engines: same fault ledgers (retries,
+    byz / lost / dup / corrupt / quarantined commits), bit-identical
+    clocks and prune indices, accuracy within 1e-3;
+  * the MAD-outlier quarantine enters and exits on the documented
+    schedule (strikes -> probation -> readmission), as a golden on
+    ``health_step_jnp``;
+  * trimmed-mean deduplicates by construction — duplicate delivery
+    (multiplicity > 1) and payload values on zero-multiplicity rows
+    cannot change the trimmed estimate;
+  * ``ScenarioConfig.skew`` (Dirichlet label concentration) produces
+    equal-size, disjoint, covering shards and keeps every engine
+    bit-equivalent on the fault-free path;
+  * the degenerate 1-device mesh runs the robust world bit-identically
+    to the no-mesh fused engine (trimmed-mean all-gathers across the
+    fleet axis), and async clip + quarantine agree across engines.
+"""
+import numpy as np
+import pytest
+
+import jax.numpy as jnp
+
+from repro.core.aggregation import (
+    QuarantineConfig,
+    RobustAggConfig,
+    aggregate_by_worker_stacked_jnp,
+    clip_deltas_jnp,
+    delta_norms_jnp,
+    health_step_jnp,
+    robust_aggregate_stacked_jnp,
+    robust_submission_step_jnp,
+)
+from repro.core.faults import ByzantineConfig, ChannelConfig, FaultConfig
+from repro.core.scenario import ScenarioConfig, ScenarioEngine
+from repro.core.simulation import SimConfig, run_simulation
+from repro.core.timing import HeterogeneityConfig
+from repro.data.synthetic import partition_dirichlet
+from repro.models.cnn import vgg_config
+
+TINY = vgg_config("vgg_tiny_rb", [8, "M", 16], num_classes=4, image_size=8)
+
+LEDGER_FIELDS = (
+    "drift_events", "rounds_degraded", "rounds_skipped",
+    "workers_recovered", "retry_total",
+    "byz_commits", "lost_commits", "dup_commits", "corrupt_commits",
+    "quarantined_commits",
+)
+
+BYZ = FaultConfig(byzantine=ByzantineConfig(
+    workers=(0, 1), mode="scale", scale=-10.0))
+CHAN = FaultConfig(channel=ChannelConfig(
+    drop=0.2, dup=0.2, corrupt=0.1, corrupt_std=10.0))
+# probation outlasts the 8-round runs: readmission cycling would put the
+# exact-ledger engine contract one f32 ulp from a 3*MAD strike boundary
+DEFENSE = RobustAggConfig(
+    clip=5.0, trim=0.2, quarantine=QuarantineConfig(probation=100))
+
+
+def _sim(engine, **kw):
+    base = dict(
+        method="adaptcl",
+        engine=engine,
+        rounds=8,
+        prune_interval=2,
+        num_workers=5,
+        batch_size=16,
+        cnn=TINY,
+        het=HeterogeneityConfig(num_workers=5, sigma=3.0),
+        eval_every=2,
+        seed=5,
+    )
+    base.update(kw)
+    return run_simulation(SimConfig(**base))
+
+
+def _ledger(r):
+    return {f: getattr(r, f) for f in LEDGER_FIELDS}
+
+
+def _assert_engines_match(ref, other):
+    assert abs(ref.final_acc - other.final_acc) <= 1e-3
+    assert ref.prune_events == other.prune_events
+    assert ref.scenario_rounds == other.scenario_rounds
+    np.testing.assert_allclose(
+        np.array(ref.update_times), np.array(other.update_times),
+        rtol=0, atol=0, equal_nan=True,
+    )
+    assert ref.total_time == pytest.approx(other.total_time, abs=1e-9)
+    assert ref.comm_bytes == pytest.approx(other.comm_bytes, abs=1e-6)
+    assert _ledger(ref) == _ledger(other)
+
+
+def _stacks(w=6, seed=0):
+    rng = np.random.default_rng(seed)
+    stacks = {
+        "conv/w": jnp.asarray(rng.normal(0, 1, (w, 3, 4)).astype(np.float32)),
+        "fc/w": jnp.asarray(rng.normal(0, 1, (w, 5)).astype(np.float32)),
+    }
+    masks = {
+        k: jnp.asarray((rng.random(v.shape) > 0.3).astype(np.float32))
+        for k, v in stacks.items()
+    }
+    return stacks, {k: stacks[k] * masks[k] for k in stacks}, masks
+
+
+# ---------------------------------------------------------------------------
+# config validation: rejections name the offending field
+# ---------------------------------------------------------------------------
+
+def test_robust_config_validation_names_fields():
+    with pytest.raises(ValueError, match="byzantine workers"):
+        ByzantineConfig(workers=())
+    with pytest.raises(ValueError, match="byzantine fraction"):
+        ByzantineConfig(fraction=1.5)
+    with pytest.raises(ValueError, match="byzantine mode"):
+        ByzantineConfig(fraction=0.1, mode="gaslight")
+    with pytest.raises(ValueError, match="byzantine scale"):
+        ByzantineConfig(fraction=0.1, mode="scale", scale=0.0)
+    with pytest.raises(ValueError, match="byzantine noise_std"):
+        ByzantineConfig(fraction=0.1, noise_std=0.0)
+    with pytest.raises(ValueError, match="channel drop"):
+        ChannelConfig(drop=1.0)
+    with pytest.raises(ValueError, match="channel dup"):
+        ChannelConfig(dup=-0.1)
+    with pytest.raises(ValueError, match="channel corrupt"):
+        ChannelConfig(corrupt=2.0)
+    with pytest.raises(ValueError, match="channel max_retries"):
+        ChannelConfig(drop=0.1, max_retries=-1)
+    with pytest.raises(ValueError, match="channel retry_backoff"):
+        ChannelConfig(drop=0.1, retry_backoff=-0.5)
+    with pytest.raises(ValueError, match="channel corrupt_std"):
+        ChannelConfig(corrupt=0.1, corrupt_std=0.0)
+    with pytest.raises(ValueError, match="robust clip"):
+        RobustAggConfig(clip=0.0)
+    with pytest.raises(ValueError, match="robust trim"):
+        RobustAggConfig(trim=0.5)
+    with pytest.raises(ValueError, match="quarantine threshold"):
+        QuarantineConfig(threshold=0.0)
+    with pytest.raises(ValueError, match="quarantine strikes"):
+        QuarantineConfig(strikes=0)
+    with pytest.raises(ValueError, match="quarantine probation"):
+        QuarantineConfig(probation=0)
+    with pytest.raises(ValueError, match="scenario skew"):
+        ScenarioEngine(ScenarioConfig(skew=0.0), 4)
+    assert not RobustAggConfig().any_active
+    assert RobustAggConfig(clip=1.0).any_active
+    assert RobustAggConfig(trim=0.1).any_active
+    assert RobustAggConfig(quarantine=QuarantineConfig()).any_active
+
+
+def test_unsupported_combinations_rejected_by_name():
+    with pytest.raises(ValueError, match="SimConfig.robust"):
+        _sim("masked", aggregation="by_unit", robust=DEFENSE)
+    with pytest.raises(ValueError, match="FaultConfig.byzantine"):
+        _sim("masked", aggregation="by_unit",
+             scenario=ScenarioConfig(faults=BYZ))
+    with pytest.raises(ValueError, match="FaultConfig.channel"):
+        _sim("masked", aggregation="by_unit",
+             scenario=ScenarioConfig(faults=CHAN))
+    with pytest.raises(ValueError, match="byzantine is sync-only"):
+        _sim("masked", method="fedasync_s",
+             scenario=ScenarioConfig(faults=BYZ))
+    with pytest.raises(ValueError, match="channel is sync-only"):
+        _sim("masked", method="fedasync_s",
+             scenario=ScenarioConfig(faults=CHAN))
+    with pytest.raises(ValueError, match=r"clip \+ quarantine only"):
+        _sim("masked", method="fedasync_s",
+             robust=RobustAggConfig(trim=0.2))
+    with pytest.raises(ValueError, match="ScenarioConfig.skew"):
+        _sim("masked", noniid_s=50.0, scenario=ScenarioConfig(skew=0.3))
+
+
+# ---------------------------------------------------------------------------
+# the trim=0 / clip=inf degenerate defenses are bit-exact no-ops
+# ---------------------------------------------------------------------------
+
+def test_trim0_is_plain_aggregation_bit_exact():
+    _, stacks, masks = _stacks()
+    w = jnp.asarray(np.float32([0.1, 0.3, 0.0, 0.2, 0.25, 0.15]))
+    plain = aggregate_by_worker_stacked_jnp(stacks, w)
+    robust = robust_aggregate_stacked_jnp(stacks, w, masks, trim=0.0)
+    for k in plain:
+        assert np.array_equal(np.asarray(plain[k]), np.asarray(robust[k]))
+
+
+def test_clip_inf_is_a_bit_exact_noop():
+    _, stacks, _ = _stacks()
+    deltas = {k: v - 0.5 for k, v in stacks.items()}
+    norms = delta_norms_jnp(deltas)
+    clipped = clip_deltas_jnp(deltas, norms, float("inf"))
+    for k in deltas:
+        assert np.array_equal(np.asarray(deltas[k]), np.asarray(clipped[k]))
+    # and a finite clip above every norm is equally untouched
+    hi = float(np.asarray(norms).max()) * 2.0
+    clipped = clip_deltas_jnp(deltas, norms, hi)
+    for k in deltas:
+        assert np.array_equal(np.asarray(deltas[k]), np.asarray(clipped[k]))
+
+
+def test_defenseless_robust_step_is_plain_aggregation():
+    _, stacks, masks = _stacks()
+    w = jnp.asarray(np.full(6, 1.0 / 6.0, np.float32))
+    mult = jnp.asarray(np.ones(6, np.float32))
+    g = {k: jnp.zeros(v.shape[1:], v.dtype) for k, v in stacks.items()}
+    plain = aggregate_by_worker_stacked_jnp(stacks, w)
+    out, st, qu, quar_now = robust_submission_step_jnp(
+        stacks, masks, g, mult, w, None, None, None, None, None, None,
+        clip=None, trim=0.0, quarantine=None)
+    assert st is None and qu is None and quar_now is None
+    for k in plain:
+        assert np.array_equal(np.asarray(plain[k]), np.asarray(out[k]))
+
+
+def test_inactive_robust_config_bit_identical_to_pre_feature():
+    """``faults=None`` + all-inactive robust/fault configs consume zero RNG
+    and route the pre-feature aggregation path, byte for byte."""
+    ref = _sim("masked", rounds=4)
+    inert = _sim("masked", rounds=4, robust=RobustAggConfig(),
+                 scenario=ScenarioConfig(faults=FaultConfig()))
+    assert inert.final_acc == ref.final_acc
+    assert inert.prune_events == ref.prune_events
+    assert inert.total_time == ref.total_time
+    assert inert.update_times == ref.update_times
+    for k in ref.global_params:
+        assert np.array_equal(ref.global_params[k], inert.global_params[k])
+    assert _ledger(ref) == _ledger(inert) == {f: 0 for f in LEDGER_FIELDS}
+
+
+# ---------------------------------------------------------------------------
+# engine equivalence under attack
+# ---------------------------------------------------------------------------
+
+def test_byzantine_world_engines_match():
+    seq = _sim("sequential", scenario=ScenarioConfig(faults=BYZ),
+               robust=DEFENSE)
+    mas = _sim("masked", scenario=ScenarioConfig(faults=BYZ), robust=DEFENSE)
+    fus = _sim("fused", scenario=ScenarioConfig(faults=BYZ), robust=DEFENSE)
+    _assert_engines_match(seq, mas)
+    _assert_engines_match(mas, fus)
+    assert mas.byz_commits > 0
+    assert fus.recompiles <= 2
+
+
+def test_channel_world_engines_match():
+    mas = _sim("masked", scenario=ScenarioConfig(faults=CHAN), robust=DEFENSE)
+    fus = _sim("fused", scenario=ScenarioConfig(faults=CHAN), robust=DEFENSE)
+    _assert_engines_match(mas, fus)
+    assert mas.retry_total > 0 or mas.dup_commits > 0 or mas.lost_commits > 0
+    assert fus.recompiles <= 2
+
+
+# ---------------------------------------------------------------------------
+# quarantine schedule golden (health_step_jnp)
+# ---------------------------------------------------------------------------
+
+def test_quarantine_enter_exit_schedule():
+    """Worker 0's norm is a 10x MAD outlier every round it is eligible:
+    2 strikes -> 3 probation rounds out -> readmitted -> re-struck."""
+    W = 5
+    strikes = jnp.zeros(W, jnp.int32)
+    quar = jnp.zeros(W, jnp.int32)
+    norms = jnp.asarray(np.float32([10.0, 1.0, 1.0, 1.0, 1.0]))
+    elig = jnp.asarray(np.ones(W, bool))
+    seen = []
+    for _ in range(8):
+        quar_now, strikes, quar = health_step_jnp(
+            norms, elig, strikes, quar,
+            threshold=3.0, strikes_needed=2, probation=3)
+        seen.append(bool(np.asarray(quar_now)[0]))
+        assert not np.asarray(quar_now)[1:].any()
+    # rounds 0-1 striking, 2-4 quarantined, 5-6 striking again, 7 back in
+    assert seen == [False, False, True, True, True, False, False, True]
+
+
+def test_quarantine_gate_freezes_state():
+    W = 3
+    strikes = jnp.asarray(np.int32([1, 0, 0]))
+    quar = jnp.asarray(np.int32([0, 2, 0]))
+    norms = jnp.asarray(np.float32([50.0, 1.0, 1.0]))
+    elig = jnp.asarray(np.ones(W, bool))
+    _, st2, qu2 = health_step_jnp(
+        norms, elig, strikes, quar,
+        threshold=3.0, strikes_needed=2, probation=3,
+        gate=jnp.asarray(False))
+    assert np.array_equal(np.asarray(st2), np.asarray(strikes))
+    assert np.array_equal(np.asarray(qu2), np.asarray(quar))
+
+
+# ---------------------------------------------------------------------------
+# duplicate / lost commits vs the trimmed estimate
+# ---------------------------------------------------------------------------
+
+def test_trimmed_mean_ignores_duplicate_multiplicity():
+    """A duplicated delivery is ONE vote: multiplicity scales the plain
+    mean's weights but cannot change the trimmed order statistics."""
+    _, stacks, masks = _stacks()
+    g = {k: jnp.zeros(v.shape[1:], v.dtype) for k, v in stacks.items()}
+    once = jnp.asarray(np.float32([1, 1, 1, 1, 1, 1]))
+    duped = jnp.asarray(np.float32([2, 1, 1, 3, 1, 1]))
+    out1, *_ = robust_submission_step_jnp(
+        stacks, masks, g, once, once / once.sum(), None, None, None, None,
+        None, None, clip=None, trim=0.2, quarantine=None)
+    out2, *_ = robust_submission_step_jnp(
+        stacks, masks, g, duped, duped / duped.sum(), None, None, None, None,
+        None, None, clip=None, trim=0.2, quarantine=None)
+    for k in out1:
+        assert np.array_equal(np.asarray(out1[k]), np.asarray(out2[k]))
+
+
+def test_lost_commit_payload_cannot_vote():
+    """A zero-multiplicity (lost) row's payload values never reach the
+    trimmed estimate — garbage in the dropped row changes nothing."""
+    _, stacks, masks = _stacks()
+    g = {k: jnp.zeros(v.shape[1:], v.dtype) for k, v in stacks.items()}
+    mult = jnp.asarray(np.float32([0, 1, 1, 1, 1, 1]))
+    w = mult / mult.sum()
+    garbled = {
+        k: v.at[0].set(jnp.full(v.shape[1:], 1e9, v.dtype))
+        for k, v in stacks.items()
+    }
+    out1, *_ = robust_submission_step_jnp(
+        stacks, masks, g, mult, w, None, None, None, None, None, None,
+        clip=None, trim=0.2, quarantine=None)
+    out2, *_ = robust_submission_step_jnp(
+        garbled, masks, g, mult, w, None, None, None, None, None, None,
+        clip=None, trim=0.2, quarantine=None)
+    for k in out1:
+        assert np.array_equal(np.asarray(out1[k]), np.asarray(out2[k]))
+
+
+# ---------------------------------------------------------------------------
+# Dirichlet shard skew (ScenarioConfig.skew)
+# ---------------------------------------------------------------------------
+
+def test_partition_dirichlet_properties():
+    rng = np.random.default_rng(0)
+    y = rng.integers(0, 4, 120)
+    shards = partition_dirichlet(y, 5, alpha=0.2, seed=3)
+    assert len(shards) == 5
+    assert all(len(s) == 24 for s in shards)
+    allidx = np.concatenate(shards)
+    assert len(np.unique(allidx)) == 120          # disjoint and covering
+    again = partition_dirichlet(y, 5, alpha=0.2, seed=3)
+    assert all(np.array_equal(a, b) for a, b in zip(shards, again))
+    # small alpha concentrates labels: some shard is dominated by one class
+    shares = [
+        np.bincount(y[s], minlength=4).max() / len(s) for s in shards
+    ]
+    assert max(shares) > 0.5
+
+
+def test_skew_engines_match():
+    scen = ScenarioConfig(skew=0.3)
+    seq = _sim("sequential", scenario=scen)
+    mas = _sim("masked", scenario=scen)
+    fus = _sim("fused", scenario=scen)
+    _assert_engines_match(seq, mas)
+    _assert_engines_match(mas, fus)
+
+
+# ---------------------------------------------------------------------------
+# mesh + async legs
+# ---------------------------------------------------------------------------
+
+def test_one_device_mesh_robust_world_bit_identical(eight_devices):
+    from repro.launch.mesh import make_fleet_mesh
+
+    kw = dict(scenario=ScenarioConfig(faults=BYZ), robust=DEFENSE,
+              num_workers=8, het=HeterogeneityConfig(num_workers=8, sigma=3.0),
+              rounds=6)
+    ref = _sim("fused", **kw)
+    one = _sim("fused", mesh=make_fleet_mesh(1), **kw)
+    for k in ref.global_params:
+        assert np.array_equal(ref.global_params[k], one.global_params[k])
+    _assert_engines_match(ref, one)
+
+
+@pytest.mark.slow
+def test_sharded_mesh_robust_world_matches(eight_devices):
+    from repro.launch.mesh import make_fleet_mesh
+
+    kw = dict(scenario=ScenarioConfig(faults=BYZ), robust=DEFENSE,
+              num_workers=8, het=HeterogeneityConfig(num_workers=8, sigma=3.0),
+              rounds=6)
+    ref = _sim("fused", **kw)
+    shd = _sim("fused", mesh=make_fleet_mesh(4), **kw)
+    _assert_engines_match(ref, shd)
+
+
+def test_async_clip_quarantine_engines_agree():
+    rb = RobustAggConfig(
+        clip=0.5,
+        quarantine=QuarantineConfig(threshold=1.0, strikes=1, probation=2))
+    mas = _sim("masked", method="fedasync_s", robust=rb)
+    fus = _sim("fused", method="fedasync_s", robust=rb)
+    assert mas.quarantined_commits == fus.quarantined_commits
+    # masked commits in host f64, the fused scan in device f32: the reject
+    # schedule and clocks are exact, accuracy may drift a test image or two
+    assert abs(mas.final_acc - fus.final_acc) <= 0.01
+    assert mas.total_time == pytest.approx(fus.total_time, abs=1e-9)
+    assert mas.quarantined_commits > 0
